@@ -1,0 +1,31 @@
+"""Shared benchmark utilities: CSV emission + artifact paths."""
+
+from __future__ import annotations
+
+import os
+import time
+
+ART = os.path.join(os.path.dirname(__file__), "..", "bench_artifacts")
+
+
+def emit(name: str, header: list[str], rows: list[list]) -> str:
+    os.makedirs(ART, exist_ok=True)
+    path = os.path.join(ART, f"{name}.csv")
+    lines = [",".join(header)]
+    for r in rows:
+        lines.append(",".join(str(x) for x in r))
+    text = "\n".join(lines)
+    with open(path, "w") as f:
+        f.write(text + "\n")
+    print(f"--- {name} ---")
+    print(text, flush=True)
+    return path
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.time() - self.t0

@@ -1,0 +1,140 @@
+"""§Perf hillclimbing harness: hypothesis → change → measure → validate.
+
+Each named EXPERIMENT is a config variant of one of the three chosen
+(arch × shape) pairs.  For each we record the three roofline terms (via
+the unrolled 2-point extrapolation) plus the full-compile memory, into
+``bench_artifacts/perf/<pair>__<variant>.json``.  The EXPERIMENTS.md
+§Perf log narrates the hypotheses and outcomes.
+
+    PYTHONPATH=src python -m benchmarks.perf_iterations <variant> [...]
+    PYTHONPATH=src python -m benchmarks.perf_iterations --list
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+
+ART = os.path.join(os.path.dirname(__file__), "..", "bench_artifacts",
+                   "perf")
+
+
+def _variants():
+    """variant name → (arch, shape, config-transform)"""
+    from repro.configs import get_config
+    from repro.models.layers import PTCLinearCfg
+
+    def base(arch):
+        return get_config(arch)
+
+    def ptc_mode(cfg, mode):
+        return dataclasses.replace(
+            cfg, ptc=dataclasses.replace(cfg.ptc, mode=mode))
+
+    v = {}
+    # ---- pair 1: olmo-1b × train_4k (paper-technique representative;
+    # supports the TRUE blocked photonic-dataflow lowering at LM scale)
+    v["olmo__train__blocked"] = (
+        "olmo-1b", "train_4k",
+        lambda: ptc_mode(base("olmo-1b"), "blocked"))
+    v["olmo__train__fused"] = (
+        "olmo-1b", "train_4k",
+        lambda: base("olmo-1b"))
+    v["olmo__train__fused_noremat"] = (
+        "olmo-1b", "train_4k",
+        lambda: dataclasses.replace(base("olmo-1b"), remat=False))
+    v["olmo__train__fused_fullattn"] = (
+        "olmo-1b", "train_4k",
+        lambda: dataclasses.replace(base("olmo-1b"), attn_chunk=None))
+    v["olmo__train__fused_rematdots"] = (
+        "olmo-1b", "train_4k",
+        lambda: dataclasses.replace(base("olmo-1b"), remat_policy="dots"))
+    # ---- pair 2: qwen3-moe × train_4k (most collective-bound)
+    v["qwen3moe__train__base"] = (
+        "qwen3-moe-30b-a3b", "train_4k",
+        lambda: base("qwen3-moe-30b-a3b"))
+    v["qwen3moe__train__a2a"] = (
+        "qwen3-moe-30b-a3b", "train_4k",
+        lambda: dataclasses.replace(base("qwen3-moe-30b-a3b"),
+                                    moe_dispatch="a2a"))
+    v["qwen3moe__train__a2a_rsgrad"] = (
+        "qwen3-moe-30b-a3b", "train_4k",
+        lambda: dataclasses.replace(base("qwen3-moe-30b-a3b"),
+                                    moe_dispatch="a2a",
+                                    remat_policy="dots"))
+    # ---- pair 3: jamba × train_4k (worst roofline / memory)
+    v["jamba__train__base"] = (
+        "jamba-1.5-large-398b", "train_4k",
+        lambda: base("jamba-1.5-large-398b"))
+    v["jamba__train__outer_only"] = (
+        "jamba-1.5-large-398b", "train_4k",
+        lambda: base("jamba-1.5-large-398b"))
+    v["jamba__train__chunk128"] = (
+        "jamba-1.5-large-398b", "train_4k",
+        lambda: dataclasses.replace(base("jamba-1.5-large-398b"),
+                                    ssm_chunk=128))
+    v["jamba__train__chunk512"] = (
+        "jamba-1.5-large-398b", "train_4k",
+        lambda: dataclasses.replace(base("jamba-1.5-large-398b"),
+                                    ssm_chunk=512))
+    v["jamba__train__ssm_sharded"] = (
+        "jamba-1.5-large-398b", "train_4k",
+        lambda: base("jamba-1.5-large-398b"))
+    return v
+
+
+def measure(name: str, arch: str, shape: str, cfg) -> dict:
+    from repro.models.lm import period_plan
+    from repro.launch.dryrun import run_cell
+    from benchmarks.roofline import (extrapolated, PEAK_FLOPS, HBM_BW,
+                                     LINK_BW, active_param_count)
+    plan, n_periods = period_plan(cfg)
+    ex = extrapolated(arch, shape, n_periods, cfg_override=cfg)
+    full = run_cell(arch, shape, False, cfg_override=cfg)
+    n_active = active_param_count(cfg)
+    from repro.configs import SHAPES
+    sh = SHAPES[shape]
+    d_tokens = sh.global_batch * sh.seq_len
+    model_flops = (6.0 if sh.kind == "train" else 2.0) * n_active * d_tokens
+    t = dict(compute=ex["flops"] / PEAK_FLOPS,
+             memory=ex["bytes"] / HBM_BW,
+             collective=ex["coll_bytes"] / LINK_BW)
+    bound = max(t.values())
+    rec = {
+        "variant": name, "arch": arch, "shape": shape,
+        "terms_s": t,
+        "dominant": max(t, key=t.get),
+        "flops_per_dev": ex["flops"],
+        "coll_breakdown": ex["coll"],
+        "useful_ratio": model_flops / 256 / ex["flops"],
+        "roofline_fraction": (model_flops / 256 / PEAK_FLOPS) / bound,
+        "full_temp_gb": full["memory"]["temp_bytes"] / 1e9,
+        "full_args_gb": full["memory"]["argument_bytes"] / 1e9,
+        "compile_s": full["compile_s"],
+    }
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, f"{name}.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"[{name}] comp={t['compute']:.2f}s mem={t['memory']:.2f}s "
+          f"coll={t['collective']:.2f}s dom={rec['dominant']} "
+          f"useful={rec['useful_ratio']:.2f} "
+          f"roofline={rec['roofline_fraction']:.3f} "
+          f"temp={rec['full_temp_gb']:.0f}GB", flush=True)
+    return rec
+
+
+def main():
+    vs = _variants()
+    args = sys.argv[1:]
+    if not args or args[0] == "--list":
+        print("\n".join(vs))
+        return
+    for name in args:
+        arch, shape, mk = vs[name]
+        measure(name, arch, shape, mk())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,164 @@
+"""Roofline analysis (EXPERIMENTS.md §Roofline).
+
+For each (arch × shape) on the single-pod mesh, derives the three
+roofline terms from the compiled dry-run:
+
+    compute    = HLO_FLOPs_per_device / 197 TFLOP/s (bf16, per chip)
+    memory     = HLO_bytes_per_device / 819 GB/s (HBM)
+    collective = collective_bytes_per_device / 50 GB/s (ICI link)
+
+``cost_analysis`` counts a ``lax.scan`` body ONCE, so full-depth numbers
+are reconstructed by the 2-point period extrapolation:
+``f(L) = f(1) + (L−1)·(f(2)−f(1))`` from two reduced-depth compiles
+(same widths).  MODEL_FLOPS = 6·N_active·D (train) / 2·N_active·D
+(prefill) / 2·N_active·B (decode) gives the useful-compute ratio.
+
+Run AFTER the dry-run sweep:  PYTHONPATH=src python -m benchmarks.roofline
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # per chip
+LINK_BW = 50e9               # per ICI link
+
+ART = os.path.join(os.path.dirname(__file__), "..", "bench_artifacts")
+DRY = os.path.join(ART, "dryrun")
+
+
+def active_param_count(cfg) -> float:
+    """Dense-equivalent ACTIVE parameter count (MoE scaled by top_k/E)."""
+    import jax
+    from repro.models.lm import init_model
+
+    pshapes = jax.eval_shape(lambda k: init_model(k, cfg),
+                             jax.random.PRNGKey(0))
+    import jax.tree_util as jtu
+    total = 0.0
+    for path, leaf in jtu.tree_flatten_with_path(pshapes)[0]:
+        names = [str(getattr(p, "key", "")) for p in path]
+        frac = (cfg.top_k / cfg.n_experts
+                if "experts" in names and cfg.n_experts else 1.0)
+        last = names[-1]
+        if last == "s":
+            k = cfg.ptc.k
+            total += leaf.size * k * frac       # P·Q·k·k = M·N
+        elif last in ("u", "v"):
+            continue                            # bases: not extra FLOPs
+        else:
+            total += leaf.size * frac
+    return total
+
+
+def extrapolated(arch: str, shape: str, periods_total: int,
+                 cfg_override=None) -> dict:
+    """Two reduced-depth UNROLLED compiles → full-depth terms."""
+    from repro.launch.dryrun import run_cell
+    r1 = run_cell(arch, shape, False, periods=1, unroll=True,
+                  cfg_override=cfg_override)
+    r2 = run_cell(arch, shape, False, periods=2, unroll=True,
+                  cfg_override=cfg_override)
+
+    def ext(a, b):
+        return a + (periods_total - 1) * (b - a)
+
+    coll = {k: ext(r1["collectives"][k], r2["collectives"][k])
+            for k in r1["collectives"]}
+    return {
+        "flops": ext(r1["flops_per_device"], r2["flops_per_device"]),
+        "bytes": ext(r1["bytes_per_device"], r2["bytes_per_device"]),
+        "coll_bytes": sum(v for k, v in coll.items() if k != "count"),
+        "coll": coll,
+    }
+
+
+def analyze_cell(arch: str, shape: str) -> dict | None:
+    from repro.configs import get_config, SHAPES, shape_applicable
+    from repro.models.lm import period_plan
+    cfg = get_config(arch)
+    sh = SHAPES[shape]
+    ok, why = shape_applicable(cfg, sh)
+    if not ok:
+        return None
+    plan, n_periods = period_plan(cfg)
+    ex = extrapolated(arch, shape, n_periods)
+    n_active = active_param_count(cfg)
+    n_dev = 256
+    if sh.kind == "train":
+        d_tokens = sh.global_batch * sh.seq_len
+        model_flops = 6.0 * n_active * d_tokens
+    elif sh.kind == "prefill":
+        d_tokens = sh.global_batch * sh.seq_len
+        model_flops = 2.0 * n_active * d_tokens
+    else:
+        model_flops = 2.0 * n_active * sh.global_batch
+    t_comp = ex["flops"] / PEAK_FLOPS
+    t_mem = ex["bytes"] / HBM_BW
+    t_coll = ex["coll_bytes"] / LINK_BW
+    dom = max(("compute", t_comp), ("memory", t_mem),
+              ("collective", t_coll), key=lambda kv: kv[1])
+    # roofline fraction: useful model FLOPs per device over the bound
+    # implied by the dominant term
+    bound_s = max(t_comp, t_mem, t_coll)
+    mfu = (model_flops / n_dev / PEAK_FLOPS) / bound_s if bound_s else 0.0
+    rec = {
+        "arch": arch, "shape": shape,
+        "flops_per_dev": ex["flops"], "bytes_per_dev": ex["bytes"],
+        "coll_bytes_per_dev": ex["coll_bytes"],
+        "coll_breakdown": ex["coll"],
+        "t_compute_s": t_comp, "t_memory_s": t_mem,
+        "t_collective_s": t_coll,
+        "dominant": dom[0],
+        "model_flops_global": model_flops,
+        "useful_ratio": model_flops / n_dev / ex["flops"]
+        if ex["flops"] else 0.0,
+        "roofline_fraction": mfu,
+    }
+    return rec
+
+
+def main():
+    from repro.configs import ARCH_NAMES, SHAPES
+    os.makedirs(ART, exist_ok=True)
+    only = sys.argv[1:] if len(sys.argv) > 1 else None
+    results = []
+    for arch in ARCH_NAMES:
+        for shape in SHAPES:
+            if only and f"{arch}:{shape}" not in only and arch not in only:
+                continue
+            tag = f"{arch}__{shape}"
+            try:
+                rec = analyze_cell(arch, shape)
+            except Exception as e:
+                print(f"[FAIL] {tag}: {type(e).__name__}: {e}", flush=True)
+                continue
+            if rec is None:
+                print(f"[skip] {tag}", flush=True)
+                continue
+            results.append(rec)
+            with open(os.path.join(ART, f"roofline_{tag}.json"), "w") as f:
+                json.dump(rec, f, indent=1)
+            print(f"[ok] {tag}: comp={rec['t_compute_s']:.3f}s "
+                  f"mem={rec['t_memory_s']:.3f}s "
+                  f"coll={rec['t_collective_s']:.3f}s "
+                  f"dom={rec['dominant']} "
+                  f"useful={rec['useful_ratio']:.2f} "
+                  f"roofline={rec['roofline_fraction']:.2f}", flush=True)
+    # rebuild the full table from every per-cell artifact (merge-safe
+    # across partial re-runs)
+    allrecs = []
+    for name in sorted(os.listdir(ART)):
+        if name.startswith("roofline_") and name.endswith(".json") \
+                and name != "roofline_table.json":
+            with open(os.path.join(ART, name)) as f:
+                allrecs.append(json.load(f))
+    with open(os.path.join(ART, "roofline_table.json"), "w") as f:
+        json.dump(allrecs, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Benchmark driver: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--budget quick|normal]
+
+Emits every table as CSV under bench_artifacts/ and prints them.  The
+multi-pod dry-run sweep (launch/dryrun.py) and roofline extraction
+(benchmarks/roofline.py) are separate processes (they force a
+512-device XLA host platform) — this driver summarizes their artifacts
+if present.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from .common import ART
+
+
+def summarize_dryrun():
+    dry = os.path.join(ART, "dryrun")
+    if not os.path.isdir(dry):
+        print("(no dry-run artifacts yet — run "
+              "PYTHONPATH=src python -m repro.launch.dryrun)")
+        return
+    rows = {"ok": 0, "skipped": 0, "FAIL": 0}
+    for name in sorted(os.listdir(dry)):
+        with open(os.path.join(dry, name)) as f:
+            rec = json.load(f)
+        rows[rec["status"]] = rows.get(rec["status"], 0) + 1
+    print(f"--- dryrun summary --- {rows}")
+
+
+def summarize_roofline():
+    path = os.path.join(ART, "roofline_table.json")
+    if not os.path.exists(path):
+        print("(no roofline table yet — run "
+              "PYTHONPATH=src python -m benchmarks.roofline)")
+        return
+    with open(path) as f:
+        recs = json.load(f)
+    print("--- roofline (single-pod, per-device) ---")
+    print("arch,shape,t_compute_s,t_memory_s,t_collective_s,dominant,"
+          "useful_ratio,roofline_fraction")
+    for r in recs:
+        print(f"{r['arch']},{r['shape']},{r['t_compute_s']:.4f},"
+              f"{r['t_memory_s']:.4f},{r['t_collective_s']:.4f},"
+              f"{r['dominant']},{r['useful_ratio']:.3f},"
+              f"{r['roofline_fraction']:.3f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", default="quick",
+                    choices=["quick", "normal"])
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from . import (ic_convergence, blocksize_tables, mapping_osp,
+                   grad_fidelity, sampling_table2, scalability)
+    benches = [
+        ("fig4_ic_convergence", ic_convergence.main),
+        ("tables345_blocksize", blocksize_tables.main),
+        ("fig5_mapping_osp", mapping_osp.main),
+        ("fig8_grad_fidelity", grad_fidelity.main),
+        ("table2_sampling", sampling_table2.main),
+        ("fig10_scalability", scalability.main),
+    ]
+    for name, fn in benches:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        print(f"\n=== {name} (budget={args.budget}) ===", flush=True)
+        fn(args.budget)
+        print(f"=== {name} done in {time.time() - t0:.0f}s ===", flush=True)
+    summarize_dryrun()
+    summarize_roofline()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,131 @@
+"""Paper Fig. 14: in-situ transferability of the restricted subspace.
+
+The paper's setup: pre-train on task A, MAP onto the chip (PM — the
+inherited unitaries now encode task-A structure), then adapt to task B
+by training Σ ONLY.  Compared against Σ-only training from random
+bases (from scratch).  The inherited bases span a good design space:
+transfer reaches the target accuracy in fewer steps and ends higher.
+
+    PYTHONPATH=src python examples/onchip_transfer.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.noise import NoiseModel
+from repro.core.mapping import parallel_map
+from repro.core.ptc import PTCParams, random_factorize
+from repro.core.subspace import ptc_linear
+from repro.data import synthetic_vision, transfer_vision
+from repro.optim.optimizers import AdamWConfig, init_opt_state, apply_updates
+
+D, H, C, K = 36, 36, 9, 9
+NOISE = 2.2
+
+
+def sigma_loss(sv, layers, x, y):
+    ps = [PTCParams(layers[i].u, sv["s"][i], layers[i].v) for i in range(2)]
+    h = jax.nn.relu(ptc_linear(x, ps[0], mode="blocked"))
+    logits = ptc_linear(h, ps[1], mode="blocked")[:, :C]
+    return jnp.mean(jax.nn.logsumexp(logits, -1)
+                    - jnp.take_along_axis(logits, y[:, None], -1)[:, 0])
+
+
+def accuracy(sv, layers, x, y):
+    ps = [PTCParams(layers[i].u, sv["s"][i], layers[i].v) for i in range(2)]
+    h = jax.nn.relu(ptc_linear(x, ps[0], mode="blocked"))
+    logits = ptc_linear(h, ps[1], mode="blocked")[:, :C]
+    return float((jnp.argmax(logits, -1) == y).mean())
+
+
+def train_sigma(layers, sv, x, y, xe, ye, steps, lr=4e-3, eval_every=20):
+    opt = init_opt_state(sv)
+    ocfg = AdamWConfig(lr=lr)
+
+    @jax.jit
+    def step(sv, opt):
+        g = jax.grad(lambda s: sigma_loss(s, layers, x, y))(sv)
+        sv, opt, _ = apply_updates(sv, g, opt, ocfg)
+        return sv, opt
+
+    curve = []
+    for i in range(steps):
+        if i % eval_every == 0:
+            curve.append((i, accuracy(sv, layers, xe, ye)))
+        sv, opt = step(sv, opt)
+    curve.append((steps, accuracy(sv, layers, xe, ye)))
+    return sv, curve
+
+
+def main():
+    # ---- task A: dense pre-training ------------------------------------
+    a = synthetic_vision(1, 0, 1024, (D,), C, noise=NOISE)
+    xa, ya = jnp.asarray(a["x"]), jnp.asarray(a["y"])
+    rng = np.random.default_rng(0)
+    ws = [jnp.asarray(rng.standard_normal((H, D)) * 0.4, jnp.float32),
+          jnp.asarray(rng.standard_normal((C, H)) * 0.4, jnp.float32)]
+    opt = init_opt_state({"w": ws})
+    ocfg = AdamWConfig(lr=5e-3)
+
+    def dloss(w):
+        h = jax.nn.relu(xa @ w[0].T)
+        logits = h @ w[1].T
+        return jnp.mean(jax.nn.logsumexp(logits, -1)
+                        - jnp.take_along_axis(logits, ya[:, None], -1)[:, 0])
+
+    @jax.jit
+    def dstep(ws, opt):
+        g = jax.grad(lambda w: dloss(w["w"]))({"w": ws})
+        new, opt, _ = apply_updates({"w": ws}, g, opt, ocfg)
+        return new["w"], opt
+
+    for _ in range(250):
+        ws, opt = dstep(ws, opt)
+
+    # ---- map task-A weights onto the chip (bases inherit A's structure)
+    post = NoiseModel().post_ic()
+    pmA = [parallel_map(jax.random.PRNGKey(10 + i), ws[i], K, post,
+                        run_zo=False).params for i in range(2)]
+    print(f"task A mapped accuracy: "
+          f"{accuracy({'s': [p.s for p in pmA]}, pmA, xa, ya):.3f}")
+
+    # ---- task B data ----------------------------------------------------
+    b = transfer_vision(1, 0, 1024, (D,), C, noise=NOISE)
+    xb, yb = jnp.asarray(b["x"]), jnp.asarray(b["y"])
+    bt = transfer_vision(1, 7, 768, (D,), C, noise=NOISE)
+    xbe, ybe = jnp.asarray(bt["x"]), jnp.asarray(bt["y"])
+
+    steps = 240
+    # transfer A: inherited (mapped) bases + inherited Σ, adapt Σ only
+    sv_t = {"s": [p.s for p in pmA]}
+    _, curve_t = train_sigma(pmA, sv_t, xb, yb, xbe, ybe, steps)
+
+    # transfer B: inherited bases, Σ RE-INITIALIZED (beyond-paper
+    # finding: the transferable structure lives in the unitary BASES;
+    # the mapped all-positive SVD Σ is a poor optimization basin for a
+    # new task, and re-randomizing it recovers the full benefit)
+    rnd = [random_factorize(jax.random.PRNGKey(33), H, D, K),
+           random_factorize(jax.random.PRNGKey(34), C, H, K)]
+    sv_b = {"s": [r.s for r in rnd]}
+    _, curve_b = train_sigma(pmA, sv_b, xb, yb, xbe, ybe, steps)
+
+    # scratch: random bases, random Σ, Σ-only training
+    layers_s = [random_factorize(jax.random.PRNGKey(70), H, D, K),
+                random_factorize(jax.random.PRNGKey(71), C, H, K)]
+    sv_s = {"s": [p.s for p in layers_s]}
+    _, curve_s = train_sigma(layers_s, sv_s, xb, yb, xbe, ybe, steps)
+
+    print("\nstep, transferAΣ, transfer_bases, scratch")
+    for (i, at), (_, ab), (_, asr) in zip(curve_t, curve_b, curve_s):
+        print(f"{i:4d}, {at:.3f}, {ab:.3f}, {asr:.3f}")
+    print(f"\nfinal: inherited-bases+Σ {curve_t[-1][1]:.3f} | "
+          f"inherited-bases (Σ re-init) {curve_b[-1][1]:.3f} | "
+          f"scratch {curve_s[-1][1]:.3f}")
+    print("paper Fig. 14 claim (transfer > scratch) holds through the "
+          "BASES; see the Σ-re-init row — the Σ basin is the caveat we "
+          "document in EXPERIMENTS.md.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""End-to-end LM training driver on the PTC substrate.
+
+    # ~100M-parameter model, a few hundred steps (the e2e deliverable):
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+
+    # tiny sanity run (~1 min on CPU):
+    PYTHONPATH=src python examples/train_lm.py --preset tiny --steps 60
+
+Uses the public API end to end: ArchConfig → init_model →
+build_update_step (sampled in-situ Σ gradients + AdamW on the trainable
+partition) → checkpointed training on the synthetic Markov LM task.
+Loss should fall from ~ln(vocab) toward the task's ~2-bit entropy floor.
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lm import ArchConfig
+from repro.models.layers import PTCLinearCfg
+from repro.core.sparsity import SparsityConfig
+from repro.checkpoint import CheckpointManager
+from repro.data import lm_batch
+from repro.optim.optimizers import AdamWConfig
+from repro.optim.schedules import linear_warmup_cosine
+from repro.launch.steps import build_update_step, init_train_state
+
+PRESETS = {
+    # ~100M params: 8L, d=640, ff=2560, vocab 8192 (PTC k=64, fused)
+    "100m": dict(n_layers=8, d_model=640, n_heads=10, n_kv_heads=5,
+                 head_dim=64, d_ff=2560, vocab=8192, k=64,
+                 batch=4, seq=128),
+    "tiny": dict(n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+                 head_dim=32, d_ff=512, vocab=512, k=16,
+                 batch=8, seq=64),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--alpha-w", type=float, default=1.0)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    p = PRESETS[args.preset]
+    cfg = ArchConfig(
+        name=f"lm-{args.preset}", family="dense",
+        n_layers=p["n_layers"], d_model=p["d_model"], n_heads=p["n_heads"],
+        n_kv_heads=p["n_kv_heads"], head_dim=p["head_dim"], d_ff=p["d_ff"],
+        vocab=p["vocab"], remat=False,
+        ptc=PTCLinearCfg(k=p["k"], mode="fused", base_dtype=jnp.float32),
+    )
+    params, opt_state = init_train_state(jax.random.PRNGKey(0), cfg)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    # dense-equivalent count (U/V store 2× the dense weight)
+    print(f"model: {n_params/1e6:.1f}M stored params "
+          f"({cfg.n_layers}L d={cfg.d_model})")
+
+    scfg = SparsityConfig(alpha_w=args.alpha_w) \
+        if args.alpha_w < 1.0 else None
+    sched = lambda s: linear_warmup_cosine(s, 20, args.steps)
+    update = jax.jit(build_update_step(cfg, AdamWConfig(lr=args.lr),
+                                       scfg, sched))
+    mgr = CheckpointManager(args.ckpt_dir, every=100) if args.ckpt_dir \
+        else None
+
+    key = jax.random.PRNGKey(1)
+    first10, last10 = [], []
+    t0 = time.time()
+    for step in range(args.steps):
+        b = lm_batch(0, step, p["batch"], p["seq"], cfg.vocab)
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        params, opt_state, loss, gnorm = update(
+            params, opt_state, batch, jax.random.fold_in(key, step))
+        loss = float(loss)
+        (first10 if step < 10 else last10).append(loss)
+        if step % 10 == 0:
+            dt = (time.time() - t0) / (step + 1)
+            print(f"step {step:4d}: loss={loss:.4f} "
+                  f"gnorm={float(gnorm):.2f} ({dt:.2f}s/step)", flush=True)
+        if mgr:
+            mgr.maybe_save(step, (params, opt_state), {"loss": loss})
+    print(f"\nfirst-10 mean loss {np.mean(first10):.4f} → "
+          f"last-10 mean {np.mean(last10[-10:]):.4f} "
+          f"(uniform={np.log(cfg.vocab):.2f}, task floor≈{np.log(4):.2f})")
+
+
+if __name__ == "__main__":
+    main()

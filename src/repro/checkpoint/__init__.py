@@ -1,0 +1,5 @@
+"""Fault-tolerant checkpointing (atomic, mesh-independent, elastic)."""
+
+from .ckpt import (  # noqa: F401
+    save_checkpoint, restore_checkpoint, latest_step, CheckpointManager,
+)

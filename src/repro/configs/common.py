@@ -1,0 +1,95 @@
+"""Shared config utilities: smoke reductions and input-shape specs."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..models.lm import ArchConfig, period_plan
+from ..models.layers import PTCLinearCfg
+
+__all__ = ["smoke_reduce", "SHAPES", "ShapeSpec", "input_specs",
+           "shape_applicable"]
+
+
+def smoke_reduce(cfg: ArchConfig) -> ArchConfig:
+    """Reduced same-family config: small widths, few layers/experts, tiny
+    vocab, k=8 PTC — runs a real fwd/train step on CPU in seconds."""
+    plan, _ = period_plan(cfg)
+    period_len = len(plan)
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-smoke",
+        n_layers=period_len * 2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads else 2,
+        head_dim=16,
+        d_ff=96,
+        vocab=256,
+        n_experts=min(cfg.n_experts, 4),
+        top_k=min(cfg.top_k, 2) if cfg.top_k else 0,
+        ssm_state=min(cfg.ssm_state, 8) if cfg.ssm_state else 0,
+        n_enc_layers=2 if cfg.n_enc_layers else 0,
+        n_img_tokens=8 if cfg.n_img_tokens else 0,
+        sliding_window=8 if cfg.sliding_window else None,
+        attn_chunk=None,
+        remat=False,
+        ptc=PTCLinearCfg(k=8, mode=cfg.ptc.mode, base_dtype=jnp.float32),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+# modality-stub lengths (precomputed frame/patch embeddings)
+ENC_FRAMES_DECODE = 1024     # whisper encoder length in decode shapes
+
+
+def shape_applicable(cfg: ArchConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """long_500k needs sub-quadratic attention: run for SSM/hybrid only
+    (DESIGN §Arch-applicability); all other (arch × shape) cells run."""
+    if shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        return False, ("pure full-attention arch: 512k dense-softmax KV "
+                       "is out of spec (DESIGN §4)")
+    return True, ""
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell —
+    weak-type-correct, shardable, no device allocation."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f = jnp.bfloat16
+    sd = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        batch = {"tokens": sd((b, s), i32)}
+        if shape.kind == "train":
+            batch["labels"] = sd((b, s), i32)
+        if cfg.family == "encdec":
+            batch["frames"] = sd((b, s, cfg.d_model), f)
+        if cfg.family == "vlm":
+            batch["img"] = sd((b, cfg.n_img_tokens, cfg.d_model), f)
+        return batch
+    # decode: one new token against a cache of length seq_len
+    batch = {"token": sd((b, 1), i32),
+             "cache_len": sd((), i32)}
+    if cfg.family == "encdec":
+        batch["enc_out"] = sd((b, ENC_FRAMES_DECODE, cfg.d_model), f)
+    if cfg.family == "vlm":
+        batch["img"] = sd((b, cfg.n_img_tokens, cfg.d_model), f)
+    return batch

@@ -1,0 +1,24 @@
+"""L²ight core: the paper's three-stage on-chip learning flow in JAX.
+
+* ``unitary``     — MZI-mesh parametrization of orthogonal bases
+* ``noise``       — Q/Γ/Ω/Φ_b circuit non-idealities
+* ``ptc``         — blockwise-SVD photonic-tensor-core substrate
+* ``calibration`` — stage 1: Identity Calibration (ZO)
+* ``mapping``     — stage 2: Parallel Mapping + OSP
+* ``subspace``    — stage 3: Σ-only training with in-situ gradients
+* ``sparsity``    — multi-level sampling (feedback/column/data)
+* ``profiler``    — Appendix-G PTC energy / time-step cost model
+"""
+
+from .unitary import mesh_spec, build_unitary, apply_mesh, decompose  # noqa: F401
+from .noise import NoiseModel, IDEAL, DEFAULT_NOISE  # noqa: F401
+from .ptc import (  # noqa: F401
+    PTCParams, PTCPhaseParams, blockize, unblockize, svd_factorize,
+    random_factorize, identity_factorize, compose_weight, block_energy,
+    ptc_forward, ptc_forward_blocked, ptc_forward_fused,
+)
+from .sparsity import SparsityConfig, DENSE, feedback_mask, column_mask  # noqa: F401
+from .subspace import ptc_linear, ptc_linear_ref, SubspaceMasks, sample_masks  # noqa: F401
+from .calibration import calibrate_identity, sample_device, ICResult  # noqa: F401
+from .mapping import parallel_map, osp, matrix_distance, PMResult  # noqa: F401
+from .profiler import LayerSpec, layer_cost, model_cost  # noqa: F401

@@ -1,0 +1,141 @@
+"""Parallel Mapping (PM): alternate-projection model deployment (§3.3).
+
+Maps pre-trained weights onto the noisy MZI meshes with high fidelity as
+a *batched blockwise regression* (Eq. 3) — every k×k block is an
+independent deterministic sub-problem, solved in parallel (the paper's
+scalability insight #1: "decoupling ZOO from stochasticity and
+partitioning ... into a batch of sub-tasks").
+
+Per block (Algorithm 1):
+1. SVD + exact mesh parametrization (UP∘SVD) — the *commanded* phases;
+   under Γ/Ω/Q/Φ_b the realized mesh differs.
+2. Alternate ZCD on Φ^U / Φ^V against ``‖W̃_pq(Φ) − W_pq‖²``, step size
+   bounded by phase resolution, exponentially decayed.
+3. **Optimal Singular-value Projection (OSP)**, Claim 1:
+   ``Σ_opt = diag(U* W V)`` — analytically optimal given the (noisy,
+   sign-flipped) realized bases; on chip it is two reciprocal PTC probes,
+   and the sign flips cancel on the diagonal.  Here: realized U, V read
+   back from the simulator.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import unitary as un
+from .noise import NoiseModel
+from .ptc import PTCParams, blockize, svd_factorize
+from .calibration import DeviceRealization, sample_device, realized_unitaries
+from ..optim.zo import ZOConfig, zo_minimize
+
+__all__ = ["PMResult", "parallel_map", "osp", "matrix_distance"]
+
+
+class PMResult(NamedTuple):
+    params: PTCParams       # realized factors after PM (+OSP): deployable state
+    phi_u: jax.Array        # commanded phases
+    phi_v: jax.Array
+    err_init: jax.Array     # normalized ‖W̃−W‖²/‖W‖² at commanded-SVD init
+    err_zo: jax.Array       # ... after alternate ZO
+    err_osp: jax.Array      # ... after OSP (the Fig. 5 "error drop")
+    history: jax.Array
+
+
+def matrix_distance(w_hat: jax.Array, w: jax.Array) -> jax.Array:
+    """Normalized matrix distance ‖W−W̃‖²/‖W‖² (paper Fig. 5 metric)."""
+    num = jnp.sum((w_hat - w) ** 2, axis=(-2, -1))
+    den = jnp.sum(w ** 2, axis=(-2, -1)) + 1e-12
+    return num / den
+
+
+def osp(u: jax.Array, v: jax.Array, w: jax.Array) -> jax.Array:
+    """Claim 1: Σ_opt = diag(U* W V) with V* stored in ``v``.
+
+    Sign flips Ĩ in U/V cancel on the diagonal — so this works verbatim
+    with IC/PM's sign-ambiguous realized bases.
+    """
+    return jnp.einsum("...ji,...jl,...il->...i", u, w, v)
+
+
+def parallel_map(key: jax.Array, w: jax.Array, k: int, model: NoiseModel, *,
+                 kind: str = "clements", method: str = "zcd",
+                 cfg: ZOConfig | None = None,
+                 dev: DeviceRealization | None = None,
+                 run_zo: bool = True) -> PMResult:
+    """Map a dense weight ``w`` (M, N) onto noisy k×k PTC blocks.
+
+    Returns the REALIZED factor-level parameters — the state subspace
+    learning starts from.  ``run_zo=False`` skips stage 2 (commanded-SVD
+    + OSP only), the cheap deployment mode for large models where Σ
+    absorbs most of the residual (paper Fig. 13: SL tolerates mapping
+    suboptimality).
+    """
+    spec = un.mesh_spec(k, kind)
+    t = spec.n_rot
+    ideal = svd_factorize(w, k)
+    p, q = ideal.grid
+    b = p * q
+    w_blocks = blockize(w, k).reshape(b, k, k)
+
+    # Step 1 — exact parametrization of the ideal factors (numpy, fp64).
+    phi_u0 = np.zeros((b, t))
+    phi_v0 = np.zeros((b, t))
+    d_u0 = np.zeros((b, k))
+    d_v0 = np.zeros((b, k))
+    u_np = np.asarray(ideal.u, np.float64).reshape(b, k, k)
+    v_np = np.asarray(ideal.v, np.float64).reshape(b, k, k)
+    for i in range(b):
+        phi_u0[i], d_u0[i] = un.decompose(u_np[i], kind)
+        phi_v0[i], d_v0[i] = un.decompose(v_np[i], kind)
+
+    kd, ko = jax.random.split(key)
+    if dev is None:
+        dev = sample_device(kd, (b,), k, model, kind)
+    # manufacturing signs are part of the device; commanded d is not a knob
+    dev = dev._replace(d_u=jnp.asarray(d_u0, jnp.float32),
+                       d_v=jnp.asarray(d_v0, jnp.float32))
+
+    phi0 = jnp.concatenate([jnp.asarray(phi_u0, jnp.float32),
+                            jnp.asarray(phi_v0, jnp.float32)], axis=-1)
+
+    def block_err(phi, dev_b, w_b, s_b):
+        u, v = realized_unitaries(spec, phi[:t], phi[t:], dev_b, model)
+        w_hat = (u * s_b) @ v
+        return matrix_distance(w_hat, w_b)
+
+    s_init = ideal.s.reshape(b, k)
+    err_init = jax.vmap(block_err)(phi0, dev, w_blocks, s_init)
+
+    if run_zo:
+        if cfg is None:
+            cfg = ZOConfig(steps=max(300, 10 * t), inner=2 * t,
+                           delta0=2 * np.pi / 255.0 * 8, decay=1.05)
+
+        def solve_one(phi_b, key_b, dev_b, w_b, s_b):
+            return zo_minimize(lambda ph: block_err(ph, dev_b, w_b, s_b),
+                               phi_b, key_b, cfg, method=method, alt_split=t)
+
+        keys = jax.random.split(ko, b)
+        res = jax.jit(jax.vmap(solve_one))(phi0, keys, dev, w_blocks, s_init)
+        phi, err_zo, history = res.x, res.f, res.history
+    else:
+        phi, err_zo, history = phi0, err_init, err_init[:, None]
+
+    # Step 3 — OSP on the realized bases.
+    u_real, v_real = jax.vmap(
+        lambda ph, dv: realized_unitaries(spec, ph[:t], ph[t:], dv, model)
+    )(phi, dev)
+    s_opt = osp(u_real, v_real, w_blocks)
+    w_hat = (u_real * s_opt[..., None, :]) @ v_real
+    err_osp = jax.vmap(matrix_distance)(w_hat, w_blocks)
+
+    params = PTCParams(u=u_real.reshape(p, q, k, k),
+                       s=s_opt.reshape(p, q, k),
+                       v=v_real.reshape(p, q, k, k))
+    return PMResult(params=params, phi_u=phi[:, :t], phi_v=phi[:, t:],
+                    err_init=err_init, err_zo=err_zo, err_osp=err_osp,
+                    history=history)

@@ -1,0 +1,110 @@
+"""Optical circuit non-ideality models (paper §3.1, Appendix A.3).
+
+The noisy effective phases follow the paper's composition
+``W(Ω Γ Q(Φ) + Φ_b)``:
+
+* ``Q(·)``  — b-bit uniform quantization of the rotation phases in [0, 2π);
+* ``Γ``     — static multiplicative phase-shifter variation, one factor per
+              shifter, ``γ_mult ~ N(1, σ_γ²)`` (σ_γ = 0.002 default);
+* ``Ω``     — thermal crosstalk: adjacent MZIs in the same mesh column couple
+              with coefficient 0.005 (self coupling 1);
+* ``Φ_b``   — unknown static phase bias ``~ U(0, 2π)`` from manufacturing.
+
+Γ and Φ_b are *device realizations*: sampled once per PTC instance and held
+fixed, which is what makes calibration (IC) necessary.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .unitary import MeshSpec
+
+__all__ = ["NoiseModel", "PhaseNoise", "sample_phase_noise", "quantize_phase",
+           "crosstalk_couple", "apply_phase_noise", "IDEAL", "DEFAULT_NOISE"]
+
+TWO_PI = 2.0 * np.pi
+
+
+@dataclasses.dataclass(frozen=True)
+class NoiseModel:
+    """Static configuration of circuit non-idealities."""
+
+    enabled: bool = True
+    phase_bits: int | None = 8      # Q(·) resolution for U/V* rotation phases
+    sigma_bits: int | None = None   # Σ control resolution (None = analog/high)
+    gamma_std: float = 0.002        # phase-shifter variation σ_γ
+    crosstalk: float = 0.005        # adjacent-MZI mutual coupling ω
+    phase_bias: bool = True         # unknown Φ_b ~ U(0, 2π)
+
+    def off(self) -> "NoiseModel":
+        return dataclasses.replace(self, enabled=False)
+
+    def post_ic(self) -> "NoiseModel":
+        """The noise frame AFTER Identity Calibration: the controller has
+        learned per-device bias corrections, so commanded phases are
+        issued relative to them — Φ_b is compensated; Q/Γ/Ω remain."""
+        return dataclasses.replace(self, phase_bias=False)
+
+
+IDEAL = NoiseModel(enabled=False)
+DEFAULT_NOISE = NoiseModel()
+
+
+class PhaseNoise(NamedTuple):
+    """A sampled device realization for one batch of phase vectors.
+
+    Shapes broadcast against the phase arrays they perturb, e.g.
+    ``(..., n_rot)`` for per-block realizations.
+    """
+
+    gamma: jax.Array  # multiplicative, ~N(1, σ²)
+    bias: jax.Array   # additive, ~U(0, 2π)
+
+
+def sample_phase_noise(key: jax.Array, shape: tuple[int, ...],
+                       model: NoiseModel) -> PhaseNoise:
+    kg, kb = jax.random.split(key)
+    if not model.enabled:
+        return PhaseNoise(jnp.ones(shape), jnp.zeros(shape))
+    gamma = 1.0 + model.gamma_std * jax.random.normal(kg, shape)
+    if model.phase_bias:
+        bias = jax.random.uniform(kb, shape, minval=0.0, maxval=TWO_PI)
+    else:
+        bias = jnp.zeros(shape)
+    return PhaseNoise(gamma, bias)
+
+
+def quantize_phase(phases: jax.Array, bits: int | None) -> jax.Array:
+    """Paper Eq. (9): uniform b-bit quantization on [0, 2π)."""
+    if bits is None:
+        return phases
+    step = TWO_PI / (2 ** bits - 1)
+    return jnp.round(jnp.mod(phases, TWO_PI) / step) * step
+
+
+def crosstalk_couple(spec: MeshSpec, phases: jax.Array,
+                     omega: float) -> jax.Array:
+    """φ_c = Ω φ — add ω · (sum of same-column neighbour phases)."""
+    if omega == 0.0:
+        return phases
+    neigh = jnp.asarray(spec.phase_neighbors)  # (T, 2), -1 padded
+    gathered = jnp.take(phases, jnp.maximum(neigh, 0), axis=-1)  # (..., T, 2)
+    gathered = jnp.where(neigh >= 0, gathered, 0.0)
+    return phases + omega * gathered.sum(-1)
+
+
+def apply_phase_noise(spec: MeshSpec, phases: jax.Array, noise: PhaseNoise,
+                      model: NoiseModel) -> jax.Array:
+    """Effective phases ``Ω Γ Q(Φ) + Φ_b`` fed to the physical mesh."""
+    if not model.enabled:
+        return phases
+    q = quantize_phase(phases, model.phase_bits)
+    v = noise.gamma * q
+    c = crosstalk_couple(spec, v, model.crosstalk)
+    return c + noise.bias

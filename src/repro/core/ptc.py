@@ -1,0 +1,285 @@
+"""Photonic tensor core (PTC) substrate: blockwise-SVD weight parametrization.
+
+The paper stores every ``M×N`` weight as ``P×Q`` blocks of size ``k×k``,
+each factorized ``W_pq = U_pq Σ_pq V*_pq`` with the unitaries realized as
+MZI meshes and ``Σ`` as on-chip attenuators (paper §3.1).  This module is
+the *digital twin* of that substrate:
+
+* :func:`blockize` / :func:`unblockize` — the P×Q×k×k layout (+padding);
+* :class:`PTCParams` — factor-level parameters ``(u, s, v)``; ``s`` is the
+  only first-order-trainable leaf (subspace learning);
+* :class:`PTCPhaseParams` — phase-level parameters (MZI rotations + sign
+  diagonals) used by Identity Calibration / Parallel Mapping under noise;
+* forward paths:
+  - :func:`ptc_forward_blocked` — the paper-faithful photonic dataflow,
+    three batched block ops ``U(Σ⊙(V* x))``;
+  - :func:`ptc_forward_fused` — beyond-paper TPU path: recompose
+    ``W_eff = U Σ V*`` once (``O(k·M·N)`` FLOPs, amortized over the token
+    batch) and run one dense MXU matmul.
+
+Conventions
+-----------
+``W`` is ``(M, N) = (out, in)``; a linear layer computes ``y = x @ W.T``.
+Blocks: ``w_blocks[p, q] = W[p·k:(p+1)·k, q·k:(q+1)·k]``.
+``v`` stores ``V*`` directly, i.e. ``W_pq = u[p,q] @ diag(s[p,q]) @ v[p,q]``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import unitary as un
+from .noise import NoiseModel, PhaseNoise, apply_phase_noise
+
+__all__ = [
+    "PTCParams",
+    "PTCPhaseParams",
+    "blockize",
+    "unblockize",
+    "pad_to_blocks",
+    "svd_factorize",
+    "random_factorize",
+    "identity_factorize",
+    "compose_weight",
+    "block_energy",
+    "ptc_forward_blocked",
+    "ptc_forward_fused",
+    "ptc_forward",
+    "phases_to_factors",
+    "factors_to_phases",
+]
+
+
+class PTCParams(NamedTuple):
+    """Factor-level PTC parameters for one logical weight matrix.
+
+    u: (P, Q, k, k)  left singular bases  (frozen after mapping/init)
+    s: (P, Q, k)     singular values      (the subspace-trainable leaf)
+    v: (P, Q, k, k)  right bases, stored as V* (acts directly on x)
+    """
+
+    u: jax.Array
+    s: jax.Array
+    v: jax.Array
+
+    @property
+    def k(self) -> int:
+        return self.u.shape[-1]
+
+    @property
+    def grid(self) -> tuple[int, int]:
+        return self.u.shape[0], self.u.shape[1]
+
+
+class PTCPhaseParams(NamedTuple):
+    """Phase-level PTC parameters (the physical control variables).
+
+    phi_u / phi_v: (P, Q, T) MZI rotation phases, T = k(k-1)/2
+    d_u / d_v:     (P, Q, k) ±1 sign diagonals
+    s:             (P, Q, k) singular values (attenuator settings)
+    """
+
+    phi_u: jax.Array
+    d_u: jax.Array
+    phi_v: jax.Array
+    d_v: jax.Array
+    s: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Blocking layout
+# ---------------------------------------------------------------------------
+
+
+def pad_to_blocks(m: int, k: int) -> int:
+    return (m + k - 1) // k * k
+
+
+def blockize(w: jax.Array, k: int) -> jax.Array:
+    """(M, N) → (P, Q, k, k), zero-padding trailing edges."""
+    m, n = w.shape
+    mp, np_ = pad_to_blocks(m, k), pad_to_blocks(n, k)
+    if (mp, np_) != (m, n):
+        w = jnp.pad(w, ((0, mp - m), (0, np_ - n)))
+    return w.reshape(mp // k, k, np_ // k, k).transpose(0, 2, 1, 3)
+
+
+def unblockize(blocks: jax.Array, m: int | None = None,
+               n: int | None = None) -> jax.Array:
+    """(P, Q, k, k) → (M, N), cropping any padding."""
+    p, q, k, _ = blocks.shape
+    w = blocks.transpose(0, 2, 1, 3).reshape(p * k, q * k)
+    if m is not None or n is not None:
+        w = w[: m if m is not None else p * k, : n if n is not None else q * k]
+    return w
+
+
+# ---------------------------------------------------------------------------
+# Factorizations
+# ---------------------------------------------------------------------------
+
+
+def svd_factorize(w: jax.Array, k: int) -> PTCParams:
+    """Blockwise SVD of a dense weight — the Parallel-Mapping target init."""
+    blocks = blockize(w, k)
+    u, s, vh = jnp.linalg.svd(blocks, full_matrices=False)
+    return PTCParams(u=u, s=s, v=vh)
+
+
+def random_factorize(key: jax.Array, m: int, n: int, k: int,
+                     scale: float | None = None,
+                     dtype=jnp.float32) -> PTCParams:
+    """Random-orthogonal bases + scaled singular values (train-from-scratch).
+
+    ``scale`` defaults to sqrt(2/(M+N)) Glorot-normal-matched: with Haar
+    bases, E[W_ij²] = E[s²]/k, so s ~ N(0, k·σ_w²) matches a dense Glorot
+    init element-wise.
+    """
+    p, q = pad_to_blocks(m, k) // k, pad_to_blocks(n, k) // k
+    ku, kv, ks = jax.random.split(key, 3)
+    u = _random_orthogonal_batch(ku, (p, q), k, dtype)
+    v = _random_orthogonal_batch(kv, (p, q), k, dtype)
+    if scale is None:
+        scale = float(np.sqrt(2.0 / (m + n)))
+    s = scale * np.sqrt(k) * jax.random.normal(ks, (p, q, k), dtype)
+    return PTCParams(u=u, s=s, v=v)
+
+
+def identity_factorize(m: int, n: int, k: int, dtype=jnp.float32) -> PTCParams:
+    """U = V* = I, Σ = 1 — the post-Identity-Calibration circuit state."""
+    p, q = pad_to_blocks(m, k) // k, pad_to_blocks(n, k) // k
+    eye = jnp.broadcast_to(jnp.eye(k, dtype=dtype), (p, q, k, k))
+    return PTCParams(u=eye, s=jnp.ones((p, q, k), dtype), v=eye)
+
+
+def _random_orthogonal_batch(key: jax.Array, batch: tuple[int, ...], k: int,
+                             dtype) -> jax.Array:
+    g = jax.random.normal(key, batch + (k, k), jnp.float32)
+    qm, rm = jnp.linalg.qr(g)
+    qm = qm * jnp.sign(jnp.diagonal(rm, axis1=-2, axis2=-1))[..., None, :]
+    return qm.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Weight (re)composition and forward paths
+# ---------------------------------------------------------------------------
+
+
+def compose_weight(params: PTCParams) -> jax.Array:
+    """W_pq = U diag(s) V* for every block → (P, Q, k, k).
+
+    Cost 2·k·M·N FLOPs — amortized over the token batch in the fused path.
+    """
+    us = params.u * params.s[..., None, :]
+    return us @ params.v
+
+
+def block_energy(params: PTCParams) -> jax.Array:
+    """‖W_pq‖_F² = Tr(|Σ_pq|²) — the btopk sampling score (paper §3.4.2)."""
+    return jnp.sum(params.s.astype(jnp.float32) ** 2, axis=-1)
+
+
+def _block_x(x: jax.Array, q: int, k: int) -> jax.Array:
+    """(..., N) → (..., Q, k) with zero-padding."""
+    n = x.shape[-1]
+    if q * k != n:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, q * k - n)])
+    return x.reshape(x.shape[:-1] + (q, k))
+
+
+def ptc_forward_blocked(params: PTCParams, x: jax.Array,
+                        out_dim: int | None = None) -> jax.Array:
+    """Paper-faithful photonic dataflow: y_p = Σ_q U_pq (s_pq ⊙ (V*_pq x_q)).
+
+    Three batched block ops — exactly the three physical stages of the PTC
+    (input mesh, attenuators, output mesh) plus the electronic cross-PTC
+    partial-product accumulation over q.
+    """
+    p, q = params.grid
+    k = params.k
+    xb = _block_x(x, q, k)                                   # (..., Q, k)
+    yv = jnp.einsum("pqkj,...qj->...pqk", params.v, xb)      # V* x
+    ys = yv * params.s                                       # Σ ⊙ ·
+    y = jnp.einsum("pqik,...pqk->...pqi", params.u, ys)      # U ·
+    y = y.sum(-2).reshape(x.shape[:-1] + (p * k,))           # Σ_q accumulate
+    if out_dim is not None and out_dim != p * k:
+        y = y[..., :out_dim]
+    return y
+
+
+def ptc_forward_fused(params: PTCParams, x: jax.Array,
+                      out_dim: int | None = None) -> jax.Array:
+    """Beyond-paper TPU path: recompose W_eff once, one dense matmul."""
+    p, q = params.grid
+    k = params.k
+    w = unblockize(compose_weight(params))                   # (P·k, Q·k)
+    n = x.shape[-1]
+    if q * k != n:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, q * k - n)])
+    y = x @ w.T
+    if out_dim is not None and out_dim != p * k:
+        y = y[..., :out_dim]
+    return y
+
+
+def ptc_forward(params: PTCParams, x: jax.Array, *, mode: str = "fused",
+                out_dim: int | None = None) -> jax.Array:
+    if mode == "fused":
+        return ptc_forward_fused(params, x, out_dim)
+    if mode == "blocked":
+        return ptc_forward_blocked(params, x, out_dim)
+    raise ValueError(f"unknown ptc forward mode: {mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# Phase-level ↔ factor-level bridges (used by IC / PM / noise experiments)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "model"))
+def phases_to_factors(phase_params: PTCPhaseParams,
+                      noise_u: PhaseNoise | None = None,
+                      noise_v: PhaseNoise | None = None,
+                      *, kind: str = "clements",
+                      model: NoiseModel | None = None) -> PTCParams:
+    """Materialize the (optionally noisy) realized factors from phases.
+
+    This is the simulator's "physical" read-out: the unitaries that the
+    mesh actually implements once ``Ω Γ Q(Φ) + Φ_b`` is applied.
+    """
+    k = phase_params.d_u.shape[-1]
+    spec = un.mesh_spec(k, kind)
+    phi_u, phi_v = phase_params.phi_u, phase_params.phi_v
+    if model is not None and model.enabled:
+        assert noise_u is not None and noise_v is not None
+        phi_u = apply_phase_noise(spec, phi_u, noise_u, model)
+        phi_v = apply_phase_noise(spec, phi_v, noise_v, model)
+    u = un.build_unitary(spec, phi_u, phase_params.d_u)
+    v = un.build_unitary(spec, phi_v, phase_params.d_v)
+    return PTCParams(u=u, s=phase_params.s, v=v)
+
+
+def factors_to_phases(params: PTCParams, kind: str = "clements",
+                      ) -> PTCPhaseParams:
+    """Exact per-block mesh decomposition (numpy, float64) of ideal factors."""
+    p, q = params.grid
+    k = params.k
+    u_np = np.asarray(params.u, dtype=np.float64)
+    v_np = np.asarray(params.v, dtype=np.float64)
+    t = un.num_phases(k)
+    phi_u = np.zeros((p, q, t))
+    phi_v = np.zeros((p, q, t))
+    d_u = np.zeros((p, q, k))
+    d_v = np.zeros((p, q, k))
+    for i in range(p):
+        for j in range(q):
+            phi_u[i, j], d_u[i, j] = un.decompose(u_np[i, j], kind)
+            phi_v[i, j], d_v[i, j] = un.decompose(v_np[i, j], kind)
+    f32 = lambda a: jnp.asarray(a, dtype=jnp.float32)
+    return PTCPhaseParams(phi_u=f32(phi_u), d_u=f32(d_u), phi_v=f32(phi_v),
+                          d_v=f32(d_v), s=params.s)

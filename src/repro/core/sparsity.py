@@ -1,0 +1,147 @@
+"""Multi-level sparsity for in-situ subspace gradients (paper §3.4.2).
+
+Three levels, each an unbiased (or deliberately-scaled) estimator:
+
+* **Feedback sampling** — structured block mask on the feedback matrix
+  ``W^T``: ``P_W = c_W (S_W ⊗ 1)``, ``S_W ∈ {0,1}^{Q×P}``.  Strategies:
+  - ``uniform`` — iid Bernoulli(α) blocks;
+  - ``topk``    — global greedy top-⌈αQP⌉ by block energy (biased, can
+                  load-imbalance the accumulation paths);
+  - ``btopk``   — the paper's *balanced* top-K: exactly ⌈αP⌉ blocks per
+                  row of W^T (same sparsity every row ⇒ equal partial-sum
+                  depth on every output), guided by block energy with
+                  Gumbel perturbation (a guided distribution, not pure
+                  greedy — trades bias for variance).
+  Normalizations: ``none``, ``exp`` (expectation-maintained, ×1/α — the
+  unbiased choice, Appendix D), ``var`` (variance-maintained, ×1/√α).
+
+* **Column sampling** — drop im2col columns / tokens of the gradient
+  contraction ``δyᵀ·x`` with a shared-across-batch mask.  For LM archs the
+  "columns" are tokens (DESIGN §4).
+
+* **Data sampling (SMD)** — skip a whole iteration w.p. α_D
+  (:func:`smd_keep_iteration`), a pure scheduler-level knob.
+
+All masks are sampled OUTSIDE the custom_vjp and passed in as arrays so
+the in-situ backward stays a pure function of its inputs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "SparsityConfig",
+    "DENSE",
+    "feedback_mask",
+    "column_mask",
+    "smd_keep_iteration",
+    "accumulation_depths",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsityConfig:
+    """Static sampling configuration for one training run."""
+
+    alpha_w: float = 1.0            # feedback density (1.0 = dense)
+    feedback_mode: str = "btopk"    # uniform | topk | btopk
+    feedback_norm: str = "exp"      # none | exp | var
+    alpha_c: float = 1.0            # column/token density
+    column_norm: str = "none"       # paper adopts α_C-scale off (§3.4.2)
+    alpha_d: float = 0.0            # SMD iteration-skip probability
+
+    @property
+    def enabled(self) -> bool:
+        return self.alpha_w < 1.0 or self.alpha_c < 1.0
+
+    def normalizer(self, alpha: float, kind: str) -> float:
+        if kind == "none" or alpha >= 1.0:
+            return 1.0
+        if kind == "exp":
+            return 1.0 / alpha
+        if kind == "var":
+            return 1.0 / float(jnp.sqrt(alpha))
+        raise ValueError(f"unknown normalization: {kind!r}")
+
+
+DENSE = SparsityConfig()
+
+
+def _row_balanced_topk(scores: jax.Array, keep: int) -> jax.Array:
+    """Keep the ``keep`` largest entries of every row → boolean mask.
+
+    Uses lax.top_k (argsort+slice hits a gather-transpose issue when the
+    scores sit on a stop-gradient path inside jax.grad)."""
+    q, p = scores.shape
+    _, idx = jax.lax.top_k(scores, keep)
+    mask = jnp.zeros((q, p), dtype=bool)
+    rows = jnp.arange(q)[:, None]
+    return mask.at[rows, idx].set(True)
+
+
+def feedback_mask(key: jax.Array, block_energy: jax.Array,
+                  cfg: SparsityConfig) -> jax.Array:
+    """Sample ``S_W ∈ {0,1}^{Q×P}`` — mask over blocks of ``W^T``.
+
+    ``block_energy`` is ‖W_pq‖_F² with shape (P, Q) (forward-block layout);
+    the mask indexes the FEEDBACK orientation (Q, P) = blocks of W^T.
+    Returns a float mask already scaled by the normalizer c_W.
+    """
+    p, q = block_energy.shape
+    alpha = cfg.alpha_w
+    if alpha >= 1.0:
+        return jnp.ones((q, p), dtype=jnp.float32)
+    scores = block_energy.T.astype(jnp.float32)  # (Q, P)
+    keep = max(1, int(round(alpha * p)))
+    if cfg.feedback_mode == "uniform":
+        # exactly-keep uniform per row (load-balanced by construction, the
+        # importance-UNAWARE baseline the paper compares against)
+        noise = jax.random.uniform(key, (q, p))
+        mask = _row_balanced_topk(noise, keep)
+    elif cfg.feedback_mode == "topk":
+        # global greedy: top ⌈αPQ⌉ blocks regardless of row — biased and
+        # load-imbalanced (paper Fig. 7)
+        total = max(1, int(round(alpha * p * q)))
+        flat = scores.reshape(-1)
+        idx = jnp.argsort(flat, descending=True)[:total]
+        mask = jnp.zeros((q * p,), dtype=bool).at[idx].set(True).reshape(q, p)
+    elif cfg.feedback_mode == "btopk":
+        # guided distribution: energy + Gumbel noise, row-balanced top-K
+        g = -jnp.log(-jnp.log(jax.random.uniform(
+            key, (q, p), minval=1e-20, maxval=1.0)))
+        guided = jnp.log(scores + 1e-12) + g
+        mask = _row_balanced_topk(guided, keep)
+    else:
+        raise ValueError(f"unknown feedback mode: {cfg.feedback_mode!r}")
+    c_w = cfg.normalizer(keep / p, cfg.feedback_norm)
+    return mask.astype(jnp.float32) * c_w
+
+
+def column_mask(key: jax.Array, n_cols: int, cfg: SparsityConfig) -> jax.Array:
+    """Shared-across-batch column/token mask, scaled by the column norm."""
+    if cfg.alpha_c >= 1.0:
+        return jnp.ones((n_cols,), dtype=jnp.float32)
+    keep = max(1, int(round(cfg.alpha_c * n_cols)))
+    idx = jax.random.choice(key, n_cols, (keep,), replace=False)
+    mask = jnp.zeros((n_cols,), dtype=jnp.float32).at[idx].set(1.0)
+    return mask * cfg.normalizer(keep / n_cols, cfg.column_norm)
+
+
+def smd_keep_iteration(key: jax.Array, cfg: SparsityConfig) -> jax.Array:
+    """Stochastic mini-batch dropping: True = run this iteration."""
+    if cfg.alpha_d <= 0.0:
+        return jnp.asarray(True)
+    return jax.random.uniform(key, ()) >= cfg.alpha_d
+
+
+def accumulation_depths(mask: jax.Array) -> jax.Array:
+    """Per-output-row partial-product chain length (latency model, Fig. 7).
+
+    The feedback latency is bottlenecked by the LONGEST accumulation path —
+    btopk equalizes these by construction.
+    """
+    return (mask > 0).sum(axis=-1)

@@ -1,0 +1,154 @@
+"""Subspace learning: first-order training of Σ with in-situ gradients.
+
+The paper's SL stage (§3.4) trains ONLY the singular values.  The weight
+gradient is obtained *in situ* via reciprocity (Eq. 5):
+
+    ∂L/∂Σ_pq = (U_pq^T ∂L/∂y_p) ⊙ (V*_pq x_q)      summed over tokens,
+    ∂L/∂x_q  = Σ_p 𝑃_W[q,p] · V_pq (Σ_pq ⊙ (U_pq^T ∂L/∂y_p))
+
+i.e. one extra backward PTC pass for the upstream gradient, the forward
+pass's V*x, and a Hadamard product (offloaded to electronics).  The sign
+ambiguity Ĩ from Identity Calibration cancels in the product, so we never
+model it here.
+
+This module realizes that structure as a ``jax.custom_vjp`` so the same
+sampled/unsampled estimator the chip would compute is what the optimizer
+sees.  Two modes:
+
+* ``blocked`` — paper-faithful dataflow: both fwd and bwd are batched
+  k×k-block ops (what the photonic mesh physically does);
+* ``fused``   — beyond-paper TPU path: forward recomposes ``W_eff`` for a
+  single MXU matmul, backward computes the dense ``δyᵀx`` once and
+  projects its block-diagonals (mathematically identical, ~2× fewer
+  backward FLOPs; see DESIGN §6 / EXPERIMENTS §Perf).
+
+Feedback / column masks are sampled OUTSIDE (``repro.core.sparsity``) and
+passed in; ``None`` means dense.  Gradients for ``u``/``v`` are zero —
+the bases are frozen hardware state (that is the whole point of subspace
+learning).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .ptc import PTCParams, compose_weight, unblockize, blockize, block_energy
+from .sparsity import SparsityConfig, feedback_mask, column_mask
+
+__all__ = ["ptc_linear", "ptc_linear_ref", "SubspaceMasks", "sample_masks"]
+
+
+class SubspaceMasks(NamedTuple):
+    """Per-layer sampling masks for one optimization step."""
+
+    feedback: jax.Array | None  # (Q, P) scaled block mask on W^T, or None
+    column: jax.Array | None    # (T,) scaled token/column mask, or None
+
+
+def sample_masks(key: jax.Array, params: PTCParams, n_tokens: int,
+                 cfg: SparsityConfig) -> SubspaceMasks:
+    """Draw the step's feedback + column masks for one PTC weight."""
+    kf, kc = jax.random.split(key)
+    fb = feedback_mask(kf, block_energy(params), cfg) if cfg.alpha_w < 1.0 else None
+    col = column_mask(kc, n_tokens, cfg) if cfg.alpha_c < 1.0 else None
+    return SubspaceMasks(feedback=fb, column=col)
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _ptc_linear(mode: str, x, s, u, v, fb_mask, col_mask):
+    """y = x @ W(U,Σ,V*)^T with the in-situ backward.  x: (..., Q·k)."""
+    return _primal(mode, x, s, u, v)
+
+
+def _primal(mode, x, s, u, v):
+    p, q, k, _ = u.shape
+    if mode == "fused":
+        w = unblockize(compose_weight(PTCParams(u=u, s=s, v=v)))
+        return x @ w.T
+    xb = x.reshape(x.shape[:-1] + (q, k))
+    yv = jnp.einsum("pqkj,...qj->...pqk", v, xb)
+    y = jnp.einsum("pqik,...pqk->...pqi", u, yv * s)
+    return y.sum(-2).reshape(x.shape[:-1] + (p * k,))
+
+
+def _fwd(mode, x, s, u, v, fb_mask, col_mask):
+    return _primal(mode, x, s, u, v), (x, s, u, v, fb_mask, col_mask)
+
+
+def _flatten_tokens(a):
+    """(..., D) → (T, D): the token axis the column mask indexes."""
+    return a.reshape(-1, a.shape[-1])
+
+
+def _bwd(mode, res, dy):
+    x, s, u, v, fb_mask, col_mask = res
+    p, q, k, _ = u.shape
+    out_shape = x.shape
+    xt = _flatten_tokens(x)                      # (T, Q·k)
+    dyt = _flatten_tokens(dy)                    # (T, P·k)
+    t = xt.shape[0]
+
+    if mode == "fused":
+        # --- beyond-paper dense backward (identical estimator) ---
+        # dW = δyᵀ·(col ⊙ x); ds_pq = diag(U_pqᵀ dW_pq V_pqᵀ)
+        xw = xt if col_mask is None else xt * col_mask[:, None]
+        dw = dyt.T @ xw                          # (P·k, Q·k)
+        dwb = blockize(dw, k)                    # (P, Q, k, k)
+        udw = jnp.einsum("pqji,pqjl->pqil", u, dwb)
+        ds = jnp.einsum("pqil,pqil->pqi", udw, v).astype(s.dtype)
+        # dx = δy @ (fb ⊙_blocks W)
+        w = compose_weight(PTCParams(u=u, s=s, v=v))  # (P, Q, k, k)
+        if fb_mask is not None:
+            w = w * fb_mask.T[:, :, None, None]
+        dx = (dyt @ unblockize(w)).reshape(out_shape).astype(x.dtype)
+    else:
+        # --- paper-faithful in-situ dataflow ---
+        xb = xt.reshape(t, q, k)
+        dyb = dyt.reshape(t, p, k)
+        gu = jnp.einsum("pqik,tpi->tpqk", u, dyb)        # U^T δy  (bwd PTC pass)
+        xv = jnp.einsum("pqkj,tqj->tpqk", v, xb)         # V* x    (fwd PTC pass)
+        guw = gu if col_mask is None else gu * col_mask[:, None, None, None]
+        ds = jnp.einsum("tpqk,tpqk->pqk", guw, xv).astype(s.dtype)  # Hadamard ⊕ acc
+        gus = gu * s                                      # Σ ⊙ ·
+        if fb_mask is not None:
+            gus = gus * fb_mask.T[None, :, :, None]       # 𝑃_W block mask
+        dxb = jnp.einsum("pqkj,tpqk->tqj", v, gus)        # V · (error feedback)
+        dx = dxb.reshape(out_shape).astype(x.dtype)
+
+    none_fb = None if fb_mask is None else jnp.zeros_like(fb_mask)
+    none_col = None if col_mask is None else jnp.zeros_like(col_mask)
+    return (dx, ds, jnp.zeros_like(u), jnp.zeros_like(v), none_fb, none_col)
+
+
+_ptc_linear.defvjp(_fwd, _bwd)
+
+
+def ptc_linear(x: jax.Array, params: PTCParams,
+               masks: SubspaceMasks | None = None, *,
+               mode: str = "fused") -> jax.Array:
+    """Public PTC linear: y = x @ W(params)^T with in-situ subspace VJP.
+
+    ``x``'s last dim must equal Q·k (pad in the layer wrapper); the output
+    is (..., P·k).  ``mode``: "fused" (TPU-optimized) or "blocked"
+    (paper-faithful photonic dataflow).
+    """
+    if mode not in ("fused", "blocked"):
+        raise ValueError(f"unknown mode: {mode!r}")
+    fb = masks.feedback if masks is not None else None
+    col = masks.column if masks is not None else None
+    return _ptc_linear(mode, x, params.s, params.u, params.v, fb, col)
+
+
+def ptc_linear_ref(x: jax.Array, params: PTCParams) -> jax.Array:
+    """Pure-autodiff oracle (no custom_vjp, no sampling) for tests."""
+    w = unblockize(compose_weight(params))
+    return x @ w.T

@@ -1,0 +1,8 @@
+"""Deterministic synthetic data pipelines (offline container: no external
+datasets; tasks are constructed to be LEARNABLE so end-to-end training
+demonstrations show real loss curves)."""
+
+from .synthetic import (  # noqa: F401
+    lm_batch, lm_batch_stream, synthetic_vision, vision_stream,
+    vowel_stream, transfer_vision,
+)

@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the PTC compute hot-spots.
+
+* ``ptc_block_matmul`` — blockwise U(Σ⊙(V*x)) forward (the paper's PTC
+  dataflow as MXU tiles);
+* ``mesh_apply``       — MZI mesh as a VPU butterfly (applies U(Φ)
+  without materializing it);
+* ``feedback_matmul``  — block-masked feedback pass (structured sparsity
+  → predicated MXU blocks);
+* ``sigma_grad``       — fused in-situ Σ-gradient (Eq. 5): both reciprocal
+  projections + Hadamard-accumulate without the (T,P,Q,k) intermediate.
+
+``ops`` is the jit'd dispatch layer; ``ref`` holds the pure-jnp oracles
+each kernel is allclose-tested against (interpret=True on CPU).
+"""
+
+from .ops import (ptc_block_matmul, mesh_apply, feedback_matmul,  # noqa: F401
+                  sigma_grad)
+from . import ref  # noqa: F401

@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: MZI mesh application as a VPU butterfly network.
+
+A Clements mesh is k alternating layers of disjoint adjacent 2×2
+rotations — the photonic interference network IS a butterfly: each layer
+recombines wire pairs ``y_a = c·x_a − s·x_b, y_b = s·x_a + c·x_b``.
+
+On TPU this is a *lane-local* pattern: the partner exchange of adjacent
+wires is a lane roll by ±1 with a parity select, and the per-wire cos/sin
+coefficients are precomputed (L, k) tables (``ops.mesh_apply`` does the
+cheap cos/sin gather outside).  The kernel is then a pure
+roll+select+FMA pipeline over layers — no gathers, no matmuls, no HBM
+traffic beyond one x tile in and out.  This applies U(Φ) WITHOUT
+materializing it: O(L·k) work per row instead of O(k²), the TPU-native
+analogue of light propagating through the mesh.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["mesh_apply_butterfly"]
+
+
+def _kernel(c_ref, s_ref, dir_ref, d_ref, x_ref, o_ref):
+    x = x_ref[...] * d_ref[...]          # sign diagonal D first
+    n_layers = c_ref.shape[0]
+
+    def body(l, x):
+        c = c_ref[l]                     # (k,) cos, 1 on idle wires
+        s = s_ref[l]                     # (k,) ±sin, 0 on idle wires
+        sg = dir_ref[l]                  # (k,) -1 upper, +1 lower, 0 idle
+        up = jnp.roll(x, -1, axis=1)     # partner of an upper wire is a+1
+        dn = jnp.roll(x, 1, axis=1)      # partner of a lower wire is a-1
+        xp = jnp.where(sg < 0, up, jnp.where(sg > 0, dn, x))
+        return c * x + s * xp
+
+    o_ref[...] = jax.lax.fori_loop(0, n_layers, body, x)
+
+
+@functools.partial(jax.jit, static_argnames=("b_tile", "interpret"))
+def mesh_apply_butterfly(c: jax.Array, s: jax.Array, direction: jax.Array,
+                         d: jax.Array, x: jax.Array, *, b_tile: int = 256,
+                         interpret: bool = False) -> jax.Array:
+    """Apply the layered mesh to x.
+
+    c, s, direction: (L, k) per-layer wire coefficient tables
+    d: (k,) ±1 sign diagonal;  x: (B, k)  →  (B, k)
+    """
+    b, k = x.shape
+    b_tile = min(b_tile, b)
+    assert b % b_tile == 0, (b, b_tile)
+    l = c.shape[0]
+    return pl.pallas_call(
+        _kernel,
+        grid=(b // b_tile,),
+        in_specs=[
+            pl.BlockSpec((l, k), lambda i: (0, 0)),
+            pl.BlockSpec((l, k), lambda i: (0, 0)),
+            pl.BlockSpec((l, k), lambda i: (0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((b_tile, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((b_tile, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, k), x.dtype),
+        interpret=interpret,
+    )(c, s, direction, d, x)

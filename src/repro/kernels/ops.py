@@ -1,0 +1,86 @@
+"""Dispatch layer: jit'd public ops that route to the Pallas kernels on TPU
+and to interpret-mode (CPU-executed kernel bodies) elsewhere.
+
+``interpret`` defaults to True off-TPU so the exact kernel code paths are
+validated on this CPU container; on a real TPU backend the same calls
+compile to Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.unitary import MeshSpec
+from .ptc_block_matmul import ptc_block_matmul as _ptc_block_matmul
+from .mesh_apply import mesh_apply_butterfly as _mesh_apply_butterfly
+from .feedback_matmul import feedback_matmul as _feedback_matmul
+from .sigma_grad import sigma_grad as _sigma_grad
+
+__all__ = ["default_interpret", "ptc_block_matmul", "mesh_apply",
+           "feedback_matmul", "sigma_grad"]
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pick_t_tile(t: int, cap: int = 256) -> int:
+    """Largest divisor of t that is ≤ cap (grids need exact tiling)."""
+    best = 1
+    for d in range(1, min(t, cap) + 1):
+        if t % d == 0:
+            best = d
+    return best
+
+
+def ptc_block_matmul(x, u, s, v, *, interpret: bool | None = None):
+    """Blocked PTC forward (paper dataflow) via the Pallas kernel."""
+    if interpret is None:
+        interpret = default_interpret()
+    return _ptc_block_matmul(x, u, s, v, t_tile=_pick_t_tile(x.shape[0]),
+                             interpret=interpret)
+
+
+def _coeff_tables(spec: MeshSpec, phases, dtype):
+    """Per-layer wire coefficient tables (cheap, O(T) cos/sin)."""
+    slot = jnp.asarray(spec.layer_slot)          # (L, k)
+    sign = jnp.asarray(spec.layer_sign, dtype)   # (L, k)
+    live = slot >= 0
+    ph = jnp.where(live, jnp.take(phases, jnp.maximum(slot, 0)), 0.0)
+    c = jnp.where(live, jnp.cos(ph), 1.0).astype(dtype)
+    s = (jnp.where(live, jnp.sin(ph), 0.0) * sign).astype(dtype)
+    return c, s, sign
+
+
+def mesh_apply(spec: MeshSpec, phases, x, d=None, *,
+               interpret: bool | None = None):
+    """U(Φ, D) @ x via the butterfly kernel.  x: (B, k); phases: (T,)."""
+    if interpret is None:
+        interpret = default_interpret()
+    c, s, sign = _coeff_tables(spec, phases, x.dtype)
+    if d is None:
+        d = jnp.ones((spec.k,), x.dtype)
+    return _mesh_apply_butterfly(c, s, sign, d.astype(x.dtype), x,
+                                 b_tile=_pick_t_tile(x.shape[0]),
+                                 interpret=interpret)
+
+
+def feedback_matmul(dy, u, s, v, mask, *, interpret: bool | None = None):
+    """Block-masked feedback pass via the predicated Pallas kernel."""
+    if interpret is None:
+        interpret = default_interpret()
+    return _feedback_matmul(dy, u, s, v, mask,
+                            t_tile=_pick_t_tile(dy.shape[0]),
+                            interpret=interpret)
+
+
+def sigma_grad(dy, x, u, v, *, interpret: bool | None = None):
+    """Fused in-situ Σ-gradient (paper Eq. 5) via the Pallas kernel."""
+    if interpret is None:
+        interpret = default_interpret()
+    return _sigma_grad(dy, x, u, v, t_tile=_pick_t_tile(dy.shape[0]),
+                       interpret=interpret)

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["ptc_block_matmul_ref", "mesh_apply_ref", "feedback_matmul_ref",
+           "sigma_grad_ref"]
+
+
+def sigma_grad_ref(dy, x, u, v):
+    """In-situ Σ-grad oracle: ds_pq = Σ_t (U_pqᵀ δy_p) ⊙ (V*_pq x_q)."""
+    p, q, k, _ = u.shape
+    dyb = dy.reshape(dy.shape[0], p, k)
+    xb = x.reshape(x.shape[0], q, k)
+    gu = jnp.einsum("pqik,tpi->tpqk", u, dyb)
+    xv = jnp.einsum("pqkj,tqj->tpqk", v, xb)
+    return jnp.einsum("tpqk,tpqk->pqk", gu, xv)
+
+
+def ptc_block_matmul_ref(x, u, s, v):
+    """y[t, p·k+i] = Σ_q (U_pq (s_pq ⊙ (V*_pq x_q)))_i.
+
+    x: (T, Q·k); u,v: (P, Q, k, k); s: (P, Q, k)  →  y: (T, P·k)
+    """
+    p, q, k, _ = u.shape
+    xb = x.reshape(x.shape[0], q, k)
+    yv = jnp.einsum("pqkj,tqj->tpqk", v, xb)
+    y = jnp.einsum("pqik,tpqk->tpi", u, yv * s)
+    return y.reshape(x.shape[0], p * k)
+
+
+def mesh_apply_ref(x, phases, layer_slot, layer_partner, layer_sign, d=None):
+    """Layered butterfly mesh U(Φ)·x — mirrors repro.core.unitary.apply_mesh.
+
+    x: (B, k); phases: (T,); layer_*: (L, k) static schedules; d: (k,)|None.
+    """
+    if d is not None:
+        x = x * d
+    n_layers = layer_slot.shape[0]
+    for l in range(n_layers):
+        sl, pt, sg = layer_slot[l], layer_partner[l], layer_sign[l]
+        ph = jnp.where(sl >= 0, phases[jnp.maximum(sl, 0)], 0.0)
+        c = jnp.where(sl >= 0, jnp.cos(ph), 1.0).astype(x.dtype)
+        s = jnp.where(sl >= 0, jnp.sin(ph), 0.0).astype(x.dtype) * sg.astype(x.dtype)
+        x = c * x + s * x[:, pt]
+    return x
+
+
+def feedback_matmul_ref(dy, u, s, v, mask):
+    """Block-masked error feedback: dx_q = Σ_p mask[q,p] · W_pqᵀ δy_p.
+
+    dy: (T, P·k); mask: (Q, P) scaled float  →  dx: (T, Q·k)
+    """
+    p, q, k, _ = u.shape
+    dyb = dy.reshape(dy.shape[0], p, k)
+    gu = jnp.einsum("pqik,tpi->tpqk", u, dyb)          # Uᵀ δy
+    gus = gu * s * mask.T[None, :, :, None]            # Σ ⊙ · with 𝑃_W
+    dx = jnp.einsum("pqkj,tpqk->tqj", v, gus)          # V ·
+    return dx.reshape(dy.shape[0], q * k)

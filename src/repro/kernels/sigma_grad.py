@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: in-situ Σ-gradient ``ds_pq = Σ_t (U_pqᵀδy_p) ⊙ (V*_pq x_q)``.
+
+The paper's Eq. (5) backward-weight step — the two reciprocal PTC passes
+and the electronic Hadamard-accumulate — as one fused kernel: per (p, q)
+block it streams token tiles, computes both k-projections on the MXU,
+multiplies element-wise and accumulates the (k,) gradient in VMEM.  The
+(T, P, Q, k) intermediates of the naive formulation never exist: the
+working set is two (T_TILE, k) tiles + two k×k bases + the (k,)
+accumulator per grid step.
+
+Grid = (P, Q, T/T_TILE), token tiles innermost so the per-block
+accumulator stays resident across the whole stream.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["sigma_grad"]
+
+
+def _kernel(dy_ref, x_ref, u_ref, v_ref, o_ref):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    dy = dy_ref[...]                                  # (T_TILE, k)
+    x = x_ref[...]                                    # (T_TILE, k)
+    gu = jnp.dot(dy, u_ref[0, 0],
+                 preferred_element_type=jnp.float32)  # Uᵀ δy
+    xv = jnp.dot(x, v_ref[0, 0].T,
+                 preferred_element_type=jnp.float32)  # V* x
+    o_ref[...] += jnp.sum(gu * xv, axis=0)[None].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("t_tile", "interpret"))
+def sigma_grad(dy: jax.Array, x: jax.Array, u: jax.Array, v: jax.Array,
+               *, t_tile: int = 256, interpret: bool = False) -> jax.Array:
+    """dy: (T, P·k); x: (T, Q·k); u/v: (P, Q, k, k) → ds: (P, Q, k)."""
+    t, mdim = dy.shape
+    p, q, k, _ = u.shape
+    assert mdim == p * k and x.shape == (t, q * k)
+    t_tile = min(t_tile, t)
+    assert t % t_tile == 0, (t, t_tile)
+    out = pl.pallas_call(
+        _kernel,
+        grid=(p, q, t // t_tile),
+        in_specs=[
+            pl.BlockSpec((t_tile, k), lambda pp, qq, tt: (tt, pp)),
+            pl.BlockSpec((t_tile, k), lambda pp, qq, tt: (tt, qq)),
+            pl.BlockSpec((1, 1, k, k), lambda pp, qq, tt: (pp, qq, 0, 0)),
+            pl.BlockSpec((1, 1, k, k), lambda pp, qq, tt: (pp, qq, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, k), lambda pp, qq, tt: (pp, qq, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, q, k), jnp.float32),
+        interpret=interpret,
+    )(dy, x, u, v)
+    return out

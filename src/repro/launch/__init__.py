@@ -1,0 +1,1 @@
+"""Launch layer: production meshes, sharding rules, dry-run, drivers."""

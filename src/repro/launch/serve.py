@@ -1,0 +1,72 @@
+"""Batched serving driver: greedy decode against a KV cache.
+
+Runnable on this CPU container with smoke configs::
+
+    PYTHONPATH=src python -m repro.launch.serve --arch smoke:qwen3-4b \
+        --batch 4 --prompt-len 16 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..data import lm_batch
+from ..models.lm import (init_model, init_decode_cache, build_serve_step)
+from .train import parse_arch
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = parse_arch(args.arch)
+    key = jax.random.PRNGKey(args.seed)
+    params = init_model(key, cfg)
+    max_len = args.prompt_len + args.gen
+    cache = init_decode_cache(cfg, args.batch, max_len)
+    serve = jax.jit(build_serve_step(cfg))
+
+    prompt = lm_batch(args.seed, 0, args.batch, args.prompt_len,
+                      cfg.vocab)["tokens"]
+    extras = {}
+    if cfg.family == "vlm":
+        extras["img"] = 0.1 * jnp.ones(
+            (args.batch, cfg.n_img_tokens, cfg.d_model), jnp.float32)
+    if cfg.family == "encdec":
+        extras["enc_out"] = 0.1 * jnp.ones(
+            (args.batch, args.prompt_len, cfg.d_model), jnp.float32)
+
+    # prefill by streaming the prompt through the decode path (cache fills)
+    tok = jnp.asarray(prompt[:, :1])
+    t0 = time.time()
+    out_tokens = []
+    for i in range(max_len - 1):
+        batch = {"token": tok, "cache_len": jnp.asarray(i, jnp.int32),
+                 **extras}
+        logits, cache = serve(params, cache, batch)
+        nxt = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        if i + 1 < args.prompt_len:
+            tok = jnp.asarray(prompt[:, i + 1: i + 2])   # teacher-forced
+        else:
+            tok = nxt
+            out_tokens.append(np.asarray(nxt)[:, 0])
+    dt = time.time() - t0
+    gen = np.stack(out_tokens, axis=1)
+    print(f"generated {gen.shape} tokens in {dt:.1f}s "
+          f"({gen.size / dt:.1f} tok/s)")
+    print("sample:", gen[0][:24])
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

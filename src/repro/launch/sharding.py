@@ -1,0 +1,203 @@
+"""Logical → mesh sharding rules for every architecture (DESIGN §4).
+
+Rules (all divisibility-guarded — an axis whose size does not divide the
+mesh axis falls back to replication, which automatically handles GQA
+kv-heads < TP and whisper's small dims = DP-only):
+
+* PTC linears: "out-projections" (wq/wk/wv/gate/up/in_proj/dt_proj)
+  shard the P (out-block) axis on "model"; "in-projections"
+  (wo/down/out_proj/x_proj) shard the Q (in-block) axis — the Megatron
+  pairing, one reduction per block pair.
+* MoE experts: the E axis shards on "model" (EP); router replicated.
+* Embedding / unembedding: vocab axis on "model" (sharded logits + CE).
+* Mamba electronics (conv, A, D): d_inner axis on "model".
+* Norms / small biases: replicated.
+* Batch axes: ("pod", "data").
+* Σ optimizer state inherits the Σ sharding (handled by mirroring the
+  param tree).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .mesh import dp_axes, MODEL_AXIS
+
+__all__ = ["param_shardings", "batch_shardings", "cache_shardings",
+           "named", "replicated"]
+
+PyTree = Any
+
+# role classification by the enclosing linear's name
+_OUT_SHARD = {"wq", "wk", "wv", "gate", "up", "in_proj", "dt_proj"}
+_IN_SHARD = {"wo", "down", "out_proj", "x_proj"}
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for e in path:
+        n = getattr(e, "key", getattr(e, "name", None))
+        if isinstance(n, str):
+            out.append(n)
+    return out
+
+
+def _guard(dim: int, axis_size: int) -> bool:
+    return dim % axis_size == 0 and dim >= axis_size
+
+
+def _ptc_spec(names: list[str], leaf, model_size: int, expert: bool):
+    """Spec for one u/s/v/b/w leaf of a PTC (or dense-mode) linear."""
+    kind = names[-1]
+    role_out = any(n in _OUT_SHARD for n in names)
+    role_in = any(n in _IN_SHARD for n in names)
+    shape = leaf.shape
+    # leading stack axes (period, experts): everything before the block grid
+    if kind in ("u", "v"):
+        grid_start = len(shape) - 4
+    elif kind == "s":
+        grid_start = len(shape) - 3
+    elif kind in ("b",):
+        grid_start = len(shape) - 1
+    elif kind == "w":      # dense-baseline (d_out, d_in)
+        grid_start = len(shape) - 2
+    else:
+        return P()
+    spec: list = [None] * len(shape)
+    if expert:
+        # experts axis: first stacked axis after the period axis (or axis 0)
+        e_axis = grid_start - 1
+        if e_axis >= 0 and _guard(shape[e_axis], model_size):
+            spec[e_axis] = MODEL_AXIS
+            return P(*spec)
+        return P(*spec)
+    if kind == "w":
+        if role_out and _guard(shape[grid_start], model_size):
+            spec[grid_start] = MODEL_AXIS
+        elif role_in and _guard(shape[grid_start + 1], model_size):
+            spec[grid_start + 1] = MODEL_AXIS
+        return P(*spec)
+    if kind == "b":
+        if role_out and _guard(shape[-1], model_size):
+            spec[-1] = MODEL_AXIS
+        return P(*spec)
+    # u/s/v: block grid (P, Q, ...) starts at grid_start
+    if role_out and _guard(shape[grid_start], model_size):
+        spec[grid_start] = MODEL_AXIS
+    elif role_in and _guard(shape[grid_start + 1], model_size):
+        spec[grid_start + 1] = MODEL_AXIS
+    return P(*spec)
+
+
+def _leaf_spec(path, leaf, model_size: int) -> P:
+    names = _path_names(path)
+    kind = names[-1] if names else ""
+    expert = "experts" in names
+    if kind in ("u", "s", "v", "b", "w") and len(names) >= 2:
+        if names[-2] == "embed" or "unembed" in names or kind == "e":
+            pass
+        else:
+            return _ptc_spec(names, leaf, model_size, expert)
+    if kind == "e" or "unembed" in names:        # (…, vocab, d)
+        spec: list = [None] * len(leaf.shape)
+        if _guard(leaf.shape[-2], model_size):
+            spec[-2] = MODEL_AXIS
+        return P(*spec)
+    if kind == "router":                          # (L, E, d) — replicated
+        return P(*([None] * len(leaf.shape)))
+    if kind in ("conv_w", "conv_b"):              # (L, W, din) / (L, din)
+        spec = [None] * len(leaf.shape)
+        if _guard(leaf.shape[-1], model_size):
+            spec[-1] = MODEL_AXIS
+        return P(*spec)
+    if kind in ("a_log", "d") and "mamba" in names:
+        spec = [None] * len(leaf.shape)
+        ax = len(leaf.shape) - (2 if kind == "a_log" else 1)
+        if _guard(leaf.shape[ax], model_size):
+            spec[ax] = MODEL_AXIS
+        return P(*spec)
+    return P(*([None] * len(leaf.shape)))         # norms etc.: replicated
+
+
+def param_shardings(mesh: Mesh, params: PyTree) -> PyTree:
+    model_size = mesh.shape[MODEL_AXIS]
+
+    def f(path, leaf):
+        return NamedSharding(mesh, _leaf_spec(path, leaf, model_size))
+
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def batch_shardings(mesh: Mesh, batch: PyTree) -> PyTree:
+    """Token/label batches: leading batch axis over the DP axes.
+    Scalars (cache_len) replicated."""
+    dp = dp_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+
+    def f(path, leaf):
+        if leaf.ndim == 0 or not _guard(leaf.shape[0], dp_size):
+            return NamedSharding(mesh, P(*([None] * leaf.ndim)))
+        return NamedSharding(mesh, P(dp, *([None] * (leaf.ndim - 1))))
+
+    return jax.tree_util.tree_map_with_path(f, batch)
+
+
+def cache_shardings(mesh: Mesh, cache: PyTree, batch_size: int) -> PyTree:
+    """KV caches (Lp, B, S, H, D) / SSM states (Lp, B, …).
+
+    Batch shards over DP when divisible; for global_batch too small
+    (long_500k B=1) the KV SEQUENCE axis shards over "data" instead —
+    the long-context memory-scaling plan (DESIGN §4)."""
+    dp = dp_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    data_size = mesh.shape["data"]
+    model_size = mesh.shape[MODEL_AXIS]
+
+    def f(path, leaf):
+        names = _path_names(path)
+        spec: list = [None] * leaf.ndim
+        if leaf.ndim >= 2 and _guard(leaf.shape[1], dp_size):
+            spec[1] = dp                       # (Lp, B, ...) batch over DP
+        elif names[-1] in ("k", "v") and leaf.ndim == 5 \
+                and _guard(leaf.shape[2], data_size):
+            spec[2] = "data"                   # long-context: shard S
+        if names[-1] == "h" and leaf.ndim == 4 \
+                and _guard(leaf.shape[2], model_size) and spec[1] is None:
+            spec[2] = MODEL_AXIS               # SSM state d_inner over TP
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(f, cache)
+
+
+def named(mesh: Mesh, *spec) -> NamedSharding:
+    return NamedSharding(mesh, P(*spec))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def opt_state_shardings(mesh: Mesh, opt_state, p_shard: PyTree):
+    """Optimizer state mirrors params; scalar placeholders replicated."""
+    from ..optim.optimizers import OptState
+
+    def mirror(tree):
+        flat_p, treedef = jax.tree_util.tree_flatten(p_shard)
+        flat_t = treedef.flatten_up_to(tree)
+        out = []
+        for sh, leaf in zip(flat_p, flat_t):
+            if getattr(leaf, "ndim", 0) == 0:
+                out.append(replicated(mesh))
+            else:
+                out.append(sh)
+        return treedef.unflatten(out)
+
+    return OptState(step=replicated(mesh), mu=mirror(opt_state.mu),
+                    nu=mirror(opt_state.nu), master=mirror(opt_state.master))

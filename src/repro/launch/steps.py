@@ -1,0 +1,57 @@
+"""Jittable step builders shared by train/serve drivers and the dry-run."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..core.sparsity import SparsityConfig
+from ..models.lm import (ArchConfig, build_train_step, build_serve_step,
+                         forward, model_trainable_mask)
+from ..optim.optimizers import (AdamWConfig, SGDConfig, init_opt_state,
+                                apply_updates)
+from ..optim.compression import psum_compressed
+
+__all__ = ["build_update_step", "build_prefill_step", "build_serve_step",
+           "init_train_state"]
+
+
+def init_train_state(key, cfg: ArchConfig):
+    from ..models.lm import init_model
+    params = init_model(key, cfg)
+    opt = init_opt_state(params, model_trainable_mask(params))
+    return params, opt
+
+
+def build_update_step(cfg: ArchConfig, ocfg: AdamWConfig | SGDConfig,
+                      sparsity: SparsityConfig | None = None,
+                      lr_schedule=None):
+    """(params, opt_state, batch, key) → (params, opt_state, loss, gnorm).
+
+    The full production step: sampled in-situ gradients → (optional
+    schedule) → AdamW on the trainable leaves only (Σ + electronics)."""
+    ts = build_train_step(cfg, sparsity)
+
+    def update_step(params, opt_state, batch, key):
+        loss, grads = ts(params, batch, key)
+        scale = lr_schedule(opt_state.step) if lr_schedule else 1.0
+        tr = model_trainable_mask(params)
+        params, opt_state, gnorm = apply_updates(
+            params, grads, opt_state, ocfg, lr_scale=scale, trainable=tr)
+        return params, opt_state, loss, gnorm
+
+    return update_step
+
+
+def build_prefill_step(cfg: ArchConfig):
+    """(params, batch{tokens,…}) → last-position logits (inference
+    prefill; the prefill_32k dry-run cell)."""
+
+    def prefill_step(params, batch):
+        logits, _ = forward(params, cfg, batch)
+        return logits[:, -1]
+
+    return prefill_step

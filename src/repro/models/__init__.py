@@ -1,0 +1,14 @@
+"""Model zoo: every assigned architecture built from PTC-factorized linears.
+
+* ``layers``      — PTCLinear wrapper, norms, rotary variants, softcap
+* ``attention``   — GQA self/cross attention (chunked-softmax prefill,
+                    KV-cache decode)
+* ``moe``         — top-k MoE with sort-based ragged expert dispatch (EP)
+* ``ssm``         — Mamba-1 selective scan (falcon-mamba, jamba)
+* ``lm``          — decoder-only / enc-dec / VLM assembly + train & serve
+                    step builders
+* ``cnn``         — the paper's own MLP/CNN models (k=9 PTC, im2col conv)
+"""
+
+from .layers import PTCLinearCfg, init_ptc_linear, apply_ptc_linear  # noqa: F401
+from .lm import build_train_step, build_serve_step, init_model  # noqa: F401

@@ -1,0 +1,209 @@
+"""GQA self/cross attention over PTC-factorized projections.
+
+Features needed across the assigned archs: grouped KV heads (all),
+qk-norm (qwen3), attention/logit soft-capping (gemma2), sliding-window
+local layers (gemma2 alternates local/global), partial/2d rotary
+(chatglm), cross-attention (whisper decoder, llama-vision), KV-cache
+decode (serve path), and chunked-softmax attention for long prefill
+(online softmax over KV blocks — memory O(S·chunk) instead of O(S²)).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (PTCLinearCfg, init_ptc_linear, apply_ptc_linear,
+                     init_rmsnorm, rmsnorm, rotary_cache, apply_rotary,
+                     softcap)
+
+__all__ = ["AttnCfg", "init_attention", "attention", "decode_attention",
+           "init_kv_cache"]
+
+Params = dict[str, Any]
+NEG_INF = -2.0 ** 30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnCfg:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    rope_frac: float = 1.0          # <1 = partial rotary (chatglm 2d-RoPE)
+    qk_norm: bool = False           # qwen3
+    attn_softcap: float | None = None   # gemma2
+    qkv_bias: bool = False          # chatglm3
+    causal: bool = True             # False for encoder / cross-attn
+    window: int | None = None       # sliding window (gemma2 local layers)
+
+
+def init_attention(key: jax.Array, cfg: AttnCfg, lin: PTCLinearCfg) -> Params:
+    kq, kk, kv, ko, kn = jax.random.split(key, 5)
+    d, hd = cfg.d_model, cfg.head_dim
+    p: Params = {
+        "wq": init_ptc_linear(kq, d, cfg.n_heads * hd, lin, bias=cfg.qkv_bias),
+        "wk": init_ptc_linear(kk, d, cfg.n_kv_heads * hd, lin,
+                              bias=cfg.qkv_bias),
+        "wv": init_ptc_linear(kv, d, cfg.n_kv_heads * hd, lin,
+                              bias=cfg.qkv_bias),
+        "wo": init_ptc_linear(ko, cfg.n_heads * hd, d, lin),
+    }
+    if cfg.qk_norm:
+        p["qn"] = init_rmsnorm(hd)
+        p["kn"] = init_rmsnorm(hd)
+    return p
+
+
+def _project_qkv(p: Params, cfg: AttnCfg, lin: PTCLinearCfg, x, positions,
+                 kv_x=None):
+    """Project (and rope/norm) q from x, k/v from kv_x (defaults to x)."""
+    b = x.shape[0]
+    kv_x = x if kv_x is None else kv_x
+    q = apply_ptc_linear(p["wq"], x, lin, d_out=cfg.n_heads * cfg.head_dim)
+    k = apply_ptc_linear(p["wk"], kv_x, lin,
+                         d_out=cfg.n_kv_heads * cfg.head_dim)
+    v = apply_ptc_linear(p["wv"], kv_x, lin,
+                         d_out=cfg.n_kv_heads * cfg.head_dim)
+    q = q.reshape(b, x.shape[1], cfg.n_heads, cfg.head_dim)
+    k = k.reshape(b, kv_x.shape[1], cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, kv_x.shape[1], cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm(p["qn"], q)
+        k = rmsnorm(p["kn"], k)
+    if cfg.rope_frac > 0 and positions is not None:
+        cos, sin = rotary_cache(positions, cfg.head_dim, cfg.rope_theta,
+                                cfg.rope_frac)
+        q = apply_rotary(q, cos, sin)
+        k = apply_rotary(k, cos, sin)
+    return q, k, v
+
+
+def _mask_bias(sq, sk, causal, window, q_offset=0, dtype=jnp.float32):
+    qi = jnp.arange(sq)[:, None] + q_offset
+    ki = jnp.arange(sk)[None, :]
+    ok = jnp.ones((sq, sk), bool)
+    if causal:
+        ok = ok & (ki <= qi)
+    if window is not None:
+        ok = ok & (ki > qi - window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(dtype)
+
+
+def _sdpa(q, k, v, cfg: AttnCfg, q_offset=0):
+    """Materialized-scores attention (training / short prefill)."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    rep = h // k.shape[2]
+    kr = jnp.repeat(k, rep, axis=2)
+    vr = jnp.repeat(v, rep, axis=2)
+    scale = hd ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kr).astype(jnp.float32) * scale
+    logits = softcap(logits, cfg.attn_softcap)
+    logits = logits + _mask_bias(sq, sk, cfg.causal, cfg.window, q_offset)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, vr)
+
+
+def _sdpa_chunked(q, k, v, cfg: AttnCfg, chunk: int):
+    """Online-softmax attention over KV chunks: O(S·chunk) memory.
+
+    The long-prefill path; mathematically identical to _sdpa."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    assert sk % chunk == 0, (sk, chunk)
+    rep = h // k.shape[2]
+    scale = hd ** -0.5
+    kc = k.reshape(b, sk // chunk, chunk, k.shape[2], hd)
+    vc = v.reshape(b, sk // chunk, chunk, v.shape[2], hd)
+    qi = jnp.arange(sq)[:, None]
+
+    def body(carry, ckv):
+        acc, m, denom, ci = carry
+        kb, vb = ckv
+        kb = jnp.repeat(kb, rep, axis=2)
+        vb = jnp.repeat(vb, rep, axis=2)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, kb).astype(jnp.float32) * scale
+        logits = softcap(logits, cfg.attn_softcap)
+        ki = ci * chunk + jnp.arange(chunk)[None, :]
+        ok = jnp.ones((sq, chunk), bool)
+        if cfg.causal:
+            ok = ok & (ki <= qi)
+        if cfg.window is not None:
+            ok = ok & (ki > qi - cfg.window)
+        logits = logits + jnp.where(ok, 0.0, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(-1))
+        alpha = jnp.exp(m - m_new)
+        pexp = jnp.exp(logits - m_new[..., None])
+        denom = denom * alpha + pexp.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", pexp.astype(q.dtype), vb).astype(jnp.float32)
+        return (acc, m_new, denom, ci + 1), None
+
+    acc0 = jnp.zeros((b, h, sq, hd), jnp.float32)
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    d0 = jnp.zeros((b, h, sq), jnp.float32)
+    # checkpoint per KV chunk: backward recomputes each chunk's logits
+    # instead of saving (B, H, S, S_k) — peak memory O(S·chunk)
+    (acc, _, denom, _), _ = jax.lax.scan(
+        jax.checkpoint(body), (acc0, m0, d0, jnp.asarray(0)),
+        (jnp.swapaxes(kc, 0, 1), jnp.swapaxes(vc, 0, 1)))
+    out = acc / denom[..., None]
+    return jnp.swapaxes(out, 1, 2).astype(q.dtype)
+
+
+def attention(p: Params, cfg: AttnCfg, lin: PTCLinearCfg, x, positions,
+              kv_x=None, chunk: int | None = None):
+    """Full attention layer: project → attend → output projection."""
+    q, k, v = _project_qkv(p, cfg, lin, x, positions, kv_x)
+    if chunk is not None and k.shape[1] > chunk:
+        o = _sdpa_chunked(q, k, v, cfg, chunk)
+    else:
+        o = _sdpa(q, k, v, cfg)
+    b, s = x.shape[0], x.shape[1]
+    o = o.reshape(b, s, cfg.n_heads * cfg.head_dim)
+    return apply_ptc_linear(p["wo"], o, lin, d_out=cfg.d_model)
+
+
+# -- decode (serve path) -----------------------------------------------------
+
+
+def init_kv_cache(batch: int, max_len: int, cfg: AttnCfg, dtype=jnp.bfloat16):
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_attention(p: Params, cfg: AttnCfg, lin: PTCLinearCfg, x, cache,
+                     cache_len):
+    """One-token decode against a populated KV cache.
+
+    x: (B, 1, d); cache k/v: (B, S, Hkv, Dh); cache_len: scalar/ (B,) —
+    number of valid cache entries.  Returns (out, updated_cache)."""
+    b = x.shape[0]
+    positions = jnp.full((b, 1), cache_len, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, cfg, lin, x, positions)
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), cache_len, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), cache_len, axis=1)
+    sk = k.shape[1]
+    rep = cfg.n_heads // cfg.n_kv_heads
+    kr = jnp.repeat(k, rep, axis=2)
+    vr = jnp.repeat(v, rep, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kr).astype(jnp.float32)
+    logits = logits * (cfg.head_dim ** -0.5)
+    logits = softcap(logits, cfg.attn_softcap)
+    ki = jnp.arange(sk)[None, None, None, :]
+    ok = ki <= cache_len
+    if cfg.window is not None:
+        ok = ok & (ki > cache_len - cfg.window)
+    logits = jnp.where(ok, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bhqk,bkhd->bqhd", w, vr)
+    o = o.reshape(b, 1, cfg.n_heads * cfg.head_dim)
+    out = apply_ptc_linear(p["wo"], o, lin, d_out=cfg.d_model)
+    return out, {"k": k, "v": v}

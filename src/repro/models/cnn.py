@@ -1,0 +1,175 @@
+"""The paper's own evaluation models: MLP / CNN-S / CNN-L / VGG-8 (§4.1).
+
+Convolutions are im2col'd and fed through k=9 PTC linears — exactly the
+paper's "fully parallel 9×9-blocking matrix multiplication" engine; the
+im2col columns are what Column Sampling drops (§3.4.2 / Fig. 9).  These
+models carry the paper-reproduction experiments (Tables 2-5, Figs 5/8/
+11-14) on synthetic datasets; the large-scale LM zoo lives in ``lm.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..core.sparsity import SparsityConfig
+from .layers import PTCLinearCfg, init_ptc_linear, apply_ptc_linear
+
+
+__all__ = ["ConvSpec", "FCSpec", "PoolSpec", "CNNConfig", "init_cnn",
+           "cnn_forward", "build_cnn_train_step", "MLP_VOWEL", "CNN_S",
+           "CNN_L", "VGG8"]
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    c_out: int
+    ksize: int = 3
+    stride: int = 1
+    pad: str = "SAME"
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolSpec:
+    size: int
+    kind: str = "avg"    # avg | max
+
+
+@dataclasses.dataclass(frozen=True)
+class FCSpec:
+    d_out: int
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    name: str
+    layers: tuple
+    in_shape: tuple          # (H, W, C) images or (D,) flat features
+    n_classes: int
+    ptc: PTCLinearCfg = dataclasses.field(
+        default_factory=lambda: PTCLinearCfg(k=9, mode="blocked",
+                                             base_dtype=jnp.float32))
+
+
+# paper §4.1 model zoo
+MLP_VOWEL = CNNConfig("mlp-vowel", (FCSpec(16), FCSpec(16), FCSpec(4)),
+                      in_shape=(8,), n_classes=4)
+CNN_S = CNNConfig("cnn-s", (ConvSpec(8, 3, 2), ConvSpec(6, 3, 2), FCSpec(10)),
+                  in_shape=(28, 28, 1), n_classes=10)
+CNN_L = CNNConfig("cnn-l", (ConvSpec(64), ConvSpec(64), ConvSpec(64),
+                            PoolSpec(5), FCSpec(10)),
+                  in_shape=(28, 28, 1), n_classes=10)
+VGG8 = CNNConfig("vgg8", (ConvSpec(64), ConvSpec(64), PoolSpec(2),
+                          ConvSpec(128), ConvSpec(128), PoolSpec(2),
+                          ConvSpec(256), ConvSpec(256), PoolSpec(2),
+                          FCSpec(512), FCSpec(10)),
+                 in_shape=(32, 32, 3), n_classes=10)
+
+
+def _im2col(x: jax.Array, ksize: int, stride: int, pad: str) -> jax.Array:
+    """(B, H, W, C) → (B, H', W', C·K·K) patches (NHWC)."""
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (ksize, ksize), (stride, stride), pad,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return patches
+
+
+def init_cnn(key: jax.Array, cfg: CNNConfig) -> Params:
+    params: Params = {}
+    shape = cfg.in_shape
+    keys = jax.random.split(key, len(cfg.layers))
+    for i, (spec, k) in enumerate(zip(cfg.layers, keys)):
+        if isinstance(spec, ConvSpec):
+            h, w, c = shape
+            d_in = c * spec.ksize * spec.ksize
+            params[f"l{i}"] = init_ptc_linear(k, d_in, spec.c_out, cfg.ptc,
+                                              bias=True)
+            s = spec.stride
+            if spec.pad == "SAME":
+                h, w = -(-h // s), -(-w // s)
+            else:
+                h, w = (h - spec.ksize) // s + 1, (w - spec.ksize) // s + 1
+            shape = (h, w, spec.c_out)
+        elif isinstance(spec, PoolSpec):
+            h, w, c = shape
+            shape = (h // spec.size, w // spec.size, c)
+        elif isinstance(spec, FCSpec):
+            d_in = int(jnp.prod(jnp.asarray(shape)))
+            params[f"l{i}"] = init_ptc_linear(k, d_in, spec.d_out, cfg.ptc,
+                                              bias=True)
+            shape = (spec.d_out,)
+    return params
+
+
+def _layer_masks(p, key, sparsity, n_cols):
+    """Per-layer feedback + column masks, sized to THIS layer's grid and
+    THIS layer's im2col column count (the paper's CS is per-layer)."""
+    from ..core.sparsity import feedback_mask, column_mask
+    from ..core.subspace import SubspaceMasks
+    if sparsity is None or not sparsity.enabled or "s" not in p:
+        return None
+    kf, kc = jax.random.split(key)
+    s = jax.lax.stop_gradient(p["s"]).astype(jnp.float32)
+    energy = jnp.sum(s * s, axis=-1)
+    fb = feedback_mask(kf, energy, sparsity) if sparsity.alpha_w < 1.0 else None
+    col = column_mask(kc, n_cols, sparsity) if sparsity.alpha_c < 1.0 else None
+    return SubspaceMasks(feedback=fb, column=col)
+
+
+def cnn_forward(params: Params, cfg: CNNConfig, x: jax.Array,
+                key: jax.Array | None = None,
+                sparsity: SparsityConfig | None = None) -> jax.Array:
+    """x: (B, H, W, C) or (B, D) → logits (B, n_classes)."""
+    n = len(cfg.layers)
+    for i, spec in enumerate(cfg.layers):
+        lk = jax.random.fold_in(key, i) if key is not None else None
+        if isinstance(spec, ConvSpec):
+            cols = _im2col(x, spec.ksize, spec.stride, spec.pad)
+            b, h, w, d = cols.shape
+            m = _layer_masks(params[f"l{i}"], lk, sparsity,
+                             b * h * w) if lk is not None else None
+            y = apply_ptc_linear(params[f"l{i}"], cols.reshape(b, h * w, d),
+                                 cfg.ptc, masks=m, d_out=spec.c_out)
+            x = y.reshape(b, h, w, spec.c_out)
+            x = jax.nn.relu(x)
+        elif isinstance(spec, PoolSpec):
+            b, h, w, c = x.shape
+            s = spec.size
+            xr = x[:, : h // s * s, : w // s * s].reshape(
+                b, h // s, s, w // s, s, c)
+            x = xr.max((2, 4)) if spec.kind == "max" else xr.mean((2, 4))
+        elif isinstance(spec, FCSpec):
+            if x.ndim > 2:
+                x = x.reshape(x.shape[0], -1)
+            m = _layer_masks(params[f"l{i}"], lk, sparsity,
+                             x.shape[0]) if lk is not None else None
+            x = apply_ptc_linear(params[f"l{i}"], x, cfg.ptc, masks=m,
+                                 d_out=spec.d_out)
+            if i < n - 1:
+                x = jax.nn.relu(x)
+    return x
+
+
+def build_cnn_train_step(cfg: CNNConfig,
+                         sparsity: SparsityConfig | None = None):
+    """train_step(params, batch{x, y}, key) → (loss, grads) with the
+    paper's multi-level sampled in-situ gradients."""
+
+    def loss_fn(params, batch, key):
+        logits = cnn_forward(params, cfg, batch["x"], key=key,
+                             sparsity=sparsity)
+        labels = batch["y"]
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        gold = jnp.take_along_axis(logits.astype(jnp.float32),
+                                   labels[:, None], axis=-1)[:, 0]
+        return jnp.mean(lse - gold)
+
+    def train_step(params, batch, key):
+        return jax.value_and_grad(loss_fn)(params, batch, key)
+
+    return train_step

@@ -1,0 +1,9 @@
+"""Optimizers: first-order (AdamW/SGD, fp32-master), zeroth-order (ZCD/ZTP/
+ZGD with best-recording), LR schedules, and gradient compression."""
+
+from .zo import ZOConfig, zo_minimize  # noqa: F401
+from .optimizers import (  # noqa: F401
+    AdamWConfig, SGDConfig, OptState, init_opt_state, apply_updates,
+    clip_by_global_norm,
+)
+from .schedules import cosine_schedule, linear_warmup_cosine  # noqa: F401

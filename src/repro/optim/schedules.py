@@ -1,0 +1,27 @@
+"""Learning-rate schedules (paper uses cosine annealing for SL)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["cosine_schedule", "linear_warmup_cosine", "exponential_decay"]
+
+
+def cosine_schedule(step, total_steps: int, final_frac: float = 0.0):
+    t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return final_frac + (1.0 - final_frac) * cos
+
+
+def linear_warmup_cosine(step, warmup_steps: int, total_steps: int,
+                         final_frac: float = 0.0):
+    warm = jnp.clip(step / max(warmup_steps, 1), 0.0, 1.0)
+    t = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1),
+                 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return warm * (final_frac + (1.0 - final_frac) * cos)
+
+
+def exponential_decay(step, decay: float = 0.99, period: int = 1):
+    """IC/PM schedule: lr ← lr·decay every epoch (paper Appendix E)."""
+    return decay ** (step // period)

@@ -1,0 +1,143 @@
+"""Zeroth-order optimizers for hardware-restricted phase tuning.
+
+The paper's IC/PM stages cannot observe phase gradients, only end-to-end
+transfer-matrix losses; they use ZO search (Fig. 4 / Algorithm 1):
+
+* ``zcd`` — zeroth-order coordinate descent: draw a coordinate, probe
+  ``L(φ+δφ)`` vs ``L(φ)``, step ±δφ (always moves — Algorithm 1);
+  supports the PM *alternate* schedule (even steps probe Φ^U coords, odd
+  steps Φ^V) via ``alt_split``.
+* ``ztp`` — stochastic three-point: random direction ``u``, move to the
+  best of {φ, φ+δu, φ−δu}.
+* ``zgd`` — antithetic two-point gradient estimate with momentum.
+
+All methods record the BEST solution seen (the "-B" variants in Fig. 4)
+and decay the step size ``δφ ← max(δφ/β, δφ_l)`` every ``inner`` steps,
+with δφ bounded by the phase-control resolution (Algorithm 1's
+``δφ_u = 2π/(2^min(b_l,b)−1)``).
+
+Everything is a pure ``lax.scan`` so the whole per-block search is
+``jax.vmap``-able across the thousands of k×k blocks that IC/PM optimize
+in parallel — the paper's key scalability trick ("partitioning a
+large-scale regression into a batch of sub-tasks").
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ZOConfig", "zo_minimize"]
+
+
+class ZOConfig(NamedTuple):
+    steps: int = 400            # total probe steps
+    inner: int = 20             # step-size decay period (Algorithm 1's S)
+    delta0: float = 0.1         # initial step δφ_u
+    decay: float = 1.05         # β
+    delta_min: float = 2 * np.pi / 255.0  # δφ_l (8-bit phase resolution)
+    lr0: float = 1.0            # zgd learning rate
+    momentum: float = 0.9       # zgd momentum
+    record_every: int = 10      # best-loss history stride
+
+
+class ZOResult(NamedTuple):
+    x: jax.Array        # best solution recorded
+    f: jax.Array        # best loss
+    history: jax.Array  # best-loss trace, (steps // record_every,)
+
+
+def zo_minimize(loss_fn: Callable[[jax.Array], jax.Array], x0: jax.Array,
+                key: jax.Array, cfg: ZOConfig, method: str = "zcd",
+                alt_split: int | None = None) -> ZOResult:
+    """Minimize ``loss_fn`` from ``x0`` with a ZO search.
+
+    ``loss_fn`` maps a flat parameter vector to a scalar; it embodies one
+    physical loss measurement (PTC probe + electronic comparison).
+    ``alt_split``: if set, coordinates [0, alt_split) and [alt_split, n)
+    are probed on alternating steps (PM's alternate Φ^U / Φ^V schedule).
+    """
+    n = x0.shape[-1]
+    if method == "zcd":
+        step_fn = _zcd_step(loss_fn, n, alt_split)
+    elif method == "ztp":
+        step_fn = _ztp_step(loss_fn, n)
+    elif method == "zgd":
+        step_fn = _zgd_step(loss_fn, n, cfg)
+    else:
+        raise ValueError(f"unknown ZO method: {method!r}")
+
+    f0 = loss_fn(x0)
+    carry0 = dict(x=x0, f=f0, best_x=x0, best_f=f0, delta=jnp.asarray(cfg.delta0),
+                  m=jnp.zeros_like(x0), t=jnp.asarray(0))
+
+    def body(carry, key_t):
+        carry = step_fn(carry, key_t)
+        better = carry["f"] < carry["best_f"]
+        carry["best_f"] = jnp.where(better, carry["f"], carry["best_f"])
+        carry["best_x"] = jnp.where(better, carry["x"], carry["best_x"])
+        t = carry["t"] + 1
+        carry["t"] = t
+        decay_now = (t % cfg.inner) == 0
+        carry["delta"] = jnp.where(
+            decay_now, jnp.maximum(carry["delta"] / cfg.decay, cfg.delta_min),
+            carry["delta"])
+        return carry, carry["best_f"]
+
+    keys = jax.random.split(key, cfg.steps)
+    carry, trace = jax.lax.scan(body, carry0, keys)
+    history = trace[cfg.record_every - 1:: cfg.record_every]
+    return ZOResult(x=carry["best_x"], f=carry["best_f"], history=history)
+
+
+def _zcd_step(loss_fn, n, alt_split):
+    def step(carry, key_t):
+        x, f, delta, t = carry["x"], carry["f"], carry["delta"], carry["t"]
+        if alt_split is None:
+            i = jax.random.randint(key_t, (), 0, n)
+        else:
+            # alternate: even steps sample [0, split), odd [split, n)
+            lo = jnp.where(t % 2 == 0, 0, alt_split)
+            hi = jnp.where(t % 2 == 0, alt_split, n)
+            i = lo + jax.random.randint(key_t, (), 0, 1 << 30) % (hi - lo)
+        f_plus = loss_fn(x.at[i].add(delta))
+        # Algorithm 1: always move; +δ if it improves on the current loss
+        sign = jnp.where(f_plus < f, 1.0, -1.0)
+        x_new = x.at[i].add(sign * delta)
+        carry["x"] = x_new
+        carry["f"] = jnp.where(f_plus < f, f_plus, loss_fn(x_new))
+        return carry
+    return step
+
+
+def _ztp_step(loss_fn, n):
+    def step(carry, key_t):
+        x, f, delta = carry["x"], carry["f"], carry["delta"]
+        u = jax.random.normal(key_t, (n,))
+        u = u / (jnp.linalg.norm(u) + 1e-12)
+        xp, xn = x + delta * u, x - delta * u
+        fp, fn_ = loss_fn(xp), loss_fn(xn)
+        cands_f = jnp.stack([f, fp, fn_])
+        best = jnp.argmin(cands_f)
+        carry["x"] = jnp.stack([x, xp, xn])[best]
+        carry["f"] = cands_f[best]
+        return carry
+    return step
+
+
+def _zgd_step(loss_fn, n, cfg: ZOConfig):
+    def step(carry, key_t):
+        x, delta, m, t = carry["x"], carry["delta"], carry["m"], carry["t"]
+        u = jax.random.normal(key_t, (n,))
+        u = u / (jnp.linalg.norm(u) + 1e-12)
+        g = (loss_fn(x + delta * u) - loss_fn(x - delta * u)) / (2 * delta) * u
+        m = cfg.momentum * m + g
+        lr = cfg.lr0 * (0.999 ** t)
+        x = x - lr * m
+        carry["x"], carry["m"] = x, m
+        carry["f"] = loss_fn(x)
+        return carry
+    return step

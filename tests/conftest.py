@@ -1,0 +1,9 @@
+"""Shared pytest config.  NOTE: no XLA_FLAGS here — smoke tests and
+benches must see 1 device; only launch/dryrun.py forces 512."""
+
+import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running integration tests")

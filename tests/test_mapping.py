@@ -1,0 +1,82 @@
+"""Parallel Mapping + OSP (paper §3.3, Claim 1, Fig. 5)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.noise import NoiseModel, IDEAL
+from repro.core.mapping import parallel_map, osp, matrix_distance
+from repro.core import unitary as un
+
+
+@settings(max_examples=20, deadline=None)
+@given(k=st.integers(2, 10), seed=st.integers(0, 500))
+def test_osp_optimality_property(k, seed):
+    """Claim 1: Σ_opt = diag(U* W V) minimizes ‖UΣV* − W‖ over diagonals —
+    any perturbation of Σ_opt is no better."""
+    rng = np.random.default_rng(seed)
+    u = jnp.asarray(un.random_orthogonal(seed, k))
+    v = jnp.asarray(un.random_orthogonal(seed + 1, k))
+    w = jnp.asarray(rng.standard_normal((k, k)))
+    s = osp(u, v, w)
+    base = float(jnp.sum(((u * s) @ v - w) ** 2))
+    for trial in range(5):
+        ds = 0.1 * rng.standard_normal(k)
+        pert = float(jnp.sum(((u * (s + ds)) @ v - w) ** 2))
+        assert pert >= base - 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(k=st.integers(2, 10), seed=st.integers(0, 500))
+def test_osp_sign_flip_invariance(k, seed):
+    """Sign flips Ĩ on U columns / V* rows cancel on the OSP diagonal:
+    the projected weight U Σ V* is invariant (the paper's on-chip
+    reciprocity argument)."""
+    rng = np.random.default_rng(seed)
+    u = jnp.asarray(un.random_orthogonal(seed, k))
+    v = jnp.asarray(un.random_orthogonal(seed + 1, k))
+    w = jnp.asarray(rng.standard_normal((k, k)))
+    flips = jnp.asarray(rng.choice([-1.0, 1.0], k))
+    u2 = u * flips[None, :]          # flip columns of U
+    v2 = v * flips[:, None]          # flip the SAME rows of V*
+    s1 = osp(u, v, w)
+    s2 = osp(u2, v2, w)
+    w1 = (u * s1) @ v
+    w2 = (u2 * s2) @ v2
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w2), atol=1e-9)
+
+
+def test_parallel_map_ideal_is_exact():
+    """With no noise, commanded-SVD mapping is exact (error ≈ 0)."""
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal((18, 18)) * 0.3, jnp.float32)
+    pm = parallel_map(jax.random.PRNGKey(0), w, 9, IDEAL, run_zo=False)
+    assert float(np.asarray(pm.err_osp).mean()) < 1e-6
+
+
+def test_parallel_map_noisy_osp_improves():
+    """Post-IC noise frame: OSP error ≤ ZO error ≤ ~init error, and the
+    final mapping error is small (paper Fig. 5 / Table 3 regime)."""
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.standard_normal((18, 18)) * 0.3, jnp.float32)
+    model = NoiseModel().post_ic()
+    pm = parallel_map(jax.random.PRNGKey(1), w, 9, model)
+    e_init = float(np.asarray(pm.err_init).mean())
+    e_zo = float(np.asarray(pm.err_zo).mean())
+    e_osp = float(np.asarray(pm.err_osp).mean())
+    assert e_zo <= e_init + 1e-6
+    assert e_osp <= e_zo + 1e-6
+    assert e_osp < 0.05          # k=9 noise floor (Table 3: rel err ~0.03)
+
+
+def test_mapped_params_reproduce_weight():
+    rng = np.random.default_rng(2)
+    w = jnp.asarray(rng.standard_normal((18, 27)) * 0.3, jnp.float32)
+    model = NoiseModel().post_ic()
+    pm = parallel_map(jax.random.PRNGKey(2), w, 9, model, run_zo=False)
+    from repro.core.ptc import compose_weight, unblockize
+    w_hat = unblockize(compose_weight(pm.params), 18, 27)
+    dist = float(matrix_distance(w_hat, w))
+    assert dist < 0.05

@@ -1,0 +1,61 @@
+"""Appendix-G cost model: structural ratios the paper's Table 2 shows."""
+
+from repro.core.profiler import (LayerSpec, layer_cost, model_cost,
+                                 conv_layer_spec, vgg8_specs, resnet18_specs)
+from repro.core.sparsity import SparsityConfig
+
+
+def test_dense_ratio_structure():
+    """Dense training: E_∇Σ = 2·E_fwd (two reciprocal PTC passes), and
+    E_∇x ≈ E_fwd (Table 2: 8.58 / 17.16 / 8.34)."""
+    spec = LayerSpec("l", c_out=64, c_in_eff=64, n_cols=1024, k=9)
+    c = layer_cost(spec, SparsityConfig())
+    assert c.e_bwd_w == 2 * c.e_fwd
+    assert abs(c.e_bwd_x - c.e_fwd) / c.e_fwd < 0.15
+
+
+def test_feedback_sampling_scales_bwd_x():
+    spec = LayerSpec("l", c_out=90, c_in_eff=90, n_cols=512, k=9)
+    dense = layer_cost(spec, SparsityConfig())
+    half = layer_cost(spec, SparsityConfig(alpha_w=0.5))
+    assert abs(half.e_bwd_x / dense.e_bwd_x - 0.5) < 0.05
+    assert half.e_fwd == dense.e_fwd              # forward untouched
+    # time steps: accumulation path halves
+    assert half.t_bwd_x < dense.t_bwd_x
+
+
+def test_column_sampling_scales_bwd_w():
+    spec = LayerSpec("l", c_out=64, c_in_eff=64, n_cols=1000, k=9)
+    dense = layer_cost(spec, SparsityConfig())
+    cs = layer_cost(spec, SparsityConfig(alpha_c=0.4))
+    assert abs(cs.e_bwd_w / dense.e_bwd_w - 0.4) < 0.05
+
+
+def test_data_sampling_scales_everything():
+    spec = LayerSpec("l", c_out=64, c_in_eff=64, n_cols=1000, k=9)
+    dense = layer_cost(spec, SparsityConfig())
+    smd = layer_cost(spec, SparsityConfig(alpha_d=0.5))
+    assert abs(smd.e_total / dense.e_total - 0.5) < 1e-6
+    assert abs(smd.t_total / dense.t_total - 0.5) < 1e-6
+
+
+def test_first_layer_no_error_feedback():
+    spec = LayerSpec("l0", c_out=64, c_in_eff=27, n_cols=1000, k=9,
+                     first_layer=True)
+    c = layer_cost(spec, SparsityConfig())
+    assert c.e_bwd_x == 0.0 and c.t_bwd_x == 0.0
+
+
+def test_topk_load_imbalance_costs_latency():
+    spec = LayerSpec("l", c_out=90, c_in_eff=90, n_cols=512, k=9)
+    p, q = spec.grid
+    balanced = layer_cost(spec, SparsityConfig(alpha_w=0.5))
+    imbalanced = layer_cost(spec, SparsityConfig(alpha_w=0.5), max_path=p)
+    assert imbalanced.t_bwd_x > balanced.t_bwd_x
+
+
+def test_model_stacks():
+    vgg = model_cost(vgg8_specs(batch=8), SparsityConfig())
+    res = model_cost(resnet18_specs(batch=8), SparsityConfig())
+    assert res.e_total > vgg.e_total      # ResNet-18 ≫ VGG-8 (Table 2)
+    assert vgg.e_total > 0 and vgg.t_total > 0

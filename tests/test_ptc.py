@@ -1,0 +1,90 @@
+"""PTC substrate: blocking layout, factorizations, forward paths."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ptc
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=st.integers(1, 40), n=st.integers(1, 40), k=st.integers(2, 12))
+def test_blockize_roundtrip(m, n, k):
+    rng = np.random.default_rng(m * 1000 + n * 10 + k)
+    w = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    blocks = ptc.blockize(w, k)
+    p, q = -(-m // k), -(-n // k)
+    assert blocks.shape == (p, q, k, k)
+    back = ptc.unblockize(blocks, m, n)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(w))
+
+
+def test_svd_factorize_reconstructs():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal((27, 18)), jnp.float32)
+    f = ptc.svd_factorize(w, 9)
+    w2 = ptc.unblockize(ptc.compose_weight(f), 27, 18)
+    np.testing.assert_allclose(np.asarray(w2), np.asarray(w), atol=1e-5)
+
+
+@pytest.mark.parametrize("m,n,k", [(36, 27, 9), (16, 16, 8), (20, 30, 7)])
+def test_forward_paths_agree(m, n, k):
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.standard_normal((m, n)) * 0.2, jnp.float32)
+    f = ptc.svd_factorize(w, k)
+    x = jnp.asarray(rng.standard_normal((5, n)), jnp.float32)
+    y_ref = x @ w.T
+    yb = ptc.ptc_forward_blocked(f, x, out_dim=m)
+    yf = ptc.ptc_forward_fused(f, x, out_dim=m)
+    np.testing.assert_allclose(np.asarray(yb), np.asarray(y_ref), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(yf), np.asarray(y_ref), atol=2e-5)
+
+
+def test_random_factorize_orthogonal_and_scaled():
+    key = jax.random.PRNGKey(0)
+    f = ptc.random_factorize(key, 64, 64, 8)
+    u = np.asarray(f.u, np.float64)
+    eye = np.eye(8)
+    err = np.abs(u @ np.swapaxes(u, -1, -2) - eye).max()
+    assert err < 1e-5
+    # element variance of composed W ≈ glorot 2/(M+N)
+    w = np.asarray(ptc.unblockize(ptc.compose_weight(f)))
+    var = w.var()
+    assert 0.3 * (2 / 128) < var < 3.0 * (2 / 128)
+
+
+def test_identity_factorize_blocks_are_identity():
+    """Post-IC state: every PTC block individually implements I (the
+    composed multi-block W is all-identity-blocks, not the identity map)."""
+    f = ptc.identity_factorize(16, 16, 8)
+    w = np.asarray(ptc.compose_weight(f))
+    for pp in range(2):
+        for qq in range(2):
+            np.testing.assert_allclose(w[pp, qq], np.eye(8), atol=1e-6)
+    # single-block case IS the identity map
+    f1 = ptc.identity_factorize(16, 16, 16)
+    x = jnp.arange(16, dtype=jnp.float32)[None]
+    y = ptc.ptc_forward_blocked(f1, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-6)
+
+
+def test_block_energy_matches_frobenius():
+    rng = np.random.default_rng(2)
+    w = jnp.asarray(rng.standard_normal((18, 18)), jnp.float32)
+    f = ptc.svd_factorize(w, 9)
+    e = np.asarray(ptc.block_energy(f))
+    blocks = np.asarray(ptc.blockize(w, 9))
+    fro = (blocks ** 2).sum((-2, -1))
+    np.testing.assert_allclose(e, fro, rtol=1e-4)
+
+
+def test_phases_to_factors_roundtrip():
+    rng = np.random.default_rng(3)
+    w = jnp.asarray(rng.standard_normal((18, 9)) * 0.3, jnp.float32)
+    f = ptc.svd_factorize(w, 9)
+    ph = ptc.factors_to_phases(f, kind="clements")
+    f2 = ptc.phases_to_factors(ph, model=None)
+    w2 = ptc.unblockize(ptc.compose_weight(f2), 18, 9)
+    np.testing.assert_allclose(np.asarray(w2), np.asarray(w), atol=1e-4)

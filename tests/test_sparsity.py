@@ -1,0 +1,70 @@
+"""Multi-level sparsity properties: balance, normalization, rates."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sparsity import (SparsityConfig, feedback_mask, column_mask,
+                                 smd_keep_iteration, accumulation_depths)
+
+
+@settings(max_examples=30, deadline=None)
+@given(p=st.integers(2, 24), q=st.integers(1, 16),
+       alpha=st.floats(0.1, 0.9), seed=st.integers(0, 1000),
+       mode=st.sampled_from(["uniform", "btopk"]))
+def test_row_balance_property(p, q, alpha, seed, mode):
+    """btopk/uniform guarantee EQUAL kept blocks per feedback row — the
+    load-balance invariant (paper Fig. 7)."""
+    cfg = SparsityConfig(alpha_w=alpha, feedback_mode=mode,
+                         feedback_norm="exp")
+    energy = jax.random.uniform(jax.random.PRNGKey(seed), (p, q)) + 0.1
+    mask = feedback_mask(jax.random.PRNGKey(seed + 1), energy, cfg)
+    assert mask.shape == (q, p)
+    depths = np.asarray(accumulation_depths(mask))
+    keep = max(1, round(alpha * p))
+    assert (depths == keep).all()
+
+
+def test_topk_can_imbalance():
+    """Global topk concentrates on high-energy rows (the failure mode
+    btopk fixes)."""
+    energy = jnp.ones((8, 4)).at[0].mul(100.0)   # one hot column in W^T
+    cfg = SparsityConfig(alpha_w=0.5, feedback_mode="topk")
+    mask = feedback_mask(jax.random.PRNGKey(0), energy, cfg)
+    depths = np.asarray(accumulation_depths(mask))
+    assert depths.max() > depths.min()
+
+
+@pytest.mark.parametrize("norm,expect", [("none", 1.0), ("exp", 2.0),
+                                         ("var", 2.0 ** 0.5)])
+def test_normalization_factors(norm, expect):
+    cfg = SparsityConfig(alpha_w=0.5, feedback_mode="uniform",
+                         feedback_norm=norm)
+    energy = jnp.ones((8, 8))
+    mask = feedback_mask(jax.random.PRNGKey(0), energy, cfg)
+    vals = np.unique(np.asarray(mask))
+    nz = vals[vals > 0]
+    np.testing.assert_allclose(nz, [expect], rtol=1e-5)
+
+
+def test_column_mask_count_and_scale():
+    cfg = SparsityConfig(alpha_c=0.25, column_norm="exp")
+    m = column_mask(jax.random.PRNGKey(0), 64, cfg)
+    assert int((m > 0).sum()) == 16
+    np.testing.assert_allclose(float(m.max()), 4.0, rtol=1e-5)
+
+
+def test_smd_rate():
+    cfg = SparsityConfig(alpha_d=0.5)
+    keys = jax.random.split(jax.random.PRNGKey(0), 2000)
+    kept = sum(bool(smd_keep_iteration(k, cfg)) for k in keys)
+    assert 0.42 < kept / 2000 < 0.58
+    assert bool(smd_keep_iteration(keys[0], SparsityConfig()))
+
+
+def test_dense_mask_is_ones():
+    m = feedback_mask(jax.random.PRNGKey(0), jnp.ones((4, 4)),
+                      SparsityConfig())
+    np.testing.assert_array_equal(np.asarray(m), np.ones((4, 4)))

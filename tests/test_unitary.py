@@ -1,0 +1,95 @@
+"""Mesh parametrization tests: exactness, orthogonality, transpose, oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import unitary as un
+
+jax.config.update("jax_enable_x64", True)
+
+
+@pytest.mark.parametrize("kind", ["reck", "clements"])
+@pytest.mark.parametrize("k", [2, 3, 4, 5, 8, 9, 16])
+def test_spec_counts(kind, k):
+    spec = un.mesh_spec(k, kind)
+    assert spec.n_rot == k * (k - 1) // 2
+    if kind == "clements":
+        assert spec.n_layers <= k
+    else:
+        assert spec.n_layers <= 2 * k - 3 or k == 2
+    # every layer has disjoint pairs
+    for l in range(spec.n_layers):
+        live = np.where(spec.layer_slot[l] >= 0)[0]
+        partners = spec.layer_partner[l][live]
+        assert sorted(live) == sorted(partners)
+
+
+@pytest.mark.parametrize("kind", ["reck", "clements"])
+@pytest.mark.parametrize("k", [2, 3, 4, 5, 8, 9, 13, 16])
+def test_decompose_reconstruct_roundtrip(kind, k):
+    for seed in range(3):
+        Q = un.random_orthogonal(seed, k)
+        phases, d = un.decompose(Q, kind)
+        spec = un.mesh_spec(k, kind)
+        # numpy oracle requires phases in application-order; for clements the
+        # canonical slot order IS application order (layers ascending).
+        U_np = un.np_build_unitary(spec, phases, d)
+        np.testing.assert_allclose(U_np, Q, atol=1e-10)
+        # JAX layered reconstruction agrees
+        U_jax = un.build_unitary(spec, jnp.asarray(phases), jnp.asarray(d))
+        np.testing.assert_allclose(np.asarray(U_jax), Q, atol=1e-9)
+
+
+@pytest.mark.parametrize("kind", ["reck", "clements"])
+def test_apply_matches_build(kind):
+    k = 9
+    rng = np.random.default_rng(0)
+    spec = un.mesh_spec(k, kind)
+    phases = jnp.asarray(rng.uniform(-np.pi, np.pi, spec.n_rot))
+    d = jnp.asarray(rng.choice([-1.0, 1.0], k))
+    U = un.build_unitary(spec, phases, d)
+    x = jnp.asarray(rng.standard_normal((7, k)))
+    y = un.apply_mesh(spec, phases, x, d)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x) @ np.asarray(U).T,
+                               atol=1e-9)
+    # transpose apply
+    yt = un.apply_mesh_transpose(spec, phases, x, d)
+    np.testing.assert_allclose(np.asarray(yt), np.asarray(x) @ np.asarray(U),
+                               atol=1e-9)
+
+
+@pytest.mark.parametrize("kind", ["reck", "clements"])
+def test_unitary_is_orthogonal(kind):
+    k = 12
+    rng = np.random.default_rng(1)
+    spec = un.mesh_spec(k, kind)
+    phases = jnp.asarray(rng.uniform(-np.pi, np.pi, (5, spec.n_rot)))
+    U = un.build_unitary(spec, phases)
+    eye = np.eye(k)
+    for i in range(5):
+        np.testing.assert_allclose(np.asarray(U[i] @ U[i].T), eye, atol=1e-9)
+
+
+@settings(max_examples=25, deadline=None)
+@given(k=st.integers(min_value=2, max_value=12), seed=st.integers(0, 2**31 - 1),
+       kind=st.sampled_from(["reck", "clements"]))
+def test_roundtrip_property(k, seed, kind):
+    Q = un.random_orthogonal(seed, k)
+    phases, d = un.decompose(Q, kind)
+    spec = un.mesh_spec(k, kind)
+    np.testing.assert_allclose(un.np_build_unitary(spec, phases, d), Q,
+                               atol=1e-9)
+
+
+def test_batched_build():
+    spec = un.mesh_spec(6, "clements")
+    rng = np.random.default_rng(2)
+    phases = jnp.asarray(rng.uniform(-np.pi, np.pi, (3, 4, spec.n_rot)))
+    U = un.build_unitary(spec, phases)
+    assert U.shape == (3, 4, 6, 6)
+    np.testing.assert_allclose(
+        np.asarray(U[1, 2]),
+        np.asarray(un.build_unitary(spec, phases[1, 2])), atol=1e-12)
