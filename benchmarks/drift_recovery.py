@@ -1,0 +1,124 @@
+"""Closed-loop drift recovery: fidelity vs. time, with and without the loop.
+
+Runs the fleet simulation (``repro.runtime.demo.simulate``) twice from
+the same seed — closed loop (monitor → alarm → recalibrate) vs. open
+loop (drift runs away) — and emits:
+
+* ``drift_recovery.csv`` — the per-tick recovery curves (fleet max/mean
+  mapping distance, serve error, #chips in repair) for both loops;
+* ``BENCH_drift_recovery.json`` — headline numbers: time-to-recovery per
+  alarm (ticks from alarm to the post-recal probe clearing the
+  hysteresis threshold), final/peak distances, serving continuity, and
+  probe/recal overhead in PTC calls (Appendix-G energy model via
+  ``core.profiler``).
+
+    PYTHONPATH=src python -m benchmarks.drift_recovery [--budget quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from .common import ART, emit, Timer
+
+
+def _time_to_recovery(events: list[dict], clear_threshold: float) -> list[dict]:
+    """Pair each alarm with the first subsequent recal_done on the same
+    chip whose post-recal distance clears the hysteresis threshold."""
+    open_alarms: dict[int, int] = {}
+    out = []
+    for ev in events:
+        chip = ev["chip"]
+        if ev["event"] == "alarm":
+            open_alarms.setdefault(chip, ev["tick"])
+        elif (ev["event"] == "recal_done" and chip in open_alarms
+              and ev["dist_after"] < clear_threshold):
+            alarm_tick = open_alarms.pop(chip)
+            out.append(dict(chip=chip, alarm_tick=alarm_tick,
+                            recover_tick=ev["tick"],
+                            ticks=ev["tick"] - alarm_tick,
+                            dist_after=ev["dist_after"]))
+    return out
+
+
+def main(budget: str = "quick") -> None:
+    from repro.runtime.demo import simulate, default_runtime_config
+
+    chips, steps = (3, 120) if budget == "quick" else (4, 300)
+    cfg = default_runtime_config()
+
+    results = {}
+    for mode, enabled in (("closed", True), ("open", False)):
+        with Timer() as t:
+            results[mode] = simulate(chips, steps, seed=0, cfg=cfg,
+                                     recal_enabled=enabled)
+        results[mode]["wall_s"] = t.dt
+
+    closed, open_ = results["closed"], results["open"]
+    tr_c, tr_o = closed["trace"], open_["trace"]
+
+    header = ["t", "closed_max_dist", "closed_mean_dist", "closed_serve_err",
+              "closed_in_repair", "open_max_dist", "open_mean_dist",
+              "open_serve_err"]
+    rows = []
+    for i, t in enumerate(tr_c["t"]):
+        rows.append([t,
+                     f"{tr_c['max_dist'][i]:.5f}",
+                     f"{tr_c['mean_dist'][i]:.5f}",
+                     f"{tr_c['serve_err'][i]:.5f}",
+                     tr_c["n_recalibrating"][i],
+                     f"{tr_o['max_dist'][i]:.5f}",
+                     f"{tr_o['mean_dist'][i]:.5f}",
+                     f"{tr_o['serve_err'][i]:.5f}"])
+    emit("drift_recovery", header, rows)
+
+    rep_c = closed["report"]
+    recoveries = _time_to_recovery(rep_c["events"],
+                                   cfg.monitor.clear_threshold)
+    probe_calls = sum(c["probe_ptc_calls"] for c in rep_c["chips"])
+    recal_calls = sum(c["recal_ptc_calls"] for c in rep_c["chips"])
+    serve_calls = rep_c["serve_ptc_calls"]
+
+    summary = dict(
+        budget=budget, chips=chips, steps=steps,
+        alarm_threshold=cfg.monitor.alarm_threshold,
+        clear_threshold=cfg.monitor.clear_threshold,
+        sigma_drift=cfg.drift.sigma_phase,
+        closed=dict(
+            peak_max_dist=max(tr_c["max_dist"]),
+            final_max_dist=tr_c["max_dist"][-1],
+            mean_serve_err=sum(tr_c["serve_err"]) / len(tr_c["serve_err"]),
+            dropped=rep_c["dropped"],
+            alarms=sum(c["alarms"] for c in rep_c["chips"]),
+            recals=sum(c["recals"] for c in rep_c["chips"]),
+            wall_s=closed["wall_s"],
+        ),
+        open=dict(
+            peak_max_dist=max(tr_o["max_dist"]),
+            final_max_dist=tr_o["max_dist"][-1],
+            mean_serve_err=sum(tr_o["serve_err"]) / len(tr_o["serve_err"]),
+            dropped=open_["report"]["dropped"],
+            wall_s=open_["wall_s"],
+        ),
+        time_to_recovery_ticks=[r["ticks"] for r in recoveries],
+        mean_time_to_recovery=(sum(r["ticks"] for r in recoveries)
+                               / len(recoveries)) if recoveries else None,
+        probe_overhead_ptc_calls=probe_calls,
+        recal_overhead_ptc_calls=recal_calls,
+        serve_ptc_calls=serve_calls,
+        probe_overhead_frac=probe_calls / serve_calls,
+    )
+    os.makedirs(ART, exist_ok=True)
+    path = os.path.join(ART, "BENCH_drift_recovery.json")
+    with open(path, "w") as f:
+        json.dump(summary, f, indent=2)
+    print(f"--- drift_recovery summary ({path}) ---")
+    print(json.dumps(summary, indent=2))
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", default="quick", choices=["quick", "normal"])
+    main(ap.parse_args().budget)

@@ -59,7 +59,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (ic_convergence, blocksize_tables, mapping_osp,
-                   grad_fidelity, sampling_table2, scalability)
+                   grad_fidelity, sampling_table2, scalability,
+                   drift_recovery)
     benches = [
         ("fig4_ic_convergence", ic_convergence.main),
         ("tables345_blocksize", blocksize_tables.main),
@@ -67,6 +68,7 @@ def main() -> None:
         ("fig8_grad_fidelity", grad_fidelity.main),
         ("table2_sampling", sampling_table2.main),
         ("fig10_scalability", scalability.main),
+        ("runtime_drift_recovery", drift_recovery.main),
     ]
     for name, fn in benches:
         if args.only and args.only not in name:

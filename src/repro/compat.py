@@ -1,0 +1,40 @@
+"""jax version-compatibility shims.
+
+The container pins jax 0.4.x, where ``shard_map`` still lives in
+``jax.experimental.shard_map`` with the older keyword surface
+(``check_rep`` instead of ``check_vma``; ``auto`` = the *non*-manual
+axes instead of ``axis_names`` = the manual ones).  Newer jax exposes
+``jax.shard_map`` directly.  Callers use the modern spelling and this
+module translates when needed.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map"]
+
+if hasattr(jax, "shard_map"):
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False,
+                  axis_names=None):
+        kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        return jax.shard_map(f, **kw)
+
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False,
+                  axis_names=None):
+        # ``axis_names`` (partial-manual) is ignored here: 0.4.x's
+        # ``auto=`` spelling of it crashes XLA's SPMD partitioner on the
+        # GPipe pattern (CHECK IsManualSubgroup).  Full-manual is
+        # numerically identical — unnamed axes see replicated data
+        # instead of partitioner-driven sharding — so correctness tests
+        # hold; the partial-manual perf shape needs the newer toolchain.
+        del axis_names
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)

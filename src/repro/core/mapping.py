@@ -43,6 +43,7 @@ class PMResult(NamedTuple):
     err_zo: jax.Array       # ... after alternate ZO
     err_osp: jax.Array      # ... after OSP (the Fig. 5 "error drop")
     history: jax.Array
+    dev: DeviceRealization  # the sampled device (runtime drifts it in time)
 
 
 def matrix_distance(w_hat: jax.Array, w: jax.Array) -> jax.Array:
@@ -138,4 +139,4 @@ def parallel_map(key: jax.Array, w: jax.Array, k: int, model: NoiseModel, *,
                        v=v_real.reshape(p, q, k, k))
     return PMResult(params=params, phi_u=phi[:, :t], phi_v=phi[:, t:],
                     err_init=err_init, err_zo=err_zo, err_osp=err_osp,
-                    history=history)
+                    history=history, dev=dev)

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map
 from ..models.lm import (ArchConfig, period_plan, _sublayer_fwd, _apply_norm,
                          embed, softcap, cross_entropy)
 
@@ -73,9 +74,13 @@ def build_pp_loss(cfg: ArchConfig, n_stages: int, n_micro: int):
         x, _ = jax.lax.scan(body, x, stack_local)
         return x
 
-    def local_fn(params, tokens, labels):
-        # tokens/labels: (B_global, S) replicated over the pipe axis
-        stage = jax.lax.axis_index(PIPE_AXIS)
+    def local_fn(params, tokens, labels, stage_ids):
+        # tokens/labels: (B_global, S) replicated over the pipe axis;
+        # stage_ids: (n_stages,) split over it → this shard's (1,) slice
+        # is the stage index.  (An input, not lax.axis_index: axis_index
+        # inside partial-manual shard_map lowers to a PartitionId op
+        # older XLA SPMD pipelines reject.)
+        stage = stage_ids[0]
         b, s = tokens.shape
         mb = b // n_micro
         positions = jnp.broadcast_to(jnp.arange(s)[None], (mb, s))
@@ -131,13 +136,14 @@ def build_pp_loss(cfg: ArchConfig, n_stages: int, n_micro: int):
              "stack_local": jax.tree.map(
                  lambda leaf: P(PIPE_AXIS, *([None] * (leaf.ndim - 1))),
                  stack)},
-            P(), P())
+            P(), P(), P(PIPE_AXIS))
         # manual ONLY over the pipe axis — data/model stay under the
         # partitioner (the inner stage compute keeps its DP/TP sharding)
-        fn = jax.shard_map(local_fn, mesh=mesh, in_specs=in_specs,
-                           out_specs=P(), check_vma=False,
-                           axis_names=frozenset({PIPE_AXIS}))
+        fn = shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+                       out_specs=P(), check_vma=False,
+                       axis_names=frozenset({PIPE_AXIS}))
         return fn({**other, "stack_local": stack},
-                  batch["tokens"], batch["labels"])
+                  batch["tokens"], batch["labels"],
+                  jnp.arange(n_stages, dtype=jnp.int32))
 
     return loss_fn

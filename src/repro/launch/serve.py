@@ -4,6 +4,15 @@ Runnable on this CPU container with smoke configs::
 
     PYTHONPATH=src python -m repro.launch.serve --arch smoke:qwen3-4b \
         --batch 4 --prompt-len 16 --gen 32
+
+With ``--fleet N`` the decode loop is dispatched through the closed-loop
+photonic runtime (``repro.runtime``): N virtual chip instances with
+independent device realizations back the serving plane, health probes
+run out-of-band, and (with ``--drift``) thermal phase drift degrades
+chips until the router schedules recalibration around live traffic.
+The LM math itself stays on the digital twin; the fleet models the
+photonic boards' device state, health, and routing — every decode step
+is routed through one chip's *drifted* transfer function and accounted.
 """
 
 from __future__ import annotations
@@ -16,8 +25,24 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..data import lm_batch
-from ..models.lm import (init_model, init_decode_cache, build_serve_step)
+from ..models.lm import init_model, init_decode_cache, build_serve_step
+from .steps import greedy_decode
 from .train import parse_arch
+
+
+def _build_fleet(args):
+    from ..runtime.demo import default_runtime_config
+    from ..runtime.fleet import make_fleet, FleetRouter
+
+    sigma = args.drift_sigma if args.drift else 0.0
+    cfg = default_runtime_config(k=args.fleet_k, sigma_drift=sigma,
+                                 probe_every=args.probe_every)
+    kw, kf = jax.random.split(jax.random.PRNGKey(args.seed + 17))
+    dim = args.fleet_dim
+    w = jax.random.normal(kw, (dim, dim)) / jnp.sqrt(
+        jnp.asarray(dim, jnp.float32))
+    chips = make_fleet(kf, args.fleet, w, cfg)
+    return FleetRouter(chips, cfg, seed=args.seed), dim
 
 
 def main(argv=None):
@@ -27,6 +52,14 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fleet", type=int, default=0,
+                    help="route decode steps through N virtual chips")
+    ap.add_argument("--drift", action="store_true",
+                    help="enable thermal phase drift on the fleet")
+    ap.add_argument("--drift-sigma", type=float, default=0.015)
+    ap.add_argument("--probe-every", type=int, default=10)
+    ap.add_argument("--fleet-k", type=int, default=6)
+    ap.add_argument("--fleet-dim", type=int, default=18)
     args = ap.parse_args(argv)
 
     cfg = parse_arch(args.arch)
@@ -46,25 +79,39 @@ def main(argv=None):
         extras["enc_out"] = 0.1 * jnp.ones(
             (args.batch, args.prompt_len, cfg.d_model), jnp.float32)
 
-    # prefill by streaming the prompt through the decode path (cache fills)
-    tok = jnp.asarray(prompt[:, :1])
+    on_step = None
+    router = None
+    if args.fleet > 0:
+        router, fleet_dim = _build_fleet(args)
+        kx = jax.random.PRNGKey(args.seed + 23)
+
+        def on_step(i):
+            # every serve-path step (prefill included) runs on one
+            # routed (drifted) board
+            x = jax.random.normal(jax.random.fold_in(kx, i),
+                                  (args.batch, fleet_dim))
+            router.serve(x)
+            router.tick()
+
     t0 = time.time()
-    out_tokens = []
-    for i in range(max_len - 1):
-        batch = {"token": tok, "cache_len": jnp.asarray(i, jnp.int32),
-                 **extras}
-        logits, cache = serve(params, cache, batch)
-        nxt = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-        if i + 1 < args.prompt_len:
-            tok = jnp.asarray(prompt[:, i + 1: i + 2])   # teacher-forced
-        else:
-            tok = nxt
-            out_tokens.append(np.asarray(nxt)[:, 0])
+    gen, cache = greedy_decode(serve, params, cache, prompt, args.gen,
+                               extras=extras, on_step=on_step)
     dt = time.time() - t0
-    gen = np.stack(out_tokens, axis=1)
     print(f"generated {gen.shape} tokens in {dt:.1f}s "
           f"({gen.size / dt:.1f} tok/s)")
     print("sample:", gen[0][:24])
+
+    if router is not None:
+        rep = router.report()
+        alarms = sum(c["alarms"] for c in rep["chips"])
+        recals = sum(c["recals"] for c in rep["chips"])
+        print(f"fleet: {args.fleet} chips, {rep['ticks']} ticks, "
+              f"{rep['dropped']} dropped, {alarms} alarms, "
+              f"{recals} recals")
+        for c in rep["chips"]:
+            print(f"  chip {c['chip']}: {c['status']:<13} "
+                  f"served={c['served']:4d} d̂={c['distance']:.4f} "
+                  f"alarms={c['alarms']} recals={c['recals']}")
     return 0
 
 

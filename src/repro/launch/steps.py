@@ -3,10 +3,11 @@
 from __future__ import annotations
 
 import functools
-from typing import Any
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core.sparsity import SparsityConfig
 from ..models.lm import (ArchConfig, build_train_step, build_serve_step,
@@ -16,7 +17,7 @@ from ..optim.optimizers import (AdamWConfig, SGDConfig, init_opt_state,
 from ..optim.compression import psum_compressed
 
 __all__ = ["build_update_step", "build_prefill_step", "build_serve_step",
-           "init_train_state"]
+           "init_train_state", "greedy_decode"]
 
 
 def init_train_state(key, cfg: ArchConfig):
@@ -44,6 +45,46 @@ def build_update_step(cfg: ArchConfig, ocfg: AdamWConfig | SGDConfig,
         return params, opt_state, loss, gnorm
 
     return update_step
+
+
+def greedy_decode(serve_step, params, cache, prompt, gen: int,
+                  extras: dict | None = None,
+                  on_step: Callable[[int], None] | None = None):
+    """One shared serve path: teacher-forced prefill through the decode
+    cache, then greedy generation of ``gen`` tokens.
+
+    ``serve_step`` is a (jitted) ``build_serve_step`` product; ``prompt``
+    is (B, prompt_len) int32.  The prompt region streams token-by-token
+    so the KV cache fills along the same code path generation uses (no
+    separate prefill kernel on this CPU driver).  ``on_step(i)`` is
+    invoked after every decode-path step — prefill positions included,
+    ``prompt_len + gen − 1`` calls total — since each one is a real pass
+    through the serving hardware; the fleet router hooks its
+    drift/health clock here, so the CLI and the runtime fleet share one
+    loop instead of each reimplementing it.
+
+    Returns ``(generated, cache)`` with ``generated`` (B, gen) numpy.
+    """
+    extras = extras or {}
+    prompt_len = prompt.shape[1]
+    max_len = prompt_len + gen
+    tok = jnp.asarray(prompt[:, :1])
+    out_tokens = []
+    for i in range(max_len - 1):
+        batch = {"token": tok, "cache_len": jnp.asarray(i, jnp.int32),
+                 **extras}
+        logits, cache = serve_step(params, cache, batch)
+        nxt = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        if i + 1 < prompt_len:
+            tok = jnp.asarray(prompt[:, i + 1: i + 2])   # teacher-forced
+        else:
+            tok = nxt
+            out_tokens.append(np.asarray(nxt)[:, 0])
+        if on_step is not None:
+            on_step(i)
+    if not out_tokens:        # gen=0: prefill-only run
+        return np.zeros((prompt.shape[0], 0), np.int32), cache
+    return np.stack(out_tokens, axis=1), cache
 
 
 def build_prefill_step(cfg: ArchConfig):

@@ -1,0 +1,53 @@
+"""Closed-loop photonic device runtime (DESIGN).
+
+The IC → PM → SL pipeline in ``repro.core`` prepares a chip *once*; in
+production the chip then lives under time — thermal and aging phase
+drift walk Γ/Φ_b away from the state calibration compensated for, which
+is precisely why in-situ learnability matters (L2ight §3.2; the
+power-aware sparse-ZOO predecessor arXiv:2012.11148 motivates cheap
+on-chip re-optimization).  This package closes the loop:
+
+    drift.py        the plant:    seeded OU phase drift on DeviceRealization
+    monitor.py      the sensor:   stochastic fidelity probes + hysteretic alarm
+    recalibrate.py  the actuator: warm-started ZO + OSP refresh (+ in-situ Σ)
+    fleet.py        the plane:    N-chip registry + health-aware router
+    demo.py         the driver:   ``python -m repro.runtime.demo``
+
+Closed-loop state machine (one per chip; the router enforces it)::
+
+            ┌────────────────────────────────────────────────┐
+            ▼                                                │
+        HEALTHY ──probe d̂ > alarm_threshold (×consecutive)──▶ DEGRADED
+            ▲                                                │ repair slot
+            │ post-recal probe d̂ < clear_threshold           ▼
+            └───────────────────────────────────── RECALIBRATING
+                      (job: warm ZO → OSP → optional SL; chip unroutable;
+                       a probe still above clear re-queues as DEGRADED)
+
+Design invariants:
+
+* **Serving never blocks on maintenance.**  Recalibration is out-of-band:
+  at most ``max_concurrent_recals`` chips are in repair at once and the
+  router structurally never dispatches to a RECALIBRATING chip.
+  DEGRADED chips keep serving (stale beats down).
+* **Alarms are hysteretic.**  ``consecutive`` strikes above
+  ``alarm_threshold`` raise; recovery must pass the *lower*
+  ``clear_threshold`` — no chatter around one boundary.
+* **Everything is seeded.**  Drift, probes, and recal searches all
+  derive from one PRNG chain, so whole fleet trajectories are exactly
+  reproducible (the runtime tests assert bit-equal replays).
+* **Costs are accounted.**  Probe and recal budgets are tallied in PTC
+  calls with the paper's Appendix-G energy model (``core.profiler``),
+  so the closed loop's overhead is measurable, not vibes
+  (``benchmarks/drift_recovery.py``).
+"""
+
+from .drift import (DriftConfig, DriftState, init_drift, advance,
+                    bias_deviation, DEFAULT_DRIFT)  # noqa: F401
+from .monitor import (MonitorConfig, HealthState, realized_blocks,
+                      aggregate_distance, probe_mapping_distance,
+                      probe_identity_distance, true_mapping_distance,
+                      update_health, clear_health, probe_ptc_calls)  # noqa: F401
+from .recalibrate import RecalConfig, RecalResult, recalibrate  # noqa: F401
+from .fleet import (HEALTHY, DEGRADED, RECALIBRATING, RuntimeConfig, Chip,
+                    FleetRouter, make_chip, make_fleet)  # noqa: F401

@@ -1,0 +1,112 @@
+"""Time-dependent device drift: seeded Ornstein–Uhlenbeck phase walk.
+
+The seed repo treats a chip as a one-shot artifact — ``sample_device``
+draws Γ/Φ_b once and the realization is frozen forever.  Real photonic
+meshes drift: thermal gradients and aging move the phase biases on a
+scale of minutes-to-days, which is the whole motivation for *in-situ*
+re-optimization (L2ight §3.2).  This module layers a time axis on top of
+``core.noise``'s static :class:`PhaseNoise`:
+
+* the *anchor* is the manufacturing realization (what ``sample_device``
+  drew) — drift is mean-reverting toward it (thermal fluctuation) plus
+  an optional deterministic ramp (aging);
+* :func:`advance` performs one Euler–Maruyama step of the OU SDE
+
+      dφ_b = θ (φ_anchor + a·t − φ_b) dt + σ_φ √dt · dW
+
+  on the phase biases of both meshes (and, optionally, a slower OU walk
+  on the multiplicative Γ factors);
+* everything is a pure jittable function of ``(state, dt, key)`` —
+  drift is exactly reproducible under a fixed seed schedule, which the
+  runtime tests rely on.
+
+Only ``Φ_b`` and ``Γ`` move; the manufacturing sign diagonals ``d_u`` /
+``d_v`` are topological and fixed for the life of the device.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.calibration import DeviceRealization
+from ..core.noise import PhaseNoise
+
+__all__ = ["DriftConfig", "DriftState", "init_drift", "advance",
+           "bias_deviation", "DEFAULT_DRIFT"]
+
+
+class DriftConfig(NamedTuple):
+    """OU drift parameters (units: radians and virtual ticks)."""
+
+    sigma_phase: float = 0.004   # diffusion on the phase biases, rad/√tick
+    theta: float = 0.01          # mean reversion rate toward the anchor
+    sigma_gamma: float = 0.0     # diffusion on Γ (slow; off by default)
+    aging: float = 0.0           # deterministic anchor ramp, rad/tick
+
+
+DEFAULT_DRIFT = DriftConfig()
+
+
+class DriftState(NamedTuple):
+    """A :class:`DeviceRealization` extended with a time axis.
+
+    ``anchor`` is the manufacturing realization the OU process reverts
+    to; ``dev`` is the current (drifted) realization that the simulator
+    should feed to ``realized_unitaries`` / ``apply_phase_noise``.
+    """
+
+    anchor: DeviceRealization
+    dev: DeviceRealization
+    t: jax.Array                 # scalar virtual time (ticks)
+
+
+def init_drift(dev: DeviceRealization) -> DriftState:
+    """Start the clock at t=0 with the freshly sampled realization."""
+    return DriftState(anchor=dev, dev=dev, t=jnp.zeros((), jnp.float32))
+
+
+def _ou_step(key, x, x_anchor, theta, sigma, dt):
+    eps = jax.random.normal(key, x.shape)
+    return x + theta * (x_anchor - x) * dt + sigma * jnp.sqrt(dt) * eps
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _advance(state: DriftState, dt: jax.Array, key: jax.Array,
+             cfg: DriftConfig) -> DriftState:
+    kbu, kbv, kgu, kgv = jax.random.split(key, 4)
+    anchor, dev = state.anchor, state.dev
+    ramp = cfg.aging * state.t
+
+    bias_u = _ou_step(kbu, dev.noise_u.bias, anchor.noise_u.bias + ramp,
+                      cfg.theta, cfg.sigma_phase, dt)
+    bias_v = _ou_step(kbv, dev.noise_v.bias, anchor.noise_v.bias + ramp,
+                      cfg.theta, cfg.sigma_phase, dt)
+    gamma_u = _ou_step(kgu, dev.noise_u.gamma, anchor.noise_u.gamma,
+                       cfg.theta, cfg.sigma_gamma, dt)
+    gamma_v = _ou_step(kgv, dev.noise_v.gamma, anchor.noise_v.gamma,
+                       cfg.theta, cfg.sigma_gamma, dt)
+
+    new_dev = DeviceRealization(
+        noise_u=PhaseNoise(gamma=gamma_u, bias=bias_u),
+        noise_v=PhaseNoise(gamma=gamma_v, bias=bias_v),
+        d_u=dev.d_u, d_v=dev.d_v)
+    return DriftState(anchor=anchor, dev=new_dev, t=state.t + dt)
+
+
+def advance(state: DriftState, dt: float, key: jax.Array,
+            cfg: DriftConfig = DEFAULT_DRIFT) -> DriftState:
+    """One drift step of size ``dt``; pure and deterministic in ``key``."""
+    return _advance(state, jnp.asarray(dt, jnp.float32), key, cfg)
+
+
+def bias_deviation(state: DriftState) -> jax.Array:
+    """RMS phase-bias deviation from the anchor (radians) — a cheap
+    scalar diagnostic of how far the device has walked."""
+    du = state.dev.noise_u.bias - state.anchor.noise_u.bias
+    dv = state.dev.noise_v.bias - state.anchor.noise_v.bias
+    return jnp.sqrt(jnp.mean(jnp.concatenate(
+        [du.reshape(-1), dv.reshape(-1)]) ** 2))

@@ -1,0 +1,276 @@
+"""Fleet registry + health-aware router for many virtual chip instances.
+
+A production ONN deployment is not one chip: it is N boards, each with
+an independent manufacturing realization and an independent drift
+clock.  This module keeps the registry and routes serve traffic around
+unhealthy devices, the scheduler/router idiom of LLM serving stacks
+(sglang-style: requests never block on maintenance work; recalibration
+runs out-of-band on a bounded number of "repair slots").
+
+Per-chip state machine (see ``runtime/__init__`` for the full DESIGN
+note)::
+
+    HEALTHY ──probe d̂ > alarm (×consecutive)──▶ DEGRADED
+    DEGRADED ──repair slot free──▶ RECALIBRATING   (not routable)
+    RECALIBRATING ──job done, probe d̂ < clear──▶ HEALTHY
+                 └─ probe still above clear ──▶ DEGRADED (re-queued)
+
+DEGRADED chips still serve (stale but functional — better than dropping
+traffic); RECALIBRATING chips are never dispatched to.  The router
+prefers HEALTHY chips and falls back to DEGRADED ones only when no
+healthy chip is available, balancing by least-served.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import unitary as un
+from ..core.mapping import parallel_map
+from ..core.noise import NoiseModel, DEFAULT_NOISE
+from ..core.ptc import blockize
+from .drift import DriftConfig, DriftState, init_drift, advance, DEFAULT_DRIFT
+from .monitor import (MonitorConfig, HealthState, realized_blocks,
+                      probe_mapping_distance, true_mapping_distance,
+                      update_health, clear_health, probe_ptc_calls)
+from .recalibrate import RecalConfig, recalibrate
+
+__all__ = ["HEALTHY", "DEGRADED", "RECALIBRATING", "RuntimeConfig",
+           "Chip", "FleetRouter", "make_chip", "make_fleet"]
+
+HEALTHY = "healthy"
+DEGRADED = "degraded"
+RECALIBRATING = "recalibrating"
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    """Static policy knobs for one fleet."""
+
+    k: int = 6
+    kind: str = "clements"
+    # Chips join the fleet after burn-in Identity Calibration, so the
+    # serving noise frame is post-IC: the static Φ_b is compensated
+    # (Q/Γ/Ω remain) and *drift* walks fresh bias on top of it.
+    noise: NoiseModel = DEFAULT_NOISE.post_ic()
+    drift: DriftConfig = DEFAULT_DRIFT
+    monitor: MonitorConfig = MonitorConfig()
+    recal: RecalConfig = RecalConfig()
+    probe_every: int = 10        # ticks between health checks per chip
+    recal_latency: int = 4       # ticks a recal job occupies the chip
+    max_concurrent_recals: int = 1  # repair-slot bandwidth
+
+
+@dataclasses.dataclass
+class Chip:
+    """One virtual chip: a mapped weight + its drifting realization."""
+
+    chip_id: int
+    m: int
+    n: int
+    w_blocks: jax.Array          # (B, k, k) mapping targets
+    phi: jax.Array               # (B, 2T) commanded phases
+    sigma: jax.Array             # (B, k) attenuator settings
+    drift: DriftState
+    health: HealthState
+    status: str = HEALTHY
+    recal_ticks_left: int = 0
+    # counters
+    served: int = 0
+    alarms: int = 0
+    recals: int = 0
+    probe_calls: float = 0.0
+    recal_calls: float = 0.0
+
+    @property
+    def routable(self) -> bool:
+        return self.status != RECALIBRATING
+
+
+def make_chip(key: jax.Array, chip_id: int, w: jax.Array,
+              cfg: RuntimeConfig) -> Chip:
+    """Deploy ``w`` onto a fresh device: PM (commanded-SVD + OSP; Σ
+    absorbs most of the residual, the cheap large-model mode) and start
+    the drift clock."""
+    pm = parallel_map(key, w, cfg.k, cfg.noise, kind=cfg.kind, run_zo=False)
+    b = pm.phi_u.shape[0]
+    phi = jnp.concatenate([pm.phi_u, pm.phi_v], axis=-1)
+    sigma = pm.params.s.reshape(b, cfg.k)
+    w_blocks = blockize(w, cfg.k).reshape(b, cfg.k, cfg.k)
+    health = HealthState(distance=float(np.asarray(pm.err_osp).mean()))
+    return Chip(chip_id=chip_id, m=w.shape[0], n=w.shape[1],
+                w_blocks=w_blocks, phi=phi, sigma=sigma,
+                drift=init_drift(pm.dev), health=health)
+
+
+def make_fleet(key: jax.Array, n_chips: int, w: jax.Array,
+               cfg: RuntimeConfig) -> list[Chip]:
+    """N chips serving the same logical weight, each with an independent
+    realization (different manufacturing draw + drift path)."""
+    keys = jax.random.split(key, n_chips)
+    return [make_chip(keys[i], i, w, cfg) for i in range(n_chips)]
+
+
+class FleetRouter:
+    """Dispatches serve traffic; drives drift, probes, and repair jobs.
+
+    The router owns virtual time: one :meth:`tick` = one scheduling
+    quantum (drift advances on every chip, due health checks run, repair
+    jobs count down / complete).  ``dispatch``/``serve`` picks a chip for
+    one batch; RECALIBRATING chips are structurally unroutable.
+    """
+
+    def __init__(self, chips: list[Chip], cfg: RuntimeConfig,
+                 seed: int = 0, recal_enabled: bool = True):
+        if not chips:
+            raise ValueError("fleet must contain at least one chip")
+        self.chips = chips
+        self.cfg = cfg
+        self.recal_enabled = recal_enabled
+        self.tick_count = 0
+        self.dropped = 0             # batches with no routable chip
+        self.events: list[dict] = []
+        self._key = jax.random.PRNGKey(seed)
+        self._spec = un.mesh_spec(cfg.k, cfg.kind)
+
+    # -- key plumbing -------------------------------------------------------
+
+    def _next_key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    # -- routing ------------------------------------------------------------
+
+    def dispatch(self) -> Optional[Chip]:
+        """Pick the least-served routable chip, preferring HEALTHY."""
+        for pool in (HEALTHY, DEGRADED):
+            cands = [c for c in self.chips if c.status == pool]
+            if cands:
+                return min(cands, key=lambda c: c.served)
+        return None
+
+    def serve(self, x: jax.Array) -> tuple[Optional[jax.Array], Optional[int]]:
+        """Route one batch ``x`` (..., n) through a chip's realized
+        (drifted!) transfer function.  Returns (y, chip_id); (None, None)
+        if every chip is mid-recalibration (counted as ``dropped``)."""
+        chip = self.dispatch()
+        if chip is None:
+            self.dropped += 1
+            return None, None
+        y = _chip_forward(self._spec, chip.phi, chip.sigma,
+                          chip.drift.dev, self.cfg.noise, x, chip.m)
+        chip.served += 1
+        return y, chip.chip_id
+
+    # -- the closed loop ----------------------------------------------------
+
+    def tick(self, dt: float = 1.0) -> None:
+        """Advance virtual time: drift every chip, run due probes, fire
+        alarms, schedule/complete out-of-band recalibration jobs."""
+        cfg = self.cfg
+        self.tick_count += 1
+        in_repair = sum(c.status == RECALIBRATING for c in self.chips)
+
+        for chip in self.chips:
+            chip.drift = advance(chip.drift, dt, self._next_key(), cfg.drift)
+
+            if chip.status == RECALIBRATING:
+                chip.recal_ticks_left -= 1
+                if chip.recal_ticks_left <= 0:
+                    self._finish_recal(chip)
+                    in_repair -= 1
+                continue
+
+            if self.tick_count % cfg.probe_every == 0:
+                self._probe(chip)
+
+            if (chip.health.alarmed and self.recal_enabled
+                    and in_repair < cfg.max_concurrent_recals):
+                chip.status = RECALIBRATING
+                chip.recal_ticks_left = cfg.recal_latency
+                in_repair += 1
+                self.events.append(dict(tick=self.tick_count, event="recal_start",
+                                        chip=chip.chip_id))
+
+    def _probe(self, chip: Chip) -> None:
+        cfg = self.cfg
+        est = probe_mapping_distance(
+            self._next_key(), self._spec, chip.phi, chip.sigma,
+            chip.drift.dev, cfg.noise, chip.w_blocks, cfg.monitor.n_probes)
+        was_alarmed = chip.health.alarmed
+        chip.health = update_health(chip.health, float(est), cfg.monitor)
+        chip.probe_calls += probe_ptc_calls(chip.m, chip.n, cfg.k,
+                                            cfg.monitor.n_probes)
+        if chip.health.alarmed and not was_alarmed:
+            chip.alarms += 1
+            chip.status = DEGRADED
+            self.events.append(dict(tick=self.tick_count, event="alarm",
+                                    chip=chip.chip_id,
+                                    distance=chip.health.distance))
+
+    def _finish_recal(self, chip: Chip) -> None:
+        """The out-of-band job lands: apply its result against the chip's
+        current (post-latency) drifted state and re-probe to clear."""
+        cfg = self.cfg
+        res = recalibrate(self._next_key(), self._spec, chip.phi, chip.sigma,
+                          chip.drift.dev, cfg.noise, chip.w_blocks, cfg.recal)
+        chip.phi, chip.sigma = res.phi, res.sigma
+        chip.recal_calls += res.ptc_calls
+        chip.recals += 1
+        est = probe_mapping_distance(
+            self._next_key(), self._spec, chip.phi, chip.sigma,
+            chip.drift.dev, cfg.noise, chip.w_blocks, cfg.monitor.n_probes)
+        chip.probe_calls += probe_ptc_calls(chip.m, chip.n, cfg.k,
+                                            cfg.monitor.n_probes)
+        chip.health = clear_health(chip.health, float(est), cfg.monitor)
+        chip.status = HEALTHY if not chip.health.alarmed else DEGRADED
+        self.events.append(dict(
+            tick=self.tick_count, event="recal_done", chip=chip.chip_id,
+            dist_before=float(res.dist_before),
+            dist_after=float(res.dist_after), status=chip.status))
+
+    # -- reporting ----------------------------------------------------------
+
+    def true_distances(self) -> list[float]:
+        """Exact per-chip mapping distances (simulator read-out)."""
+        return [float(true_mapping_distance(
+            self._spec, c.phi, c.sigma, c.drift.dev, self.cfg.noise,
+            c.w_blocks)) for c in self.chips]
+
+    def report(self) -> dict:
+        return dict(
+            ticks=self.tick_count,
+            dropped=self.dropped,
+            chips=[dict(chip=c.chip_id, status=c.status, served=c.served,
+                        distance=c.health.distance, alarms=c.alarms,
+                        recals=c.recals, probe_ptc_calls=c.probe_calls,
+                        recal_ptc_calls=c.recal_calls)
+                   for c in self.chips],
+            events=self.events,
+        )
+
+
+def _chip_forward(spec, phi, sigma, dev, model, x, out_dim):
+    """y = Ŵ x through the drifted realized blocks (paper dataflow:
+    per-block V* → Σ → U, electronic accumulation over q is implicit
+    here because each chip hosts a flat batch of blocks of one weight)."""
+    k = spec.k
+    w_hat = realized_blocks(spec, phi, sigma, dev, model)  # (B, k, k)
+    b = w_hat.shape[0]
+    # reassemble the (P, Q) grid from the flat block batch
+    p = -(-out_dim // k)
+    q = b // p
+    w = w_hat.reshape(p, q, k, k)
+    xb = x
+    n = q * k
+    if x.shape[-1] != n:
+        xb = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, n - x.shape[-1])])
+    xb = xb.reshape(x.shape[:-1] + (q, k))
+    y = jnp.einsum("pqij,...qj->...pi", w, xb)
+    y = y.reshape(x.shape[:-1] + (p * k,))
+    return y[..., :out_dim]

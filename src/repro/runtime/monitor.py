@@ -1,0 +1,163 @@
+"""Health probes + alarm logic for a deployed chip.
+
+On chip, the full realized transfer matrix is not observable for free —
+reading back all k columns of every block costs P·Q·k PTC calls.  The
+monitor instead estimates mapping fidelity *stochastically* from a
+handful of forward probes: random Gaussian inputs streamed through the
+(drifted) device, compared electronically against the target response,
+
+    d̂ = Σ_blocks ‖Ŵ x − W x‖² / Σ_blocks ‖W x‖²,
+
+an unbiased Hutchinson-style estimator of the fleet-level aggregate of
+``mapping.matrix_distance`` (exact in the limit of many probes; the
+exact readout is exposed as :func:`true_mapping_distance` for tests and
+benchmarks).  Chips parked in the post-IC identity state are probed the
+same way against ``Ĩ`` via :func:`probe_identity_distance`, which
+reduces to ``calibration.identity_mse`` at full readout.
+
+Alarm logic is hysteretic: ``consecutive`` probe estimates above
+``alarm_threshold`` raise the alarm (one noisy estimate never trips
+it); after recalibration the alarm clears only once a fresh probe falls
+below the *lower* ``clear_threshold``, so the loop cannot chatter
+around a single boundary.
+
+Probe overhead is costed with the paper's Appendix-G energy model
+(``core.profiler``): one probe column through a P×Q-block layer is
+P·Q PTC calls.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import unitary as un
+from ..core.calibration import (DeviceRealization, identity_mse,
+                                realized_unitaries)
+from ..core.noise import NoiseModel
+from ..core.profiler import linear_layer_spec, layer_cost
+from ..core.sparsity import SparsityConfig
+
+__all__ = ["MonitorConfig", "HealthState", "realized_blocks",
+           "aggregate_distance", "probe_mapping_distance",
+           "probe_identity_distance", "true_mapping_distance",
+           "update_health", "clear_health", "probe_ptc_calls"]
+
+
+class MonitorConfig(NamedTuple):
+    n_probes: int = 6            # probe columns per health check
+    alarm_threshold: float = 0.05  # d̂ above this (repeatedly) raises alarm
+    clear_threshold: float = 0.02  # recal must restore d̂ below this
+    consecutive: int = 2         # strikes before the alarm fires
+
+
+@dataclasses.dataclass
+class HealthState:
+    """Per-chip monitor state (python-level; the fleet registry owns it)."""
+
+    distance: float = 0.0        # latest probe estimate d̂
+    strikes: int = 0             # consecutive probes above alarm_threshold
+    alarmed: bool = False
+    probes: int = 0              # health checks performed
+
+
+def realized_blocks(spec: un.MeshSpec, phi: jax.Array, sigma: jax.Array,
+                    dev: DeviceRealization, model: NoiseModel) -> jax.Array:
+    """Ŵ blocks the drifted device currently implements for commanded
+    phases ``phi = [Φ^U | Φ^V]`` (..., 2T) and attenuators ``sigma``.
+
+    The single definition of the runtime's transfer function — the
+    monitor scores it, ``recalibrate`` optimizes it, and the fleet
+    serves through it, so all three always see the same physics."""
+    t = spec.n_rot
+    u, v = realized_unitaries(spec, phi[..., :t], phi[..., t:], dev, model)
+    return (u * sigma[..., None, :]) @ v
+
+
+def aggregate_distance(w_hat: jax.Array, w_blocks: jax.Array) -> jax.Array:
+    """Fleet-level scalar: Σ_blocks‖Ŵ−W‖² / Σ_blocks‖W‖² (the aggregate
+    of ``mapping.matrix_distance`` over a chip's block batch)."""
+    num = jnp.sum((w_hat - w_blocks) ** 2, axis=(-2, -1))
+    den = jnp.sum(w_blocks ** 2, axis=(-2, -1)) + 1e-12
+    return jnp.sum(num) / jnp.sum(den)
+
+
+@jax.jit
+def _probe_estimate(w_hat: jax.Array, w_blocks: jax.Array,
+                    x: jax.Array) -> jax.Array:
+    y_hat = jnp.einsum("bij,nj->bni", w_hat, x)
+    y_ref = jnp.einsum("bij,nj->bni", w_blocks, x)
+    num = jnp.sum((y_hat - y_ref) ** 2)
+    den = jnp.sum(y_ref ** 2) + 1e-12
+    return num / den
+
+
+def probe_mapping_distance(key: jax.Array, spec: un.MeshSpec,
+                           phi: jax.Array, sigma: jax.Array,
+                           dev: DeviceRealization, model: NoiseModel,
+                           w_blocks: jax.Array, n_probes: int) -> jax.Array:
+    """Stochastic estimate of the aggregate mapping distance from
+    ``n_probes`` Gaussian forward probes (shared across blocks)."""
+    k = w_blocks.shape[-1]
+    x = jax.random.normal(key, (n_probes, k))
+    w_hat = realized_blocks(spec, phi, sigma, dev, model)
+    return _probe_estimate(w_hat, w_blocks, x)
+
+
+def true_mapping_distance(spec: un.MeshSpec, phi: jax.Array,
+                          sigma: jax.Array, dev: DeviceRealization,
+                          model: NoiseModel, w_blocks: jax.Array) -> jax.Array:
+    """Exact aggregate distance (full transfer-matrix readout) —
+    the probe estimator's ground truth."""
+    return aggregate_distance(realized_blocks(spec, phi, sigma, dev, model),
+                              w_blocks)
+
+
+def probe_identity_distance(key: jax.Array, spec: un.MeshSpec,
+                            phi: jax.Array, dev: DeviceRealization,
+                            model: NoiseModel, n_probes: int) -> jax.Array:
+    """Identity-state health: probe ``n_probes`` random basis columns of
+    the realized U/V* and score them against Ĩ columns (sign-agnostic).
+    With ``n_probes >= k`` this equals ``identity_mse`` over both meshes.
+    """
+    t = spec.n_rot
+    k = spec.k
+    u, v = realized_unitaries(spec, phi[..., :t], phi[..., t:], dev, model)
+    if n_probes >= k:
+        return (jnp.mean(identity_mse(u)) + jnp.mean(identity_mse(v))) / 2.0
+    cols = jax.random.choice(key, k, (n_probes,), replace=False)
+    eye = jnp.eye(k)[:, cols]
+    err_u = jnp.mean((jnp.abs(u[..., :, cols]) - eye) ** 2)
+    err_v = jnp.mean((jnp.abs(v[..., :, cols]) - eye) ** 2)
+    return (err_u + err_v) / 2.0
+
+
+def update_health(h: HealthState, estimate: float,
+                  cfg: MonitorConfig) -> HealthState:
+    """Fold one probe estimate into the alarm state (hysteretic)."""
+    est = float(estimate)
+    strikes = h.strikes + 1 if est > cfg.alarm_threshold else 0
+    alarmed = h.alarmed or strikes >= cfg.consecutive
+    return HealthState(distance=est, strikes=strikes, alarmed=alarmed,
+                       probes=h.probes + 1)
+
+
+def clear_health(h: HealthState, estimate: float,
+                 cfg: MonitorConfig) -> HealthState:
+    """Post-recalibration check: clear the alarm only below the lower
+    hysteresis threshold; otherwise the alarm stays raised."""
+    est = float(estimate)
+    ok = est < cfg.clear_threshold
+    return HealthState(distance=est, strikes=0 if ok else h.strikes,
+                       alarmed=not ok if h.alarmed else False,
+                       probes=h.probes + 1)
+
+
+def probe_ptc_calls(m: int, n: int, k: int, n_probes: int) -> float:
+    """PTC-call cost of one health check (Appendix-G energy model):
+    ``n_probes`` columns through the P×Q block grid."""
+    spec = linear_layer_spec("health_probe", m, n, n_probes, k=k)
+    return layer_cost(spec, SparsityConfig(), inference_only=True).e_fwd

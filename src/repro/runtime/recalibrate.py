@@ -1,0 +1,128 @@
+"""Closed-loop recalibration: incremental ZO + OSP refresh (+ in-situ Σ).
+
+When the monitor raises an alarm, the runtime does NOT redo the full
+cold-start IC→PM flow (hundreds of thousands of probes).  Drift is
+small and continuous, so the current commanded phases are an excellent
+warm start: a short alternate ZCD search (the same hardware-restricted
+search ``optim.zo`` used for IC/PM, §3.2–3.3) re-absorbs the walked
+phase biases at a fraction of the cold-start budget.  The Σ attenuators
+are then refreshed analytically with OSP (``mapping.osp``, Claim 1) on
+the freshly realized bases — on chip this is two reciprocal PTC probes
+per block and sign flips cancel on the diagonal.
+
+Optionally, a few *subspace-learning* steps follow: stochastic in-situ
+gradient descent on Σ against Gaussian forward probes, using exactly
+the paper's Eq.-5 reciprocity structure
+
+    ∂L/∂Σ = (Uᵀ r) ⊙ (V* x),   r = Ŵx − Wx,
+
+which approaches the OSP optimum without any full matrix readout — the
+fast-adaptation mode for chips whose target is a live training state
+rather than a frozen weight.
+
+All stages run vmapped across the chip's blocks (independent physical
+circuits), mirroring IC/PM's batched-sub-task scalability trick.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import unitary as un
+from ..core.calibration import DeviceRealization, realized_unitaries
+from ..core.mapping import matrix_distance, osp
+from ..core.noise import NoiseModel
+from ..optim.zo import ZOConfig, zo_minimize
+from .monitor import aggregate_distance, true_mapping_distance
+
+__all__ = ["RecalConfig", "RecalResult", "recalibrate"]
+
+
+class RecalConfig(NamedTuple):
+    zo_steps: int = 400          # warm-start ZCD probe steps per block
+    inner: int | None = None     # decay period (default 2T)
+    delta0: float = 0.05         # small initial step — we are near-optimal
+    decay: float = 1.05
+    method: str = "zcd"
+    sl_steps: int = 0            # optional in-situ Σ fine-tune steps
+    sl_lr: float = 0.2
+    sl_probes: int = 8           # probe columns per Σ step
+
+
+class RecalResult(NamedTuple):
+    phi: jax.Array               # refreshed commanded phases, (B, 2T)
+    sigma: jax.Array             # refreshed attenuators, (B, k)
+    dist_before: jax.Array       # aggregate distance walking in
+    dist_after_zo: jax.Array     # ... after the warm ZO stage
+    dist_after: jax.Array        # ... after OSP (+ SL) — the recovery point
+    ptc_calls: float             # probe budget spent by this job
+
+
+def recalibrate(key: jax.Array, spec: un.MeshSpec, phi: jax.Array,
+                sigma: jax.Array, dev: DeviceRealization, model: NoiseModel,
+                w_blocks: jax.Array, cfg: RecalConfig = RecalConfig()
+                ) -> RecalResult:
+    """Refresh ``(phi, sigma)`` against the drifted ``dev``.
+
+    ``phi``: (B, 2T) commanded phases (U‖V), ``sigma``: (B, k),
+    ``w_blocks``: (B, k, k) mapping targets.  The device is treated as
+    frozen for the duration of the job (recal is fast vs. drift).
+    """
+    t = spec.n_rot
+    b, k = sigma.shape
+
+    def block_err(ph, dev_b, w_b, s_b):
+        u, v = realized_unitaries(spec, ph[:t], ph[t:], dev_b, model)
+        return matrix_distance((u * s_b) @ v, w_b)
+
+    dist_before = true_mapping_distance(spec, phi, sigma, dev, model,
+                                        w_blocks)
+
+    # Stage 1 — incremental ZO, warm-started from the current phases.
+    zo_cfg = ZOConfig(steps=cfg.zo_steps, inner=cfg.inner or 2 * t,
+                      delta0=cfg.delta0, decay=cfg.decay)
+    kz, ks = jax.random.split(key)
+    keys = jax.random.split(kz, b)
+
+    def solve_one(phi_b, key_b, dev_b, w_b, s_b):
+        return zo_minimize(lambda ph: block_err(ph, dev_b, w_b, s_b),
+                           phi_b, key_b, zo_cfg, method=cfg.method,
+                           alt_split=t)
+
+    res = jax.jit(jax.vmap(solve_one))(phi, keys, dev, w_blocks, sigma)
+    phi_new = res.x
+    # each ZCD step issues ≤2 transfer-matrix evaluations of k columns
+    ptc_calls = float(cfg.zo_steps * 2 * b * k)
+
+    u, v = realized_unitaries(spec, phi_new[:, :t], phi_new[:, t:],
+                              dev, model)
+    dist_after_zo = aggregate_distance((u * sigma[..., None, :]) @ v,
+                                       w_blocks)
+
+    # Stage 2 — OSP refresh (Claim 1): two reciprocal probes per block.
+    sigma_new = osp(u, v, w_blocks)
+    ptc_calls += float(2 * b * k)
+
+    # Stage 3 — optional in-situ stochastic Σ descent (Eq.-5 structure).
+    if cfg.sl_steps > 0:
+        def sl_step(s, key_i):
+            x = jax.random.normal(key_i, (cfg.sl_probes, k))
+            w_hat = (u * s[..., None, :]) @ v
+            r = jnp.einsum("bij,nj->bni", w_hat - w_blocks, x)  # residual probes
+            ur = jnp.einsum("bji,bnj->bni", u, r)               # Uᵀ r
+            vx = jnp.einsum("bij,nj->bni", v, x)                # V* x
+            g = jnp.einsum("bni,bni->bi", ur, vx) / cfg.sl_probes
+            return s - cfg.sl_lr * g, None
+
+        sigma_new, _ = jax.lax.scan(
+            sl_step, sigma_new, jax.random.split(ks, cfg.sl_steps))
+        ptc_calls += float(cfg.sl_steps * cfg.sl_probes * b * 2)
+
+    dist_after = aggregate_distance(
+        (u * sigma_new[..., None, :]) @ v, w_blocks)
+    return RecalResult(phi=phi_new, sigma=sigma_new,
+                       dist_before=dist_before, dist_after_zo=dist_after_zo,
+                       dist_after=dist_after, ptc_calls=ptc_calls)

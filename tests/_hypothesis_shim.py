@@ -1,0 +1,79 @@
+"""Minimal drop-in stand-in for the `hypothesis` API used by this suite.
+
+The property tests only need ``@settings``, ``@given`` and three strategy
+constructors (`integers`, `floats`, `sampled_from`).  When the real
+`hypothesis` package is unavailable (it is an optional dev extra, see
+pyproject.toml), this shim runs each property as a deterministic, seeded
+sweep of examples so the suite still collects and exercises the
+properties.  It intentionally implements no shrinking or database — with
+`hypothesis` installed the real library is used instead (see the
+``try/except ImportError`` at each test module's top).
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+# Cap the number of examples when running under the shim: without
+# shrinking there is little value in large sweeps, and shape-polymorphic
+# jax tests pay a retrace per example.
+_SHIM_MAX_EXAMPLES = 10
+
+
+class settings:  # noqa: N801 - mirrors the hypothesis name
+    def __init__(self, max_examples: int = 20, deadline=None, **_ignored):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._shim_max_examples = min(self.max_examples, _SHIM_MAX_EXAMPLES)
+        return fn
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class strategies:  # noqa: N801 - mirrors `from hypothesis import strategies`
+    @staticmethod
+    def integers(min_value, max_value) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value, max_value) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(options) -> _Strategy:
+        opts = list(options)
+        return _Strategy(lambda rng: opts[rng.randrange(len(opts))])
+
+
+def given(**strats):
+    """Run the property over a deterministic seeded sweep of examples."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_shim_max_examples", None)
+            if n is None:
+                n = min(20, _SHIM_MAX_EXAMPLES)
+            # Seed from the test name so every run draws the same examples.
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                drawn = {k: s.draw(rng) for k, s in sorted(strats.items())}
+                fn(*args, **drawn, **kwargs)
+
+        # Hide the property arguments from pytest's fixture resolution:
+        # the wrapper itself takes none (every argument is drawn here).
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return deco

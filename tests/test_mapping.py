@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev extra; shim keeps properties running
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core.noise import NoiseModel, IDEAL
 from repro.core.mapping import parallel_map, osp, matrix_distance

@@ -1,0 +1,276 @@
+"""Closed-loop runtime: drift, monitor, recalibration, fleet routing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import unitary as un
+from repro.core.calibration import sample_device
+from repro.core.noise import NoiseModel, DEFAULT_NOISE, IDEAL
+from repro.runtime.drift import (DriftConfig, init_drift, advance,
+                                 bias_deviation)
+from repro.runtime.monitor import (MonitorConfig, HealthState,
+                                   probe_mapping_distance,
+                                   probe_identity_distance,
+                                   true_mapping_distance, update_health,
+                                   clear_health, probe_ptc_calls)
+from repro.runtime.recalibrate import RecalConfig, recalibrate
+from repro.runtime.fleet import (RuntimeConfig, FleetRouter, make_chip,
+                                 make_fleet, HEALTHY, DEGRADED,
+                                 RECALIBRATING)
+
+K = 4
+DIM = 8
+POST_IC = DEFAULT_NOISE.post_ic()
+
+
+def _small_cfg(**kw):
+    defaults = dict(
+        k=K, noise=POST_IC,
+        drift=DriftConfig(sigma_phase=0.03, theta=0.01),
+        monitor=MonitorConfig(n_probes=8, alarm_threshold=0.05,
+                              clear_threshold=0.03, consecutive=2),
+        recal=RecalConfig(zo_steps=200, delta0=0.05),
+        probe_every=5, recal_latency=2, max_concurrent_recals=1)
+    defaults.update(kw)
+    return RuntimeConfig(**defaults)
+
+
+def _weight(seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((DIM, DIM)) / np.sqrt(DIM),
+                       jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# drift
+# ---------------------------------------------------------------------------
+
+
+def test_drift_deterministic_under_fixed_seed():
+    cfg = _small_cfg()
+    chip = make_chip(jax.random.PRNGKey(0), 0, _weight(), cfg)
+
+    def run():
+        st = chip.drift
+        for t in range(10):
+            st = advance(st, 1.0, jax.random.fold_in(jax.random.PRNGKey(7), t),
+                         cfg.drift)
+        return st
+
+    s1, s2 = run(), run()
+    np.testing.assert_array_equal(np.asarray(s1.dev.noise_u.bias),
+                                  np.asarray(s2.dev.noise_u.bias))
+    np.testing.assert_array_equal(np.asarray(s1.dev.noise_v.gamma),
+                                  np.asarray(s2.dev.noise_v.gamma))
+    assert float(s1.t) == 10.0
+
+
+def test_drift_moves_device_and_preserves_anchor():
+    cfg = _small_cfg()
+    chip = make_chip(jax.random.PRNGKey(1), 0, _weight(1), cfg)
+    st0 = chip.drift
+    assert float(bias_deviation(st0)) == 0.0
+    st = advance(st0, 1.0, jax.random.PRNGKey(3), cfg.drift)
+    assert float(bias_deviation(st)) > 0.0
+    # the anchor (manufacturing state) never moves; signs are topological
+    np.testing.assert_array_equal(np.asarray(st.anchor.noise_u.bias),
+                                  np.asarray(st0.anchor.noise_u.bias))
+    np.testing.assert_array_equal(np.asarray(st.dev.d_u),
+                                  np.asarray(st0.dev.d_u))
+
+
+def test_drift_degrades_mapping_distance():
+    cfg = _small_cfg()
+    chip = make_chip(jax.random.PRNGKey(2), 0, _weight(2), cfg)
+    spec = un.mesh_spec(K, cfg.kind)
+    d0 = float(true_mapping_distance(spec, chip.phi, chip.sigma,
+                                     chip.drift.dev, cfg.noise,
+                                     chip.w_blocks))
+    st = chip.drift
+    for t in range(60):
+        st = advance(st, 1.0, jax.random.fold_in(jax.random.PRNGKey(11), t),
+                     cfg.drift)
+    d1 = float(true_mapping_distance(spec, chip.phi, chip.sigma, st.dev,
+                                     cfg.noise, chip.w_blocks))
+    assert d1 > d0 * 2, (d0, d1)
+
+
+# ---------------------------------------------------------------------------
+# monitor
+# ---------------------------------------------------------------------------
+
+
+def test_probe_estimates_true_distance():
+    cfg = _small_cfg()
+    chip = make_chip(jax.random.PRNGKey(4), 0, _weight(4), cfg)
+    spec = un.mesh_spec(K, cfg.kind)
+    st = chip.drift
+    for t in range(40):
+        st = advance(st, 1.0, jax.random.fold_in(jax.random.PRNGKey(13), t),
+                     cfg.drift)
+    true = float(true_mapping_distance(spec, chip.phi, chip.sigma, st.dev,
+                                       cfg.noise, chip.w_blocks))
+    ests = [float(probe_mapping_distance(
+        jax.random.PRNGKey(100 + i), spec, chip.phi, chip.sigma, st.dev,
+        cfg.noise, chip.w_blocks, 16)) for i in range(8)]
+    assert abs(np.mean(ests) - true) < 0.5 * true + 1e-3
+
+
+def test_alarm_fires_exactly_at_threshold_policy():
+    cfg = MonitorConfig(alarm_threshold=0.05, clear_threshold=0.02,
+                        consecutive=2)
+    h = HealthState()
+    # below threshold: never alarms, strikes reset
+    h = update_health(h, 0.04, cfg)
+    assert not h.alarmed and h.strikes == 0
+    # one strike is not enough (hysteresis against probe noise)
+    h = update_health(h, 0.06, cfg)
+    assert not h.alarmed and h.strikes == 1
+    # a dip resets the streak
+    h = update_health(h, 0.01, cfg)
+    assert not h.alarmed and h.strikes == 0
+    # two consecutive strikes fire
+    h = update_health(h, 0.07, cfg)
+    h = update_health(h, 0.08, cfg)
+    assert h.alarmed and h.strikes == 2
+    # clearing requires the LOWER threshold
+    h = clear_health(h, 0.04, cfg)       # above clear_threshold: stays up
+    assert h.alarmed
+    h = clear_health(h, 0.01, cfg)
+    assert not h.alarmed
+
+
+def test_probe_identity_distance_branches():
+    """Identity-state probing: zero for a perfect (sign-flipped) identity
+    chip in both the full-readout and sampled-columns branches; positive
+    once the commanded phases are perturbed."""
+    spec = un.mesh_spec(K, "clements")
+    dev = sample_device(jax.random.PRNGKey(0), (3,), K, IDEAL)
+    phi = jnp.zeros((3, 2 * spec.n_rot))
+    key = jax.random.PRNGKey(1)
+    full = float(probe_identity_distance(key, spec, phi, dev, IDEAL,
+                                         n_probes=K))
+    sampled = float(probe_identity_distance(key, spec, phi, dev, IDEAL,
+                                            n_probes=2))
+    assert full < 1e-10 and sampled < 1e-10
+    bad = phi.at[:, 0].add(0.5)
+    assert float(probe_identity_distance(key, spec, bad, dev, IDEAL,
+                                         n_probes=K)) > 1e-3
+    assert float(probe_identity_distance(key, spec, bad, dev, IDEAL,
+                                         n_probes=2)) >= 0.0
+
+
+def test_probe_cost_matches_profiler_grid():
+    # one probe column through a P×Q grid = P·Q PTC calls
+    assert probe_ptc_calls(DIM, DIM, K, 1) == (DIM // K) ** 2
+    assert probe_ptc_calls(DIM, DIM, K, 6) == 6 * (DIM // K) ** 2
+
+
+# ---------------------------------------------------------------------------
+# recalibration
+# ---------------------------------------------------------------------------
+
+
+def test_recalibration_restores_distance_below_threshold():
+    cfg = _small_cfg()
+    chip = make_chip(jax.random.PRNGKey(5), 0, _weight(5), cfg)
+    spec = un.mesh_spec(K, cfg.kind)
+    st = chip.drift
+    for t in range(80):
+        st = advance(st, 1.0, jax.random.fold_in(jax.random.PRNGKey(17), t),
+                     cfg.drift)
+    res = recalibrate(jax.random.PRNGKey(6), spec, chip.phi, chip.sigma,
+                      st.dev, cfg.noise, chip.w_blocks, cfg.recal)
+    assert float(res.dist_before) > cfg.monitor.alarm_threshold
+    assert float(res.dist_after) < cfg.monitor.alarm_threshold
+    assert float(res.dist_after) < float(res.dist_before)
+    assert res.ptc_calls > 0
+    # the result is self-consistent with an exact read-out
+    d = float(true_mapping_distance(spec, res.phi, res.sigma, st.dev,
+                                    cfg.noise, chip.w_blocks))
+    np.testing.assert_allclose(d, float(res.dist_after), rtol=1e-5)
+
+
+def test_recal_sl_steps_approach_osp():
+    """In-situ stochastic Σ descent must not undo the OSP refresh."""
+    cfg = _small_cfg(recal=RecalConfig(zo_steps=100, delta0=0.05,
+                                       sl_steps=20, sl_probes=8))
+    chip = make_chip(jax.random.PRNGKey(8), 0, _weight(8), cfg)
+    spec = un.mesh_spec(K, cfg.kind)
+    st = chip.drift
+    for t in range(40):
+        st = advance(st, 1.0, jax.random.fold_in(jax.random.PRNGKey(19), t),
+                     cfg.drift)
+    res = recalibrate(jax.random.PRNGKey(9), spec, chip.phi, chip.sigma,
+                      st.dev, cfg.noise, chip.w_blocks, cfg.recal)
+    assert float(res.dist_after) <= float(res.dist_before)
+
+
+# ---------------------------------------------------------------------------
+# fleet routing
+# ---------------------------------------------------------------------------
+
+
+def test_router_never_dispatches_mid_recalibration():
+    cfg = _small_cfg()
+    chips = make_fleet(jax.random.PRNGKey(10), 3, _weight(10), cfg)
+    router = FleetRouter(chips, cfg, seed=0)
+    chips[1].status = RECALIBRATING
+    for _ in range(20):
+        c = router.dispatch()
+        assert c is not None and c.chip_id != 1
+        c.served += 0  # dispatch() itself must not mutate
+    # all chips in repair → no dispatch, drop is accounted
+    for c in chips:
+        c.status = RECALIBRATING
+    y, cid = router.serve(jnp.ones((2, DIM)))
+    assert y is None and cid is None and router.dropped == 1
+
+
+def test_closed_loop_simulation_invariants():
+    """Aggressive drift: alarms fire, recals run, serving never routes to
+    a chip in repair, and no batch is dropped (N−1 chips stay up)."""
+    cfg = _small_cfg()
+    chips = make_fleet(jax.random.PRNGKey(12), 3, _weight(12), cfg)
+    router = FleetRouter(chips, cfg, seed=1)
+    for t in range(1, 61):
+        statuses = {c.chip_id: c.status for c in router.chips}
+        y, cid = router.serve(jnp.ones((2, DIM)))
+        if cid is not None:
+            assert statuses[cid] != RECALIBRATING
+        router.tick()
+    rep = router.report()
+    assert rep["dropped"] == 0
+    assert sum(c["alarms"] for c in rep["chips"]) > 0
+    assert sum(c["recals"] for c in rep["chips"]) > 0
+    # recal_done events restore below the alarm threshold
+    done = [e for e in rep["events"] if e["event"] == "recal_done"]
+    assert done and all(e["dist_after"] < cfg.monitor.alarm_threshold
+                        for e in done)
+    # repair bandwidth respected at every event boundary
+    assert sum(c["served"] for c in rep["chips"]) == 60
+
+
+def test_fleet_chips_are_independent_realizations():
+    cfg = _small_cfg()
+    chips = make_fleet(jax.random.PRNGKey(14), 2, _weight(14), cfg)
+    g0 = np.asarray(chips[0].drift.dev.noise_u.gamma)
+    g1 = np.asarray(chips[1].drift.dev.noise_u.gamma)
+    assert not np.allclose(g0, g1)
+    # but they serve the same logical weight
+    np.testing.assert_array_equal(np.asarray(chips[0].w_blocks),
+                                  np.asarray(chips[1].w_blocks))
+
+
+def test_router_prefers_healthy_and_balances_load():
+    cfg = _small_cfg()
+    chips = make_fleet(jax.random.PRNGKey(15), 3, _weight(15), cfg)
+    router = FleetRouter(chips, cfg, seed=2)
+    chips[0].status = DEGRADED
+    for _ in range(10):
+        c = router.dispatch()
+        assert c.status == HEALTHY
+        c.served += 1
+    assert abs(chips[1].served - chips[2].served) <= 1

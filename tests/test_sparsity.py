@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev extra; shim keeps properties running
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core.sparsity import (SparsityConfig, feedback_mask, column_mask,
                                  smd_keep_iteration, accumulation_depths)
