@@ -17,7 +17,7 @@ import numpy as np
 from repro.core.noise import NoiseModel
 from repro.core.mapping import parallel_map
 from repro.core.calibration import calibrate_identity
-from repro.core.ptc import PTCParams, svd_factorize
+from repro.core.ptc import PTCParams
 from repro.core.subspace import ptc_linear
 from repro.optim.zo import ZOConfig
 from repro.optim.optimizers import AdamWConfig, init_opt_state, apply_updates

@@ -79,7 +79,9 @@ def main(budget: str = "quick") -> None:
                                    cfg.monitor.clear_threshold)
     probe_calls = sum(c["probe_ptc_calls"] for c in rep_c["chips"])
     recal_calls = sum(c["recal_ptc_calls"] for c in rep_c["chips"])
-    serve_calls = rep_c["serve_ptc_calls"]
+    # serve cost is now metered per chip by its driver (Appendix-G
+    # PTC calls), not reconstructed from the profiler
+    serve_calls = sum(c["serve_ptc_calls"] for c in rep_c["chips"])
 
     summary = dict(
         budget=budget, chips=chips, steps=steps,

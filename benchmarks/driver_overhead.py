@@ -1,0 +1,112 @@
+"""Driver-transport overhead: in-process twin vs JSON-over-pipe subprocess.
+
+The control-plane ABC costs nothing physically (same PTC-call budgets by
+construction — the conformance suite asserts bit-equal results), so the
+relevant question is *wall-clock*: what does the hardware-in-the-loop
+transport add per op?  This benchmark times the hot control-plane ops on
+both transports and emits:
+
+* ``driver_overhead.csv`` — per-op mean latency (ms) and throughput for
+  twin vs subprocess, plus the multiplier;
+* ``BENCH_driver_overhead.json`` — headline numbers (probe round-trip
+  latency, probe/serve throughput, zo_refine job wall time).
+
+    PYTHONPATH=src python -m benchmarks.driver_overhead [--budget quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ART, emit
+
+K = 4
+DIM = 12
+
+
+def _time_op(fn, iters: int) -> float:
+    """Mean wall seconds per call (after one warmup)."""
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters
+
+
+def _bench_transport(transport: str, iters: int, zo_steps: int) -> dict:
+    from repro.core.noise import DEFAULT_NOISE
+    from repro.hw import make_driver
+    from repro.hw.drift import DriftConfig
+    from repro.optim.zo import ZOConfig
+
+    b = (-(-DIM // K)) ** 2
+    driver = make_driver(transport, jax.random.PRNGKey(0), b, K,
+                         DEFAULT_NOISE.post_ic(), m=DIM, n=DIM,
+                         drift=DriftConfig(sigma_phase=0.01))
+    try:
+        rng = np.random.default_rng(0)
+        x_probe = jnp.asarray(rng.standard_normal((8, K)), jnp.float32)
+        x_serve = jnp.asarray(rng.standard_normal((16, DIM)), jnp.float32)
+        w_blocks = jnp.asarray(rng.standard_normal((b, K, K)) * 0.3,
+                               jnp.float32)
+        zo_cfg = ZOConfig(steps=zo_steps, inner=12, delta0=0.05, decay=1.05)
+
+        out = dict(
+            transport=transport,
+            probe_s=_time_op(lambda: driver.forward(x_probe), iters),
+            serve_s=_time_op(lambda: driver.forward_layer(x_serve), iters),
+            readback_s=_time_op(lambda: driver.readback_bases(), iters),
+            advance_s=_time_op(lambda: driver.advance(1.0), iters),
+            zo_refine_s=_time_op(
+                lambda: driver.zo_refine(w_blocks, jax.random.PRNGKey(1),
+                                         zo_cfg), max(2, iters // 10)),
+        )
+        out["probe_cols_per_s"] = x_probe.shape[0] / out["probe_s"]
+        out["serve_rows_per_s"] = x_serve.shape[0] / out["serve_s"]
+        return out
+    finally:
+        driver.close()
+
+
+def main(budget: str = "quick") -> None:
+    iters, zo_steps = (30, 60) if budget == "quick" else (150, 200)
+
+    results = {t: _bench_transport(t, iters, zo_steps)
+               for t in ("twin", "subprocess")}
+    tw, sp = results["twin"], results["subprocess"]
+
+    ops = ["probe_s", "serve_s", "readback_s", "advance_s", "zo_refine_s"]
+    rows = [[op[:-2], f"{tw[op] * 1e3:.3f}", f"{sp[op] * 1e3:.3f}",
+             f"{sp[op] / tw[op]:.2f}"] for op in ops]
+    emit("driver_overhead",
+         ["op", "twin_ms", "subprocess_ms", "overhead_x"], rows)
+
+    summary = dict(
+        budget=budget, k=K, dim=DIM, iters=iters, zo_steps=zo_steps,
+        twin=tw, subprocess=sp,
+        probe_rpc_overhead_ms=(sp["probe_s"] - tw["probe_s"]) * 1e3,
+        probe_throughput_ratio=sp["probe_cols_per_s"]
+        / tw["probe_cols_per_s"],
+        serve_throughput_ratio=sp["serve_rows_per_s"]
+        / tw["serve_rows_per_s"],
+        zo_job_overhead_frac=sp["zo_refine_s"] / tw["zo_refine_s"] - 1.0,
+    )
+    os.makedirs(ART, exist_ok=True)
+    path = os.path.join(ART, "BENCH_driver_overhead.json")
+    with open(path, "w") as f:
+        json.dump(summary, f, indent=2)
+    print(f"--- driver_overhead summary ({path}) ---")
+    print(json.dumps(summary, indent=2))
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", default="quick", choices=["quick", "normal"])
+    main(ap.parse_args().budget)

@@ -24,7 +24,6 @@ ART = os.path.join(os.path.dirname(__file__), "..", "bench_artifacts",
 def _variants():
     """variant name → (arch, shape, config-transform)"""
     from repro.configs import get_config
-    from repro.models.layers import PTCLinearCfg
 
     def base(arch):
         return get_config(arch)

@@ -60,7 +60,7 @@ def main() -> None:
 
     from . import (ic_convergence, blocksize_tables, mapping_osp,
                    grad_fidelity, sampling_table2, scalability,
-                   drift_recovery)
+                   drift_recovery, driver_overhead)
     benches = [
         ("fig4_ic_convergence", ic_convergence.main),
         ("tables345_blocksize", blocksize_tables.main),
@@ -69,6 +69,7 @@ def main() -> None:
         ("table2_sampling", sampling_table2.main),
         ("fig10_scalability", scalability.main),
         ("runtime_drift_recovery", drift_recovery.main),
+        ("hw_driver_overhead", driver_overhead.main),
     ]
     for name, fn in benches:
         if args.only and args.only not in name:

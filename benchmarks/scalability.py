@@ -9,7 +9,6 @@ costs.  We count PTC calls per optimization step for growing model sizes
 
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core.profiler import LayerSpec, layer_cost
 from repro.core.sparsity import SparsityConfig

@@ -5,7 +5,6 @@ frame embeddings).  [arXiv:2212.04356]
 Adaptations (DESIGN §3): sinusoidal positions → rotary; k=64 PTC blocks
 (d=512); DP-only sharding on the production mesh (dims < k·TP, the
 divisibility guard replicates automatically)."""
-import jax.numpy as jnp
 from ..models.lm import ArchConfig
 from ..models.layers import PTCLinearCfg
 

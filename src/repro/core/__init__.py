@@ -19,6 +19,6 @@ from .ptc import (  # noqa: F401
 )
 from .sparsity import SparsityConfig, DENSE, feedback_mask, column_mask  # noqa: F401
 from .subspace import ptc_linear, ptc_linear_ref, SubspaceMasks, sample_masks  # noqa: F401
-from .calibration import calibrate_identity, sample_device, ICResult  # noqa: F401
+from .calibration import calibrate_identity, ICResult  # noqa: F401
 from .mapping import parallel_map, osp, matrix_distance, PMResult  # noqa: F401
 from .profiler import LayerSpec, layer_cost, model_cost  # noqa: F401

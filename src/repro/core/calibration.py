@@ -13,8 +13,13 @@ column/row flips — harmless downstream, they cancel in OSP and in the
 in-situ Σ-gradient).  ``Σ_cal`` is a fixed, known, non-degenerate
 attenuator setting: distinct entries force the off-diagonals to zero.
 
-The search is pure ZO (``repro.optim.zo``), vmapped over every k×k block
-of every layer in parallel — blocks are independent physical circuits.
+This module is pure control-plane code: it decides the Σ_cal schedule
+and the ZO budget, then requests the in-situ search as a
+``driver.run_ic`` job through the :class:`~repro.hw.driver.PhotonicDriver`
+boundary — it never touches the device realization itself (the guard
+test in ``tests/test_driver.py`` enforces that).  Pass ``driver=`` to
+calibrate real/remote hardware; by default an in-process digital twin is
+sampled, which reproduces the pre-driver seed behavior exactly.
 """
 
 from __future__ import annotations
@@ -25,38 +30,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import unitary as un
-from .noise import NoiseModel, PhaseNoise, sample_phase_noise, apply_phase_noise
-from ..optim.zo import ZOConfig, zo_minimize
+from ..optim.zo import ZOConfig
 
-__all__ = ["DeviceRealization", "sample_device", "ICResult",
-           "calibrate_identity", "identity_mse", "calibration_sigma"]
-
-
-class DeviceRealization(NamedTuple):
-    """The fixed, unknown physical state of a batch of PTC blocks.
-
-    Sampled once per chip; IC exists because this is not observable.
-    Leading dims = block batch (e.g. (B,) flattened blocks).
-    """
-
-    noise_u: PhaseNoise     # Γ, Φ_b realizations for the U mesh
-    noise_v: PhaseNoise     # ... for the V* mesh
-    d_u: jax.Array          # ±1 manufacturing sign diagonals
-    d_v: jax.Array
-
-
-def sample_device(key: jax.Array, batch: tuple[int, ...], k: int,
-                  model: NoiseModel, kind: str = "clements"
-                  ) -> DeviceRealization:
-    spec = un.mesh_spec(k, kind)
-    t = spec.n_rot
-    ku, kv, kd1, kd2 = jax.random.split(key, 4)
-    nu = sample_phase_noise(ku, batch + (t,), model)
-    nv = sample_phase_noise(kv, batch + (t,), model)
-    d_u = jnp.where(jax.random.bernoulli(kd1, 0.5, batch + (k,)), 1.0, -1.0)
-    d_v = jnp.where(jax.random.bernoulli(kd2, 0.5, batch + (k,)), 1.0, -1.0)
-    return DeviceRealization(noise_u=nu, noise_v=nv, d_u=d_u, d_v=d_v)
+__all__ = ["ICResult", "calibrate_identity", "identity_mse",
+           "calibration_sigma"]
 
 
 def calibration_sigma(k: int, n_probes: int = 3, seed: int = 7) -> jax.Array:
@@ -77,20 +54,10 @@ def calibration_sigma(k: int, n_probes: int = 3, seed: int = 7) -> jax.Array:
     return jnp.asarray(np.stack(rows), dtype=jnp.float32)
 
 
-def realized_unitaries(spec: un.MeshSpec, phi_u, phi_v,
-                       dev: DeviceRealization, model: NoiseModel):
-    """The unitaries the physical mesh actually implements for commanded Φ."""
-    pu = apply_phase_noise(spec, phi_u, dev.noise_u, model)
-    pv = apply_phase_noise(spec, phi_v, dev.noise_v, model)
-    u = un.build_unitary(spec, pu, dev.d_u)
-    v = un.build_unitary(spec, pv, dev.d_v)
-    return u, v
-
-
 class ICResult(NamedTuple):
     phi_u: jax.Array      # commanded phases, (..., T)
     phi_v: jax.Array
-    u: jax.Array          # realized Ĩ_U, (..., k, k)
+    u: jax.Array          # realized Ĩ_U readback, (..., k, k)
     v: jax.Array          # realized Ĩ_V
     loss: jax.Array       # final surrogate loss per block
     mse_u: jax.Array      # ‖|U|−I‖² MSE per block (Table 4 metric)
@@ -105,57 +72,43 @@ def identity_mse(u: jax.Array) -> jax.Array:
 
 
 def calibrate_identity(key: jax.Array, n_blocks: int, k: int,
-                       model: NoiseModel, *, kind: str = "clements",
+                       model=None, *, kind: str = "clements",
                        method: str = "zcd",
                        cfg: ZOConfig | None = None,
-                       dev: DeviceRealization | None = None,
-                       n_sigma: int = 3, restarts: int = 4) -> ICResult:
+                       dev=None, n_sigma: int = 3, restarts: int = 4,
+                       driver=None) -> ICResult:
     """Run IC on ``n_blocks`` independent k×k PTCs in parallel.
 
     One physical loss measurement = probing the PTC with the k unit
     vectors per Σ_cal setting (coherent I/O) and comparing against
-    Σ_cal — simulated by materializing the realized transfer matrix.
-    The search uses ``restarts`` cyclic step-size restarts (δ₀ halves
-    each cycle), which escapes the surrogate's flat directions.
+    Σ_cal — executed by the device's local controller as a
+    ``driver.run_ic`` job.  The search uses ``restarts`` cyclic
+    step-size restarts (δ₀ halves each cycle), which escapes the
+    surrogate's flat directions.
+
+    ``driver``: any :class:`~repro.hw.driver.PhotonicDriver`; when
+    omitted, a fresh in-process twin is sampled (``dev`` optionally
+    pins its realization — forwarded opaquely, never inspected here).
     """
-    spec = un.mesh_spec(k, kind)
-    t = spec.n_rot
+    kd, ko = jax.random.split(key)
+    if driver is None:
+        from ..hw.twin import make_twin    # lazy: hw sits above core
+        driver = make_twin(kd, n_blocks, k, model, kind, dev=dev)
+    elif (driver.n_blocks, driver.k) != (n_blocks, k):
+        raise ValueError(
+            f"driver hosts {driver.n_blocks} blocks of k={driver.k}, "
+            f"caller asked for {n_blocks} blocks of k={k}")
+    k = driver.k
+    from . import unitary as un
+    t_rot = un.mesh_spec(k, driver.kind).n_rot
     if cfg is None:
         # total probe budget ≈ 28·2T per restart cycle (the paper's 400
         # "epochs" correspond to ~2T coordinate probes each)
-        cfg = ZOConfig(steps=max(500, 28 * t), inner=2 * t,
+        cfg = ZOConfig(steps=max(500, 28 * t_rot), inner=2 * t_rot,
                        delta0=0.5, decay=1.05)
-    kd, ko = jax.random.split(key)
-    if dev is None:
-        dev = sample_device(kd, (n_blocks,), k, model, kind)
     sigs = calibration_sigma(k, n_probes=n_sigma)
-    eye = jnp.eye(k)
-
-    def loss_fn(phi, dev_b):
-        phi_u, phi_v = phi[:t], phi[t:]
-        u, v = realized_unitaries(spec, phi_u, phi_v, dev_b, model)
-        # observable surrogate: intensity distance (|·|, phase-insensitive)
-        l = 0.0
-        for i in range(sigs.shape[0]):
-            m = ((u * sigs[i]) @ v) / sigs[i]   # U Σ V* Σ⁻¹, Σ⁻¹ electronic
-            l = l + jnp.mean((jnp.abs(m) - eye) ** 2)
-        return l / sigs.shape[0]
-
-    x = jnp.zeros((n_blocks, 2 * t))
-    histories = []
-    for r in range(restarts):
-        keys = jax.random.split(jax.random.fold_in(ko, r), n_blocks)
-        cfg_r = cfg._replace(delta0=cfg.delta0 / (2.0 ** r))
-
-        def solve_one(x0_b, key_b, dev_b):
-            return zo_minimize(lambda p: loss_fn(p, dev_b), x0_b, key_b,
-                               cfg_r, method=method)
-
-        res = jax.jit(jax.vmap(solve_one))(x, keys, dev)
-        x = res.x
-        histories.append(res.history)
-    phi_u, phi_v = x[:, :t], x[:, t:]
-    u, v = realized_unitaries(spec, phi_u, phi_v, dev, model)
-    return ICResult(phi_u=phi_u, phi_v=phi_v, u=u, v=v, loss=res.f,
-                    mse_u=identity_mse(u), mse_v=identity_mse(v),
-                    history=jnp.concatenate(histories, axis=-1))
+    res = driver.run_ic(ko, sigs, cfg, restarts=restarts, method=method)
+    return ICResult(phi_u=res.phi[:, :t_rot], phi_v=res.phi[:, t_rot:],
+                    u=res.u, v=res.v, loss=res.loss,
+                    mse_u=identity_mse(res.u), mse_v=identity_mse(res.v),
+                    history=res.history)

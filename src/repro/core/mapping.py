@@ -10,12 +10,17 @@ Per block (Algorithm 1):
 1. SVD + exact mesh parametrization (UP∘SVD) — the *commanded* phases;
    under Γ/Ω/Q/Φ_b the realized mesh differs.
 2. Alternate ZCD on Φ^U / Φ^V against ``‖W̃_pq(Φ) − W_pq‖²``, step size
-   bounded by phase resolution, exponentially decayed.
+   bounded by phase resolution, exponentially decayed — requested as an
+   in-situ ``driver.zo_refine`` job.
 3. **Optimal Singular-value Projection (OSP)**, Claim 1:
    ``Σ_opt = diag(U* W V)`` — analytically optimal given the (noisy,
-   sign-flipped) realized bases; on chip it is two reciprocal PTC probes,
-   and the sign flips cancel on the diagonal.  Here: realized U, V read
-   back from the simulator.
+   sign-flipped) realized bases; on chip it is two reciprocal PTC probes
+   (``driver.readback_bases``), and the sign flips cancel on the diagonal.
+
+Like IC, this is pure control-plane code: every device interaction goes
+through the :class:`~repro.hw.driver.PhotonicDriver` boundary (probe,
+write, readback, job) — pass ``driver=`` to deploy onto real/remote
+hardware; the default in-process twin reproduces pre-driver seeds.
 """
 
 from __future__ import annotations
@@ -27,10 +32,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import unitary as un
-from .noise import NoiseModel
 from .ptc import PTCParams, blockize, svd_factorize
-from .calibration import DeviceRealization, sample_device, realized_unitaries
-from ..optim.zo import ZOConfig, zo_minimize
+from ..optim.zo import ZOConfig
 
 __all__ = ["PMResult", "parallel_map", "osp", "matrix_distance"]
 
@@ -43,7 +46,7 @@ class PMResult(NamedTuple):
     err_zo: jax.Array       # ... after alternate ZO
     err_osp: jax.Array      # ... after OSP (the Fig. 5 "error drop")
     history: jax.Array
-    dev: DeviceRealization  # the sampled device (runtime drifts it in time)
+    driver: object          # the PhotonicDriver the weight was deployed on
 
 
 def matrix_distance(w_hat: jax.Array, w: jax.Array) -> jax.Array:
@@ -62,11 +65,10 @@ def osp(u: jax.Array, v: jax.Array, w: jax.Array) -> jax.Array:
     return jnp.einsum("...ji,...jl,...il->...i", u, w, v)
 
 
-def parallel_map(key: jax.Array, w: jax.Array, k: int, model: NoiseModel, *,
+def parallel_map(key: jax.Array, w: jax.Array, k: int, model=None, *,
                  kind: str = "clements", method: str = "zcd",
                  cfg: ZOConfig | None = None,
-                 dev: DeviceRealization | None = None,
-                 run_zo: bool = True) -> PMResult:
+                 dev=None, run_zo: bool = True, driver=None) -> PMResult:
     """Map a dense weight ``w`` (M, N) onto noisy k×k PTC blocks.
 
     Returns the REALIZED factor-level parameters — the state subspace
@@ -74,6 +76,11 @@ def parallel_map(key: jax.Array, w: jax.Array, k: int, model: NoiseModel, *,
     + OSP only), the cheap deployment mode for large models where Σ
     absorbs most of the residual (paper Fig. 13: SL tolerates mapping
     suboptimality).
+
+    ``driver``: any :class:`~repro.hw.driver.PhotonicDriver` with
+    ``n_blocks`` matching the P·Q grid of ``w``; when omitted, a fresh
+    in-process twin is sampled (``dev`` optionally pins its realization,
+    forwarded opaquely).
     """
     spec = un.mesh_spec(k, kind)
     t = spec.n_rot
@@ -94,49 +101,47 @@ def parallel_map(key: jax.Array, w: jax.Array, k: int, model: NoiseModel, *,
         phi_v0[i], d_v0[i] = un.decompose(v_np[i], kind)
 
     kd, ko = jax.random.split(key)
-    if dev is None:
-        dev = sample_device(kd, (b,), k, model, kind)
-    # manufacturing signs are part of the device; commanded d is not a knob
-    dev = dev._replace(d_u=jnp.asarray(d_u0, jnp.float32),
-                       d_v=jnp.asarray(d_v0, jnp.float32))
+    if driver is None:
+        from ..hw.twin import make_twin    # lazy: hw sits above core
+        driver = make_twin(kd, b, k, model, kind, m=w.shape[0],
+                           n=w.shape[1], dev=dev)
+    if driver.n_blocks != b:
+        raise ValueError(f"driver hosts {driver.n_blocks} blocks, "
+                         f"weight needs {b}")
 
-    phi0 = jnp.concatenate([jnp.asarray(phi_u0, jnp.float32),
-                            jnp.asarray(phi_v0, jnp.float32)], axis=-1)
-
-    def block_err(phi, dev_b, w_b, s_b):
-        u, v = realized_unitaries(spec, phi[:t], phi[t:], dev_b, model)
-        w_hat = (u * s_b) @ v
-        return matrix_distance(w_hat, w_b)
-
+    # deploy the commanded state: signs from the decomposition (the
+    # crossing configuration is commanded; Γ/Φ_b stay the device's own)
+    driver.write_signs(jnp.asarray(d_u0, jnp.float32),
+                       jnp.asarray(d_v0, jnp.float32))
+    driver.write_phases(jnp.asarray(phi_u0, jnp.float32),
+                        jnp.asarray(phi_v0, jnp.float32))
     s_init = ideal.s.reshape(b, k)
-    err_init = jax.vmap(block_err)(phi0, dev, w_blocks, s_init)
+    driver.write_sigma(s_init)
+
+    from ..hw.driver import readout_blocks
+    err_init = matrix_distance(readout_blocks(driver), w_blocks)
 
     if run_zo:
         if cfg is None:
             cfg = ZOConfig(steps=max(300, 10 * t), inner=2 * t,
                            delta0=2 * np.pi / 255.0 * 8, decay=1.05)
-
-        def solve_one(phi_b, key_b, dev_b, w_b, s_b):
-            return zo_minimize(lambda ph: block_err(ph, dev_b, w_b, s_b),
-                               phi_b, key_b, cfg, method=method, alt_split=t)
-
-        keys = jax.random.split(ko, b)
-        res = jax.jit(jax.vmap(solve_one))(phi0, keys, dev, w_blocks, s_init)
-        phi, err_zo, history = res.x, res.f, res.history
+        res = driver.zo_refine(w_blocks, ko, cfg, method=method)
+        phi, err_zo, history = res.phi, res.loss, res.history
     else:
-        phi, err_zo, history = phi0, err_init, err_init[:, None]
+        phi = jnp.concatenate([jnp.asarray(phi_u0, jnp.float32),
+                               jnp.asarray(phi_v0, jnp.float32)], axis=-1)
+        err_zo, history = err_init, err_init[:, None]
 
-    # Step 3 — OSP on the realized bases.
-    u_real, v_real = jax.vmap(
-        lambda ph, dv: realized_unitaries(spec, ph[:t], ph[t:], dv, model)
-    )(phi, dev)
+    # Step 3 — OSP on the realized bases (reciprocal readback probes).
+    u_real, v_real = driver.readback_bases()
     s_opt = osp(u_real, v_real, w_blocks)
     w_hat = (u_real * s_opt[..., None, :]) @ v_real
-    err_osp = jax.vmap(matrix_distance)(w_hat, w_blocks)
+    err_osp = matrix_distance(w_hat, w_blocks)
+    driver.write_sigma(s_opt)
 
     params = PTCParams(u=u_real.reshape(p, q, k, k),
                        s=s_opt.reshape(p, q, k),
                        v=v_real.reshape(p, q, k, k))
     return PMResult(params=params, phi_u=phi[:, :t], phi_v=phi[:, t:],
                     err_init=err_init, err_zo=err_zo, err_osp=err_osp,
-                    history=history, dev=dev)
+                    history=history, driver=driver)

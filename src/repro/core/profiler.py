@@ -36,7 +36,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Iterable
 
-import numpy as np
 
 from .sparsity import SparsityConfig
 

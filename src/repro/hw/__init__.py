@@ -1,0 +1,52 @@
+"""Hardware control plane (DESIGN): one observability boundary.
+
+The paper's constraint (§3.2) — on chip, only the end-to-end ``UΣV*``
+response is observable — is enforced here as an API boundary::
+
+    control plane (generic over the ABC)          device side (twin physics)
+    ──────────────────────────────────            ──────────────────────────
+    core/calibration.py   IC                      hw/device.py   realization
+    core/mapping.py       PM + OSP        ───▶    hw/drift.py    OU walk
+    runtime/monitor.py    health probes  driver   hw/jobs.py     ZO searches
+    runtime/recalibrate.py closed loop    ABC     hw/twin.py     TwinDriver
+    runtime/fleet.py      serving/routing ───▶    hw/server.py   remote twin
+
+    hw/driver.py             the ABC + PTC-call accounting
+    hw/subprocess_driver.py  JSON-over-pipe client (HIL transport)
+
+Two transports ship: :class:`TwinDriver` (in-process, jit-friendly) and
+:class:`SubprocessDriver` (JSON-over-pipe to ``repro.hw.server`` — the
+hardware-in-the-loop shape; swap the server for a real instrument daemon
+and the control plane is untouched).  Both meter every op that touches
+light in Appendix-G PTC calls (:class:`DriverStats`).
+
+Twin-only readouts (exact mapping distance, the drifted realization) are
+reachable only through ``driver.unsafe_twin()`` — tests and benchmarks
+only; ``tests/test_driver.py`` guards the import boundary.
+"""
+
+from .driver import (PhotonicDriver, DriverStats, ZORefineResult,  # noqa: F401
+                     ICJobResult, TwinUnavailable, probe_cost,
+                     readback_cost)
+from .drift import (DriftConfig, DriftState, init_drift, advance,  # noqa: F401
+                    bias_deviation, DEFAULT_DRIFT)
+from .twin import TwinDriver, TwinHandle, make_twin  # noqa: F401
+from .subprocess_driver import SubprocessDriver  # noqa: F401
+
+__all__ = ["PhotonicDriver", "DriverStats", "ZORefineResult", "ICJobResult",
+           "TwinUnavailable", "probe_cost", "readback_cost", "DriftConfig",
+           "DriftState", "init_drift", "advance", "bias_deviation",
+           "DEFAULT_DRIFT", "TwinDriver", "TwinHandle", "make_twin",
+           "SubprocessDriver", "make_driver"]
+
+
+def make_driver(transport: str, key, n_blocks: int, k: int, model,
+                kind: str = "clements", *, m: int | None = None,
+                n: int | None = None, drift=None) -> PhotonicDriver:
+    """Uniform driver factory: ``transport`` ∈ {"twin", "subprocess"}."""
+    if transport == "twin":
+        return make_twin(key, n_blocks, k, model, kind, m=m, n=n, drift=drift)
+    if transport == "subprocess":
+        return SubprocessDriver(key, n_blocks, k, model, kind, m=m, n=n,
+                                drift=drift)
+    raise ValueError(f"unknown driver transport: {transport!r}")

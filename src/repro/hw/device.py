@@ -1,0 +1,120 @@
+"""Digital-twin device physics: the *unobservable* side of the boundary.
+
+This module is the simulator's ground truth — the quantities a real chip
+never exposes (paper §3.2: only the end-to-end ``UΣV*`` response is
+measurable).  Everything here is quarantined behind the
+:class:`~repro.hw.driver.PhotonicDriver` boundary:
+
+* :class:`DeviceRealization` / :func:`sample_device` — the fixed, unknown
+  physical state (Γ, Φ_b, manufacturing sign diagonals) of a batch of
+  PTC blocks;
+* :func:`realized_unitaries` / :func:`realized_blocks` — the transfer
+  function the physical mesh actually implements for commanded settings;
+* :func:`true_mapping_distance` — the exact full-readout fidelity metric
+  (the probe estimator's ground truth);
+* :func:`chip_forward` — layer-level ``y = Ŵ x`` through the drifted
+  realized blocks (the serve-path dataflow).
+
+Control-plane code (``repro.runtime``, ``core.calibration``,
+``core.mapping``) must NOT import this module — the conformance suite's
+guard test enforces it.  Legal access paths are the driver ops
+(``forward`` / ``readback_bases`` / jobs) or, for tests and benchmarks
+only, the explicit ``driver.unsafe_twin()`` escape hatch.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import unitary as un
+from ..core.noise import NoiseModel, PhaseNoise, sample_phase_noise, \
+    apply_phase_noise
+
+__all__ = ["DeviceRealization", "sample_device", "realized_unitaries",
+           "realized_blocks", "true_mapping_distance", "chip_forward"]
+
+
+class DeviceRealization(NamedTuple):
+    """The fixed, unknown physical state of a batch of PTC blocks.
+
+    Sampled once per chip; IC exists because this is not observable.
+    Leading dims = block batch (e.g. (B,) flattened blocks).
+    """
+
+    noise_u: PhaseNoise     # Γ, Φ_b realizations for the U mesh
+    noise_v: PhaseNoise     # ... for the V* mesh
+    d_u: jax.Array          # ±1 manufacturing sign diagonals
+    d_v: jax.Array
+
+
+def sample_device(key: jax.Array, batch: tuple[int, ...], k: int,
+                  model: NoiseModel, kind: str = "clements"
+                  ) -> DeviceRealization:
+    spec = un.mesh_spec(k, kind)
+    t = spec.n_rot
+    ku, kv, kd1, kd2 = jax.random.split(key, 4)
+    nu = sample_phase_noise(ku, batch + (t,), model)
+    nv = sample_phase_noise(kv, batch + (t,), model)
+    d_u = jnp.where(jax.random.bernoulli(kd1, 0.5, batch + (k,)), 1.0, -1.0)
+    d_v = jnp.where(jax.random.bernoulli(kd2, 0.5, batch + (k,)), 1.0, -1.0)
+    return DeviceRealization(noise_u=nu, noise_v=nv, d_u=d_u, d_v=d_v)
+
+
+def realized_unitaries(spec: un.MeshSpec, phi_u, phi_v,
+                       dev: DeviceRealization, model: NoiseModel):
+    """The unitaries the physical mesh actually implements for commanded Φ."""
+    pu = apply_phase_noise(spec, phi_u, dev.noise_u, model)
+    pv = apply_phase_noise(spec, phi_v, dev.noise_v, model)
+    u = un.build_unitary(spec, pu, dev.d_u)
+    v = un.build_unitary(spec, pv, dev.d_v)
+    return u, v
+
+
+def realized_blocks(spec: un.MeshSpec, phi: jax.Array, sigma: jax.Array,
+                    dev: DeviceRealization, model: NoiseModel) -> jax.Array:
+    """Ŵ blocks the device currently implements for commanded phases
+    ``phi = [Φ^U | Φ^V]`` (..., 2T) and attenuators ``sigma``.
+
+    The single definition of the runtime's transfer function — probes,
+    jobs, and the serve path all go through it, so every consumer of the
+    driver sees the same physics.
+    """
+    t = spec.n_rot
+    u, v = realized_unitaries(spec, phi[..., :t], phi[..., t:], dev, model)
+    return (u * sigma[..., None, :]) @ v
+
+
+def true_mapping_distance(spec: un.MeshSpec, phi: jax.Array,
+                          sigma: jax.Array, dev: DeviceRealization,
+                          model: NoiseModel, w_blocks: jax.Array) -> jax.Array:
+    """Exact aggregate distance (full transfer-matrix readout) —
+    the probe estimator's ground truth.  Twin-only: a real chip cannot
+    evaluate this for free."""
+    w_hat = realized_blocks(spec, phi, sigma, dev, model)
+    num = jnp.sum((w_hat - w_blocks) ** 2, axis=(-2, -1))
+    den = jnp.sum(w_blocks ** 2, axis=(-2, -1)) + 1e-12
+    return jnp.sum(num) / jnp.sum(den)
+
+
+def chip_forward(spec, phi, sigma, dev, model, x, out_dim):
+    """y = Ŵ x through the drifted realized blocks (paper dataflow:
+    per-block V* → Σ → U, electronic accumulation over q is implicit
+    here because each chip hosts a flat batch of blocks of one weight)."""
+    k = spec.k
+    w_hat = realized_blocks(spec, phi, sigma, dev, model)  # (B, k, k)
+    b = w_hat.shape[0]
+    # reassemble the (P, Q) grid from the flat block batch
+    p = -(-out_dim // k)
+    q = b // p
+    w = w_hat.reshape(p, q, k, k)
+    xb = x
+    n = q * k
+    if x.shape[-1] != n:
+        xb = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, n - x.shape[-1])])
+    xb = xb.reshape(x.shape[:-1] + (q, k))
+    y = jnp.einsum("pqij,...qj->...pi", w, xb)
+    y = y.reshape(x.shape[:-1] + (p * k,))
+    return y[..., :out_dim]

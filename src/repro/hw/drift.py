@@ -22,6 +22,11 @@ re-optimization (L2ight §3.2).  This module layers a time axis on top of
 
 Only ``Φ_b`` and ``Γ`` move; the manufacturing sign diagonals ``d_u`` /
 ``d_v`` are topological and fixed for the life of the device.
+
+Like :mod:`repro.hw.device`, this is twin-side physics: a real chip
+drifts by itself, so control-plane code only ever sees drift through
+``driver.advance(dt)`` (plus probe estimates of its effect).  Only the
+:class:`DriftConfig` policy knobs are control-plane-visible.
 """
 
 from __future__ import annotations
@@ -32,8 +37,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from ..core.calibration import DeviceRealization
 from ..core.noise import PhaseNoise
+from .device import DeviceRealization
 
 __all__ = ["DriftConfig", "DriftState", "init_drift", "advance",
            "bias_deviation", "DEFAULT_DRIFT"]

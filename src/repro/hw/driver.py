@@ -1,0 +1,271 @@
+"""`PhotonicDriver`: the single observability boundary to a device.
+
+The paper's premise (§3.2) is that on chip only the end-to-end ``UΣV*``
+response is observable — there is no free readout of the realized
+unitaries, the phase biases, or the drift state.  Every stateful
+control-plane path in this repo (IC, PM, health monitoring, closed-loop
+recalibration, fleet serving) therefore talks to a device exclusively
+through this ABC, which models the narrow surface a real single-chip
+in-situ training stack exposes (Bandyopadhyay et al.):
+
+================  =========================================================
+op                physical meaning
+================  =========================================================
+write_phases      command the MZI rotation phases Φ^U / Φ^V
+write_sigma       command the Σ attenuators (precisely tunable, §2)
+write_signs       command the ±1 crossing configuration (topological)
+read_phases/...   read back the *commanded* state (controller-known)
+forward           stream probe columns through the realized UΣV* response
+forward_layer     serve-path forward through the assembled P×Q block grid
+readback_bases    reciprocal-probe readout of the realized bases (the
+                  OSP primitive, Claim 1: 2 reciprocal PTC passes/block)
+zo_refine         in-situ job: hardware-restricted ZCD on Φ against
+                  electronically compared targets (runs on the device's
+                  local controller — per-probe round-trips would defeat
+                  in-situ operation)
+run_ic            in-situ job: Identity Calibration's multi-Σ_cal
+                  surrogate search (§3.2, Eq. 2)
+advance           let (virtual) time pass: real chips drift by themselves;
+                  the twin steps its OU walk from a device-owned chain
+================  =========================================================
+
+Every op that touches light is metered in :class:`DriverStats` with the
+paper's Appendix-G normalized energy unit (PTC calls), replacing the
+ad-hoc ``core.profiler`` bookkeeping the runtime previously scattered
+around.  One probe column through B = P·Q blocks costs B calls — the
+same ``E_fwd = P·Q·n_cols`` the profiler charges a layer.
+
+Twin-only readouts (exact distances, the drifted ``DeviceRealization``)
+are quarantined behind :meth:`PhotonicDriver.unsafe_twin`, which raises
+:class:`TwinUnavailable` for drivers not backed by an inspectable twin.
+Only tests and benchmarks may use it; the conformance suite's guard test
+keeps it out of ``repro.runtime`` / ``core.calibration`` /
+``core.mapping`` except through that explicit hatch.
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["DriverStats", "PhotonicDriver", "ZORefineResult", "ICJobResult",
+           "TwinUnavailable", "probe_cost", "readback_cost",
+           "readout_blocks"]
+
+
+class TwinUnavailable(RuntimeError):
+    """The driver is not backed by an inspectable digital twin."""
+
+
+def probe_cost(n_blocks: int, n_cols: int) -> float:
+    """PTC calls for ``n_cols`` probe columns through ``n_blocks`` blocks
+    (Appendix-G: E_fwd = P·Q·n_cols with B = P·Q)."""
+    return float(n_blocks * n_cols)
+
+
+def readback_cost(n_blocks: int, k: int) -> float:
+    """PTC calls for one reciprocal readback of the realized bases:
+    two reciprocal passes of k columns per block (Claim 1)."""
+    return float(2 * n_blocks * k)
+
+
+def readout_blocks(driver: "PhotonicDriver", category: str = "probe"
+                   ) -> jax.Array:
+    """Exact Ŵ readout, (B, k, k): k unit-vector probe columns per block
+    — observability-legal (forward probes only), costs B·k PTC calls.
+    The shared full-readout primitive for PM's error audit and the
+    monitor's exact distance."""
+    k = driver.k
+    y = driver.forward(jnp.eye(k, dtype=jnp.float32), category=category)
+    return jnp.transpose(y, (0, 2, 1))
+
+
+@dataclasses.dataclass
+class DriverStats:
+    """PTC-call meter, split by control-plane purpose.
+
+    ``serve``    — traffic through ``forward_layer``
+    ``probe``    — health probes / observability reads (``forward``)
+    ``readback`` — reciprocal basis readbacks (``readback_bases``)
+    ``search``   — in-situ optimization jobs (``zo_refine`` / ``run_ic``)
+    """
+
+    serve: float = 0.0
+    probe: float = 0.0
+    readback: float = 0.0
+    search: float = 0.0
+
+    @property
+    def total(self) -> float:
+        return self.serve + self.probe + self.readback + self.search
+
+    def as_dict(self) -> dict:
+        return dict(serve=self.serve, probe=self.probe,
+                    readback=self.readback, search=self.search,
+                    total=self.total)
+
+    def charge(self, category: str, calls: float) -> None:
+        setattr(self, category, getattr(self, category) + float(calls))
+
+
+class ZORefineResult(NamedTuple):
+    """Result of an in-situ ``zo_refine`` job (phases are also written)."""
+
+    phi: jax.Array        # refreshed commanded phases, (B, 2T)
+    loss: jax.Array       # final per-block objective values, (B,)
+    history: jax.Array    # best-loss traces, (B, steps // record_every)
+    steps: int            # ZCD probe steps actually spent per block
+
+
+class ICJobResult(NamedTuple):
+    """Result of an in-situ ``run_ic`` job (phases are also written)."""
+
+    phi: jax.Array        # commanded phases after IC, (B, 2T)
+    u: jax.Array          # readback of the realized Ĩ_U, (B, k, k)
+    v: jax.Array          # readback of the realized Ĩ_V
+    loss: jax.Array       # final surrogate loss per block
+    history: jax.Array    # best-loss traces across restarts
+
+
+class PhotonicDriver(abc.ABC):
+    """Abstract control-plane handle to one photonic chip.
+
+    A driver owns: the commanded state (phases, attenuators, signs), the
+    device's clock, and the PTC-call meter.  Concrete transports:
+
+    * :class:`repro.hw.twin.TwinDriver` — in-process digital twin,
+      jit-friendly (the default for tests and simulation studies);
+    * :class:`repro.hw.subprocess_driver.SubprocessDriver` — JSON-over-
+      pipe protocol to an out-of-process twin, the hardware-in-the-loop
+      shape a real instrument server would slot into.
+    """
+
+    # -- geometry (fixed at deployment) -------------------------------------
+
+    @property
+    @abc.abstractmethod
+    def k(self) -> int:
+        """PTC block size."""
+
+    @property
+    @abc.abstractmethod
+    def kind(self) -> str:
+        """Mesh topology (e.g. ``"clements"``)."""
+
+    @property
+    @abc.abstractmethod
+    def n_blocks(self) -> int:
+        """Number of independent k×k blocks on the chip."""
+
+    @property
+    @abc.abstractmethod
+    def layer_shape(self) -> tuple[int, int]:
+        """(M, N) of the logical weight the block grid assembles."""
+
+    # -- commanded state -----------------------------------------------------
+
+    @abc.abstractmethod
+    def write_phases(self, phi_u: jax.Array, phi_v: jax.Array) -> None:
+        """Command the rotation phases, each (B, T)."""
+
+    @abc.abstractmethod
+    def write_sigma(self, sigma: jax.Array) -> None:
+        """Command the Σ attenuators, (B, k)."""
+
+    @abc.abstractmethod
+    def write_signs(self, d_u: jax.Array, d_v: jax.Array) -> None:
+        """Command the ±1 crossing configuration, each (B, k)."""
+
+    @abc.abstractmethod
+    def read_phases(self) -> tuple[jax.Array, jax.Array]:
+        """Commanded (Φ^U, Φ^V) — controller-known, free."""
+
+    @abc.abstractmethod
+    def read_sigma(self) -> jax.Array:
+        """Commanded Σ — controller-known, free."""
+
+    # -- observability-legal probes (metered) --------------------------------
+
+    @abc.abstractmethod
+    def forward(self, x: jax.Array, category: str = "probe") -> jax.Array:
+        """Stream shared probe columns ``x`` (n, k) through every block's
+        realized response; returns (B, n, k).  Costs B·n PTC calls."""
+
+    @abc.abstractmethod
+    def forward_layer(self, x: jax.Array) -> jax.Array:
+        """Serve-path forward (..., N) → (..., M) through the assembled
+        P×Q grid.  Costs B·n_rows PTC calls (metered as ``serve``)."""
+
+    @abc.abstractmethod
+    def readback_bases(self, cols=None) -> tuple[jax.Array, jax.Array]:
+        """Reciprocal-probe readout of the realized bases (U, V*), each
+        (B, k, k) — or, with ``cols`` (a column-index sequence), only
+        those columns, (B, k, len(cols)).  Costs 2·B·k PTC calls for the
+        full readout, 2·B·len(cols) for a partial one (metered as
+        ``readback``)."""
+
+    # -- in-situ jobs (run on the device's local controller; metered) --------
+
+    @abc.abstractmethod
+    def zo_refine(self, w_blocks: jax.Array, key: jax.Array, cfg,
+                  method: str = "zcd") -> ZORefineResult:
+        """Hardware-restricted alternate ZCD on the commanded phases
+        against per-block targets ``w_blocks`` (electronic comparison),
+        warm-started from the current written state.  ``cfg`` is a
+        :class:`repro.optim.zo.ZOConfig` budget.  Writes the result and
+        returns it.  Costs steps·2·B·k PTC calls."""
+
+    @abc.abstractmethod
+    def run_ic(self, key: jax.Array, sigs: jax.Array, cfg, *,
+               restarts: int = 4, method: str = "zcd") -> ICJobResult:
+        """Identity Calibration: ZO search on the multi-Σ_cal intensity
+        surrogate (Eq. 2) with probe attenuator schedule ``sigs``
+        (n_sigma, k).  Writes the resulting phases and returns them with
+        a basis readback."""
+
+    # -- time ----------------------------------------------------------------
+
+    @abc.abstractmethod
+    def advance(self, dt: float = 1.0) -> None:
+        """Let ``dt`` ticks of (virtual) time pass.  Real hardware drifts
+        on its own; the twin steps its seeded OU walk."""
+
+    # -- accounting ----------------------------------------------------------
+
+    @property
+    @abc.abstractmethod
+    def stats(self) -> DriverStats:
+        """Cumulative PTC-call meter."""
+
+    @abc.abstractmethod
+    def charge(self, category: str, calls: float) -> None:
+        """Meter probes consumed by controller-side estimators that reuse
+        already-read state (e.g. the in-situ Σ descent's Eq.-5 probes)."""
+
+    def reset_stats(self) -> None:
+        s = self.stats
+        s.serve = s.probe = s.readback = s.search = 0.0
+
+    # -- lifecycle / escape hatch --------------------------------------------
+
+    def close(self) -> None:
+        """Release transport resources (no-op for in-process drivers)."""
+
+    def unsafe_twin(self):
+        """Escape hatch to the digital twin's internals (exact distances,
+        the drifted :class:`DeviceRealization`).  Tests and benchmarks
+        only — raises :class:`TwinUnavailable` when the device is not an
+        inspectable twin (i.e. real hardware)."""
+        raise TwinUnavailable(
+            f"{type(self).__name__} is not backed by an inspectable twin")
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

@@ -1,0 +1,110 @@
+"""On-controller in-situ search jobs (device-side code).
+
+L2ight's whole point is that the ZO searches are executed *on chip*: a
+loss measurement is a physical probe, so the optimizer must be
+co-located with the device — shipping per-probe round trips over a
+control network (400+ per block per job) would defeat in-situ operation.
+These functions are therefore *device-side* implementations shared by
+every driver transport:
+
+* :class:`~repro.hw.twin.TwinDriver` calls them directly (in-process);
+* the out-of-process twin server (``repro.hw.server``) calls the same
+  functions against its local device, so :class:`SubprocessDriver`
+  returns bit-identical results for the same seeds.
+
+Control-plane code never imports this module — it requests jobs through
+``driver.zo_refine`` / ``driver.run_ic`` and receives only the
+observability-legal outputs (commanded phases, basis readbacks, loss
+traces).
+
+``phase_refine`` is the warm/alternate ZCD both PM's stage 2 and the
+closed-loop recalibrator use; ``ic_search`` is IC's multi-Σ_cal
+surrogate search (§3.2, Eq. 2).  All stages run vmapped across the
+chip's blocks (independent physical circuits), mirroring the paper's
+batched-sub-task scalability trick.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core import unitary as un
+from ..core.noise import NoiseModel
+from ..optim.zo import ZOConfig, ZOResult, zo_minimize
+from .device import DeviceRealization, realized_unitaries
+
+__all__ = ["phase_refine", "ic_search"]
+
+
+def _block_distance(w_hat: jax.Array, w: jax.Array) -> jax.Array:
+    """Normalized ‖W−W̃‖²/‖W‖² — the electronic comparison the on-chip
+    controller evaluates per probe (same metric as mapping.matrix_distance)."""
+    num = jnp.sum((w_hat - w) ** 2, axis=(-2, -1))
+    den = jnp.sum(w ** 2, axis=(-2, -1)) + 1e-12
+    return num / den
+
+
+def phase_refine(spec: un.MeshSpec, model: NoiseModel,
+                 dev: DeviceRealization, phi0: jax.Array, sigma: jax.Array,
+                 w_blocks: jax.Array, key: jax.Array, cfg: ZOConfig,
+                 method: str = "zcd") -> ZOResult:
+    """Alternate ZCD on ``phi = [Φ^U | Φ^V]`` against per-block targets,
+    warm-started from ``phi0`` (B, 2T); vmapped over blocks."""
+    t = spec.n_rot
+    b = phi0.shape[0]
+
+    def block_err(ph, dev_b, w_b, s_b):
+        u, v = realized_unitaries(spec, ph[:t], ph[t:], dev_b, model)
+        return _block_distance((u * s_b) @ v, w_b)
+
+    def solve_one(phi_b, key_b, dev_b, w_b, s_b):
+        return zo_minimize(lambda ph: block_err(ph, dev_b, w_b, s_b),
+                           phi_b, key_b, cfg, method=method, alt_split=t)
+
+    keys = jax.random.split(key, b)
+    return jax.jit(jax.vmap(solve_one))(phi0, keys, dev, w_blocks, sigma)
+
+
+def ic_search(spec: un.MeshSpec, model: NoiseModel, dev: DeviceRealization,
+              key: jax.Array, cfg: ZOConfig, sigs: jax.Array,
+              method: str = "zcd", restarts: int = 4
+              ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Identity Calibration's surrogate search (Eq. 2).
+
+    One physical loss measurement = probing the PTC with the k unit
+    vectors per Σ_cal setting (coherent I/O) and comparing against
+    Σ_cal.  The search uses ``restarts`` cyclic step-size restarts
+    (δ₀ halves each cycle), which escapes the surrogate's flat
+    directions.  Returns ``(phi, final_loss, history)``.
+    """
+    t = spec.n_rot
+    k = spec.k
+    n_blocks = dev.d_u.shape[0]
+    eye = jnp.eye(k)
+
+    def loss_fn(phi, dev_b):
+        phi_u, phi_v = phi[:t], phi[t:]
+        u, v = realized_unitaries(spec, phi_u, phi_v, dev_b, model)
+        # observable surrogate: intensity distance (|·|, phase-insensitive)
+        l = 0.0
+        for i in range(sigs.shape[0]):
+            m = ((u * sigs[i]) @ v) / sigs[i]   # U Σ V* Σ⁻¹, Σ⁻¹ electronic
+            l = l + jnp.mean((jnp.abs(m) - eye) ** 2)
+        return l / sigs.shape[0]
+
+    x = jnp.zeros((n_blocks, 2 * t))
+    histories = []
+    res = None
+    for r in range(restarts):
+        keys = jax.random.split(jax.random.fold_in(key, r), n_blocks)
+        cfg_r = cfg._replace(delta0=cfg.delta0 / (2.0 ** r))
+
+        def solve_one(x0_b, key_b, dev_b):
+            return zo_minimize(lambda p: loss_fn(p, dev_b), x0_b, key_b,
+                               cfg_r, method=method)
+
+        res = jax.jit(jax.vmap(solve_one))(x, keys, dev)
+        x = res.x
+        histories.append(res.history)
+    return x, res.f, jnp.concatenate(histories, axis=-1)

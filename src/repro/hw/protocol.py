@@ -1,0 +1,71 @@
+"""JSON-over-pipe wire protocol for out-of-process drivers.
+
+Newline-delimited JSON request/response frames::
+
+    → {"id": 7, "op": "forward", "kw": {"x": {"__nd__": ...}, ...}}
+    ← {"id": 7, "ok": true, "result": {"y": {"__nd__": ...}}}
+    ← {"id": 8, "ok": false, "error": "..."}
+
+Arrays travel as base64 of their raw bytes plus dtype/shape, so float32
+round-trips bit-exactly — the conformance suite relies on the twin and
+subprocess transports returning identical results for identical seeds.
+Configs (``NoiseModel``, ``DriftConfig``, ``ZOConfig``) travel as plain
+field dicts.
+"""
+
+from __future__ import annotations
+
+import base64
+import json
+from typing import Any, IO
+
+import numpy as np
+
+__all__ = ["encode", "decode", "send", "recv", "ProtocolError"]
+
+_ND = "__nd__"
+
+
+class ProtocolError(RuntimeError):
+    """Framing / transport failure on the driver pipe."""
+
+
+def encode(obj: Any) -> Any:
+    """Recursively JSON-encode a python/jax value tree."""
+    if obj is None or isinstance(obj, (bool, int, float, str)):
+        return obj
+    if isinstance(obj, dict):
+        return {k: encode(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [encode(v) for v in obj]
+    arr = np.asarray(obj)
+    return {_ND: base64.b64encode(arr.tobytes()).decode("ascii"),
+            "dtype": str(arr.dtype), "shape": list(arr.shape)}
+
+
+def decode(obj: Any) -> Any:
+    """Inverse of :func:`encode` (arrays come back as numpy)."""
+    if isinstance(obj, dict):
+        if _ND in obj:
+            raw = base64.b64decode(obj[_ND])
+            return np.frombuffer(raw, dtype=np.dtype(obj["dtype"])).reshape(
+                obj["shape"]).copy()
+        return {k: decode(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [decode(v) for v in obj]
+    return obj
+
+
+def send(fp: IO[str], msg: dict) -> None:
+    fp.write(json.dumps(msg, separators=(",", ":")) + "\n")
+    fp.flush()
+
+
+def recv(fp: IO[str]) -> dict:
+    line = fp.readline()
+    if not line:
+        raise ProtocolError("driver pipe closed (peer exited?)")
+    try:
+        return json.loads(line)
+    except json.JSONDecodeError as e:
+        raise ProtocolError(f"malformed frame: {line[:200]!r}") from e

@@ -1,0 +1,144 @@
+"""Out-of-process twin server: ``python -m repro.hw.server``.
+
+Hosts one :class:`TwinDriver` and serves the driver protocol over
+stdin/stdout (newline-delimited JSON, see ``repro.hw.protocol``).  This
+is the hardware-in-the-loop shape: the parent's
+:class:`SubprocessDriver` sees only the control-plane surface, while the
+device physics lives in this process — swap this server for a real
+instrument daemon and nothing on the control plane changes.
+
+In-situ jobs (``zo_refine`` / ``run_ic``) execute *here*, against the
+local device, with the same ``repro.hw.jobs`` code the in-process twin
+uses — so results are bit-identical across transports for equal seeds
+(same functions, same backend), which the conformance suite asserts.
+
+The ``unsafe/*`` ops back the parent's ``unsafe_twin()`` escape hatch;
+they exist because this peer happens to be a simulator.  A real-hardware
+daemon would simply not implement them.
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+import jax.numpy as jnp
+
+from ..core.noise import NoiseModel
+from ..optim.zo import ZOConfig
+from .drift import DriftConfig
+from .protocol import encode, decode, send, recv, ProtocolError
+from .twin import make_twin
+
+__all__ = ["serve", "main"]
+
+
+def _build_driver(kw: dict):
+    model = NoiseModel(**kw["model"])
+    drift = DriftConfig(**kw["drift"]) if kw.get("drift") else None
+    return make_twin(jnp.asarray(kw["key"]), int(kw["n_blocks"]),
+                     int(kw["k"]), model, kw.get("kind", "clements"),
+                     m=kw.get("m"), n=kw.get("n"), drift=drift)
+
+
+def _dispatch(driver, op: str, kw: dict):
+    if op == "meta":
+        m, n = driver.layer_shape
+        return dict(k=driver.k, kind=driver.kind, n_blocks=driver.n_blocks,
+                    m=m, n=n)
+    if op == "write_phases":
+        driver.write_phases(kw["phi_u"], kw["phi_v"])
+        return None
+    if op == "write_sigma":
+        driver.write_sigma(kw["sigma"])
+        return None
+    if op == "write_signs":
+        driver.write_signs(kw["d_u"], kw["d_v"])
+        return None
+    if op == "read_phases":
+        phi_u, phi_v = driver.read_phases()
+        return dict(phi_u=phi_u, phi_v=phi_v)
+    if op == "read_sigma":
+        return dict(sigma=driver.read_sigma())
+    if op == "forward":
+        return dict(y=driver.forward(kw["x"], kw.get("category", "probe")))
+    if op == "forward_layer":
+        return dict(y=driver.forward_layer(kw["x"]))
+    if op == "readback_bases":
+        u, v = driver.readback_bases(cols=kw.get("cols"))
+        return dict(u=u, v=v)
+    if op == "zo_refine":
+        res = driver.zo_refine(kw["w_blocks"], jnp.asarray(kw["key"]),
+                               ZOConfig(**kw["cfg"]),
+                               method=kw.get("method", "zcd"))
+        return dict(phi=res.phi, loss=res.loss, history=res.history,
+                    steps=res.steps)
+    if op == "run_ic":
+        res = driver.run_ic(jnp.asarray(kw["key"]), kw["sigs"],
+                            ZOConfig(**kw["cfg"]),
+                            restarts=int(kw.get("restarts", 4)),
+                            method=kw.get("method", "zcd"))
+        return dict(phi=res.phi, u=res.u, v=res.v, loss=res.loss,
+                    history=res.history)
+    if op == "advance":
+        driver.advance(float(kw.get("dt", 1.0)))
+        return None
+    if op == "stats":
+        return driver.stats.as_dict()
+    if op == "reset_stats":
+        driver.reset_stats()
+        return None
+    if op == "charge":
+        driver.charge(kw["category"], float(kw["calls"]))
+        return None
+    # -- unsafe/* : twin-internal readouts backing unsafe_twin() -------------
+    if op == "unsafe/true_mapping_distance":
+        return dict(d=driver.unsafe_twin().true_mapping_distance(
+            jnp.asarray(kw["w_blocks"])))
+    if op == "unsafe/bias_deviation":
+        return dict(d=driver.unsafe_twin().bias_deviation())
+    if op == "unsafe/dev":
+        dev = driver.unsafe_twin().dev
+        return dict(gamma_u=dev.noise_u.gamma, bias_u=dev.noise_u.bias,
+                    gamma_v=dev.noise_v.gamma, bias_v=dev.noise_v.bias,
+                    d_u=dev.d_u, d_v=dev.d_v)
+    if op == "unsafe/realized_unitaries":
+        u, v = driver.unsafe_twin().realized_unitaries()
+        return dict(u=u, v=v)
+    raise ValueError(f"unknown op: {op!r}")
+
+
+def serve(fin, fout) -> None:
+    driver = None
+    while True:
+        try:
+            req = recv(fin)
+        except ProtocolError:
+            return                      # parent went away: exit quietly
+        rid, op = req.get("id"), req.get("op")
+        kw = decode(req.get("kw") or {})
+        try:
+            if op == "shutdown":
+                send(fout, dict(id=rid, ok=True, result=None))
+                return
+            if op == "init":
+                driver = _build_driver(kw)
+                result = _dispatch(driver, "meta", {})
+            elif driver is None:
+                raise RuntimeError("first op must be 'init'")
+            else:
+                result = _dispatch(driver, op, kw)
+            send(fout, dict(id=rid, ok=True, result=encode(result)))
+        except Exception:
+            send(fout, dict(id=rid, ok=False,
+                            error=traceback.format_exc(limit=8)))
+
+
+def main() -> int:
+    # stdout is the wire: anything else (jax chatter) must go to stderr
+    serve(sys.stdin, sys.stdout)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

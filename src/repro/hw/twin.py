@@ -1,0 +1,266 @@
+"""`TwinDriver`: the in-process digital-twin implementation of the ABC.
+
+Wraps a :class:`DeviceRealization` + :class:`DriftState` behind the
+:class:`~repro.hw.driver.PhotonicDriver` surface.  All ops evaluate the
+same pure twin physics (``repro.hw.device``) the simulator has always
+used, so the driver boundary costs nothing numerically; the in-situ
+jobs delegate to ``repro.hw.jobs`` (vmapped ``lax.scan`` searches — the
+jit-friendly path).
+
+Drift entropy is device-owned: the driver holds its own PRNG chain
+(seeded at construction), so a fleet trajectory is reproducible from
+construction seeds alone and the control plane never supplies drift
+randomness — mirroring real hardware, which drifts without being asked.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import unitary as un
+from ..core.noise import NoiseModel
+from ..optim.zo import ZOConfig
+from . import jobs
+from .device import (DeviceRealization, sample_device, realized_unitaries,
+                     realized_blocks, true_mapping_distance, chip_forward)
+from .drift import DriftConfig, DriftState, init_drift, advance, \
+    bias_deviation
+from .driver import (PhotonicDriver, DriverStats, ZORefineResult, ICJobResult,
+                     probe_cost, readback_cost)
+
+__all__ = ["TwinDriver", "TwinHandle", "make_twin"]
+
+
+class TwinHandle:
+    """Quarantined readouts of a twin's internals (tests/benchmarks only).
+
+    Obtained exclusively through ``driver.unsafe_twin()`` — the single
+    audited hole in the observability boundary.
+    """
+
+    def __init__(self, driver: "TwinDriver"):
+        self._d = driver
+
+    @property
+    def dev(self) -> DeviceRealization:
+        """The current (drifted) device realization."""
+        return self._d._state.dev
+
+    @property
+    def anchor(self) -> DeviceRealization:
+        """The manufacturing realization the OU drift reverts to."""
+        return self._d._state.anchor
+
+    @property
+    def drift_state(self) -> DriftState:
+        return self._d._state
+
+    def realized_unitaries(self) -> tuple[jax.Array, jax.Array]:
+        """Free full readout of the realized bases (no PTC charge)."""
+        d = self._d
+        t = d._spec.n_rot
+        return realized_unitaries(d._spec, d._phi[:, :t], d._phi[:, t:],
+                                  d._state.dev, d._model)
+
+    def realized_blocks(self) -> jax.Array:
+        d = self._d
+        return realized_blocks(d._spec, d._phi, d._sigma, d._state.dev,
+                               d._model)
+
+    def true_mapping_distance(self, w_blocks: jax.Array) -> float:
+        """Exact aggregate mapping distance (full-readout ground truth)."""
+        d = self._d
+        return float(true_mapping_distance(d._spec, d._phi, d._sigma,
+                                           d._state.dev, d._model, w_blocks))
+
+    def bias_deviation(self) -> float:
+        """RMS phase-bias deviation from the anchor (radians)."""
+        return float(bias_deviation(self._d._state))
+
+
+@functools.lru_cache(maxsize=64)
+def _jitted_probe_ops(k: int, kind: str, model: NoiseModel, m_out: int):
+    """Compiled forward/layer/readback graphs keyed on the driver's
+    static physics (NoiseModel is a frozen dataclass, hence hashable)."""
+    spec = un.mesh_spec(k, kind)
+    t = spec.n_rot
+    fwd = jax.jit(lambda phi, sigma, dev, x: jnp.einsum(
+        "bij,nj->bni", realized_blocks(spec, phi, sigma, dev, model), x))
+    layer = jax.jit(lambda phi, sigma, dev, x: chip_forward(
+        spec, phi, sigma, dev, model, x, m_out))
+    readback = jax.jit(lambda phi, dev: realized_unitaries(
+        spec, phi[:, :t], phi[:, t:], dev, model))
+    return fwd, layer, readback
+
+
+class TwinDriver(PhotonicDriver):
+    """In-process digital twin behind the control-plane ABC."""
+
+    def __init__(self, dev: DeviceRealization, k: int, model: NoiseModel,
+                 kind: str = "clements", m: int | None = None,
+                 n: int | None = None, drift: DriftConfig | None = None,
+                 drift_key: jax.Array | None = None):
+        self._spec = un.mesh_spec(k, kind)
+        self._kind = kind
+        self._model = model
+        self._state = init_drift(dev)
+        self._drift_cfg = drift
+        self._drift_key = (drift_key if drift_key is not None
+                           else jax.random.PRNGKey(0))
+        b = int(dev.d_u.shape[0])
+        t = self._spec.n_rot
+        self._b = b
+        self._phi = jnp.zeros((b, 2 * t), jnp.float32)
+        self._sigma = jnp.ones((b, k), jnp.float32)
+        # default layer geometry: a 1×B grid (calibration-style chips)
+        self._m = int(m) if m is not None else k
+        self._n = int(n) if n is not None else k * b
+        self._stats = DriverStats()
+        # jitted probe paths, shared across drivers with the same physics
+        # (a fleet of N identical chips compiles each graph once, not N×)
+        self._jit_forward, self._jit_layer, self._jit_readback = \
+            _jitted_probe_ops(k, kind, model, self._m)
+
+    # -- geometry ------------------------------------------------------------
+
+    @property
+    def k(self) -> int:
+        return self._spec.k
+
+    @property
+    def kind(self) -> str:
+        return self._kind
+
+    @property
+    def n_blocks(self) -> int:
+        return self._b
+
+    @property
+    def layer_shape(self) -> tuple[int, int]:
+        return self._m, self._n
+
+    # -- commanded state -----------------------------------------------------
+
+    def write_phases(self, phi_u: jax.Array, phi_v: jax.Array) -> None:
+        t = self._spec.n_rot
+        phi_u = jnp.asarray(phi_u, jnp.float32).reshape(self._b, t)
+        phi_v = jnp.asarray(phi_v, jnp.float32).reshape(self._b, t)
+        self._phi = jnp.concatenate([phi_u, phi_v], axis=-1)
+
+    def write_sigma(self, sigma: jax.Array) -> None:
+        self._sigma = jnp.asarray(sigma, jnp.float32).reshape(self._b, self.k)
+
+    def write_signs(self, d_u: jax.Array, d_v: jax.Array) -> None:
+        d_u = jnp.asarray(d_u, jnp.float32).reshape(self._b, self.k)
+        d_v = jnp.asarray(d_v, jnp.float32).reshape(self._b, self.k)
+        # signs are topological: they configure both the live device and
+        # the drift anchor (OU never walks them)
+        self._state = DriftState(
+            anchor=self._state.anchor._replace(d_u=d_u, d_v=d_v),
+            dev=self._state.dev._replace(d_u=d_u, d_v=d_v),
+            t=self._state.t)
+
+    def read_phases(self) -> tuple[jax.Array, jax.Array]:
+        t = self._spec.n_rot
+        return self._phi[:, :t], self._phi[:, t:]
+
+    def read_sigma(self) -> jax.Array:
+        return self._sigma
+
+    # -- probes --------------------------------------------------------------
+
+    def forward(self, x: jax.Array, category: str = "probe") -> jax.Array:
+        x = jnp.asarray(x, jnp.float32)
+        y = self._jit_forward(self._phi, self._sigma, self._state.dev, x)
+        self._stats.charge(category, probe_cost(self._b, x.shape[0]))
+        return y
+
+    def forward_layer(self, x: jax.Array) -> jax.Array:
+        x = jnp.asarray(x, jnp.float32)
+        y = self._jit_layer(self._phi, self._sigma, self._state.dev, x)
+        n_cols = int(np.prod(x.shape[:-1])) if x.ndim > 1 else 1
+        self._stats.charge("serve", probe_cost(self._b, n_cols))
+        return y
+
+    def readback_bases(self, cols=None) -> tuple[jax.Array, jax.Array]:
+        u, v = self._jit_readback(self._phi, self._state.dev)
+        if cols is not None:
+            idx = jnp.asarray(cols, jnp.int32)
+            u, v = u[..., :, idx], v[..., :, idx]
+            self._stats.charge("readback",
+                               readback_cost(self._b, int(idx.shape[0])))
+        else:
+            self._stats.charge("readback", readback_cost(self._b, self.k))
+        return u, v
+
+    # -- in-situ jobs --------------------------------------------------------
+
+    def zo_refine(self, w_blocks: jax.Array, key: jax.Array, cfg: ZOConfig,
+                  method: str = "zcd") -> ZORefineResult:
+        res = jobs.phase_refine(self._spec, self._model, self._state.dev,
+                                self._phi, self._sigma,
+                                jnp.asarray(w_blocks, jnp.float32), key,
+                                cfg, method)
+        self._phi = res.x
+        # each ZCD step issues ≤2 transfer-matrix evaluations of k columns
+        self._stats.charge("search",
+                           float(cfg.steps * 2 * self._b * self.k))
+        return ZORefineResult(phi=res.x, loss=res.f, history=res.history,
+                              steps=int(cfg.steps))
+
+    def run_ic(self, key: jax.Array, sigs: jax.Array, cfg: ZOConfig, *,
+               restarts: int = 4, method: str = "zcd") -> ICJobResult:
+        sigs = jnp.asarray(sigs, jnp.float32)
+        phi, loss, history = jobs.ic_search(
+            self._spec, self._model, self._state.dev, key, cfg, sigs,
+            method, restarts)
+        self._phi = phi
+        t = self._spec.n_rot
+        u, v = realized_unitaries(self._spec, phi[:, :t], phi[:, t:],
+                                  self._state.dev, self._model)
+        # one surrogate measurement = k unit-vector probes per Σ_cal
+        # setting; ZCD spends ≤2 measurements per step
+        self._stats.charge("search", float(
+            restarts * cfg.steps * 2 * sigs.shape[0] * self.k * self._b))
+        self._stats.charge("readback", readback_cost(self._b, self.k))
+        return ICJobResult(phi=phi, u=u, v=v, loss=loss, history=history)
+
+    # -- time ----------------------------------------------------------------
+
+    def advance(self, dt: float = 1.0) -> None:
+        if self._drift_cfg is None:
+            return
+        self._drift_key, sub = jax.random.split(self._drift_key)
+        self._state = advance(self._state, dt, sub, self._drift_cfg)
+
+    # -- accounting / escape hatch -------------------------------------------
+
+    @property
+    def stats(self) -> DriverStats:
+        return self._stats
+
+    def charge(self, category: str, calls: float) -> None:
+        self._stats.charge(category, calls)
+
+    def unsafe_twin(self) -> TwinHandle:
+        return TwinHandle(self)
+
+
+def make_twin(key: jax.Array, n_blocks: int, k: int, model: NoiseModel,
+              kind: str = "clements", *, m: int | None = None,
+              n: int | None = None, drift: DriftConfig | None = None,
+              dev: DeviceRealization | None = None) -> TwinDriver:
+    """Sample a fresh device (or wrap ``dev``) behind a TwinDriver.
+
+    ``key`` feeds ``sample_device`` exactly as the pre-driver code did
+    (seed-stable with the legacy IC/PM paths); the drift chain derives
+    from the same key so one seed pins the whole chip trajectory.
+    """
+    if dev is None:
+        dev = sample_device(key, (n_blocks,), k, model, kind)
+    return TwinDriver(dev, k, model, kind, m=m, n=n, drift=drift,
+                      drift_key=jax.random.fold_in(key, 0x0D21F7))

@@ -8,11 +8,9 @@ compile to Mosaic.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..core.unitary import MeshSpec
 from .ptc_block_matmul import ptc_block_matmul as _ptc_block_matmul

@@ -21,7 +21,6 @@ tests/test_pipeline.py; measured vs the DP baseline in EXPERIMENTS §PP.
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

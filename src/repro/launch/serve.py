@@ -22,7 +22,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..data import lm_batch
 from ..models.lm import init_model, init_decode_cache, build_serve_step
@@ -36,7 +35,8 @@ def _build_fleet(args):
 
     sigma = args.drift_sigma if args.drift else 0.0
     cfg = default_runtime_config(k=args.fleet_k, sigma_drift=sigma,
-                                 probe_every=args.probe_every)
+                                 probe_every=args.probe_every,
+                                 driver_kind=args.fleet_driver)
     kw, kf = jax.random.split(jax.random.PRNGKey(args.seed + 17))
     dim = args.fleet_dim
     w = jax.random.normal(kw, (dim, dim)) / jnp.sqrt(
@@ -60,6 +60,9 @@ def main(argv=None):
     ap.add_argument("--probe-every", type=int, default=10)
     ap.add_argument("--fleet-k", type=int, default=6)
     ap.add_argument("--fleet-dim", type=int, default=18)
+    ap.add_argument("--fleet-driver", default="twin",
+                    choices=["twin", "subprocess"],
+                    help="photonic device transport behind the fleet")
     args = ap.parse_args(argv)
 
     cfg = parse_arch(args.arch)
@@ -93,25 +96,29 @@ def main(argv=None):
             router.serve(x)
             router.tick()
 
-    t0 = time.time()
-    gen, cache = greedy_decode(serve, params, cache, prompt, args.gen,
-                               extras=extras, on_step=on_step)
-    dt = time.time() - t0
-    print(f"generated {gen.shape} tokens in {dt:.1f}s "
-          f"({gen.size / dt:.1f} tok/s)")
-    print("sample:", gen[0][:24])
+    try:
+        t0 = time.time()
+        gen, cache = greedy_decode(serve, params, cache, prompt, args.gen,
+                                   extras=extras, on_step=on_step)
+        dt = time.time() - t0
+        print(f"generated {gen.shape} tokens in {dt:.1f}s "
+              f"({gen.size / dt:.1f} tok/s)")
+        print("sample:", gen[0][:24])
 
-    if router is not None:
-        rep = router.report()
-        alarms = sum(c["alarms"] for c in rep["chips"])
-        recals = sum(c["recals"] for c in rep["chips"])
-        print(f"fleet: {args.fleet} chips, {rep['ticks']} ticks, "
-              f"{rep['dropped']} dropped, {alarms} alarms, "
-              f"{recals} recals")
-        for c in rep["chips"]:
-            print(f"  chip {c['chip']}: {c['status']:<13} "
-                  f"served={c['served']:4d} d̂={c['distance']:.4f} "
-                  f"alarms={c['alarms']} recals={c['recals']}")
+        if router is not None:
+            rep = router.report()
+            alarms = sum(c["alarms"] for c in rep["chips"])
+            recals = sum(c["recals"] for c in rep["chips"])
+            print(f"fleet: {args.fleet} chips, {rep['ticks']} ticks, "
+                  f"{rep['dropped']} dropped, {alarms} alarms, "
+                  f"{recals} recals")
+            for c in rep["chips"]:
+                print(f"  chip {c['chip']}: {c['status']:<13} "
+                      f"served={c['served']:4d} d̂={c['distance']:.4f} "
+                      f"alarms={c['alarms']} recals={c['recals']}")
+    finally:
+        if router is not None:
+            router.close()
     return 0
 
 

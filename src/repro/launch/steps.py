@@ -2,10 +2,8 @@
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable
+from typing import Callable
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -14,7 +12,6 @@ from ..models.lm import (ArchConfig, build_train_step, build_serve_step,
                          forward, model_trainable_mask)
 from ..optim.optimizers import (AdamWConfig, SGDConfig, init_opt_state,
                                 apply_updates)
-from ..optim.compression import psum_compressed
 
 __all__ = ["build_update_step", "build_prefill_step", "build_serve_step",
            "init_train_state", "greedy_decode"]

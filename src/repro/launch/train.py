@@ -30,11 +30,8 @@ from ..configs import get_config, smoke_config
 from ..core.sparsity import SparsityConfig, smd_keep_iteration
 from ..checkpoint import CheckpointManager
 from ..data import lm_batch
-from ..models.lm import model_trainable_mask
-from ..optim.optimizers import AdamWConfig, init_opt_state
+from ..optim.optimizers import AdamWConfig
 from ..optim.schedules import linear_warmup_cosine
-from .sharding import param_shardings, batch_shardings, opt_state_shardings, \
-    replicated
 from .steps import build_update_step, init_train_state
 
 

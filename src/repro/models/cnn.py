@@ -10,7 +10,7 @@ models carry the paper-reproduction experiments (Tables 2-5, Figs 5/8/
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Sequence
+from typing import Any
 
 import jax
 import jax.numpy as jnp

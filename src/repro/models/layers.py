@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.ptc import PTCParams, pad_to_blocks, random_factorize
+from ..core.ptc import PTCParams, random_factorize
 from ..core.subspace import ptc_linear, SubspaceMasks
 
 __all__ = [

@@ -18,15 +18,13 @@ computes exactly the sampled estimator the photonic chip would.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from ..core.sparsity import SparsityConfig, feedback_mask, column_mask
-from .layers import (PTCLinearCfg, init_ptc_linear, apply_ptc_linear,
-                     init_rmsnorm, rmsnorm, init_layernorm, layernorm,
+from .layers import (PTCLinearCfg,                      init_rmsnorm, rmsnorm, init_layernorm, layernorm,
                      layernorm_np, init_embedding, embed, softcap,
                      trainable_mask, partition, combine, maybe_constraint)
 from .attention import (AttnCfg, init_attention, attention, decode_attention,

@@ -23,10 +23,9 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .layers import (PTCLinearCfg, init_ptc_linear, apply_ptc_linear,
-                     maybe_constraint)
+                     )
 
 __all__ = ["SSMCfg", "init_mamba", "mamba", "mamba_decode", "init_ssm_state"]
 

@@ -9,7 +9,7 @@ U/V bases are masked out), global-norm clipping, decoupled weight decay.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

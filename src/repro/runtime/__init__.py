@@ -5,13 +5,19 @@ production the chip then lives under time — thermal and aging phase
 drift walk Γ/Φ_b away from the state calibration compensated for, which
 is precisely why in-situ learnability matters (L2ight §3.2; the
 power-aware sparse-ZOO predecessor arXiv:2012.11148 motivates cheap
-on-chip re-optimization).  This package closes the loop:
+on-chip re-optimization).  This package closes the loop, talking to
+devices exclusively through the :class:`repro.hw.driver.PhotonicDriver`
+control-plane ABC:
 
-    drift.py        the plant:    seeded OU phase drift on DeviceRealization
     monitor.py      the sensor:   stochastic fidelity probes + hysteretic alarm
-    recalibrate.py  the actuator: warm-started ZO + OSP refresh (+ in-situ Σ)
-    fleet.py        the plane:    N-chip registry + health-aware router
+    recalibrate.py  the actuator: warm ZO job + OSP refresh (+ in-situ Σ),
+                                  budget autotuned from d̂ at alarm time
+    fleet.py        the plane:    N-chip registry + drift-aware router
     demo.py         the driver:   ``python -m repro.runtime.demo``
+
+(the plant — OU phase drift on the device realization — lives on the
+device side, ``repro.hw.drift``; the runtime only sees it through
+``driver.advance`` and probe estimates, exactly as with real hardware)
 
 Closed-loop state machine (one per chip; the router enforces it)::
 
@@ -33,21 +39,25 @@ Design invariants:
 * **Alarms are hysteretic.**  ``consecutive`` strikes above
   ``alarm_threshold`` raise; recovery must pass the *lower*
   ``clear_threshold`` — no chatter around one boundary.
-* **Everything is seeded.**  Drift, probes, and recal searches all
-  derive from one PRNG chain, so whole fleet trajectories are exactly
-  reproducible (the runtime tests assert bit-equal replays).
-* **Costs are accounted.**  Probe and recal budgets are tallied in PTC
-  calls with the paper's Appendix-G energy model (``core.profiler``),
+* **Everything is seeded.**  Probes and recal searches derive from one
+  PRNG chain; each driver owns its drift chain (seeded at construction),
+  so whole fleet trajectories are exactly reproducible — and identical
+  across the in-process and subprocess transports.
+* **Costs are metered at the boundary.**  Every op that touches light is
+  tallied in PTC calls by the driver itself (Appendix-G energy model),
   so the closed loop's overhead is measurable, not vibes
-  (``benchmarks/drift_recovery.py``).
+  (``benchmarks/drift_recovery.py``, ``benchmarks/driver_overhead.py``).
+* **No twin peeking.**  Exact distances / device realizations exist only
+  behind ``driver.unsafe_twin()`` (tests and benchmarks); the guard test
+  in ``tests/test_driver.py`` keeps runtime code on the legal surface.
 """
 
-from .drift import (DriftConfig, DriftState, init_drift, advance,
-                    bias_deviation, DEFAULT_DRIFT)  # noqa: F401
-from .monitor import (MonitorConfig, HealthState, realized_blocks,
-                      aggregate_distance, probe_mapping_distance,
-                      probe_identity_distance, true_mapping_distance,
-                      update_health, clear_health, probe_ptc_calls)  # noqa: F401
-from .recalibrate import RecalConfig, RecalResult, recalibrate  # noqa: F401
+from .monitor import (MonitorConfig, HealthState, aggregate_distance,
+                      probe_mapping_distance, readout_mapping_distance,
+                      probe_identity_distance, update_health,
+                      clear_health)  # noqa: F401
+from .recalibrate import (RecalConfig, RecalResult, recalibrate,
+                          autotune_zo_steps)  # noqa: F401
 from .fleet import (HEALTHY, DEGRADED, RECALIBRATING, RuntimeConfig, Chip,
-                    FleetRouter, make_chip, make_fleet)  # noqa: F401
+                    FleetRouter, make_chip, make_fleet,
+                    predicted_distance)  # noqa: F401

@@ -1,6 +1,7 @@
 """Closed-loop runtime demo: drift → alarm → recalibrate → recover.
 
     PYTHONPATH=src python -m repro.runtime.demo --chips 4 --steps 200
+    PYTHONPATH=src python -m repro.runtime.demo --driver subprocess
 
 Builds a fleet of N virtual chips (independent manufacturing draws of
 the same mapped weight), then runs the serving loop under phase drift:
@@ -10,6 +11,10 @@ jobs that the router schedules around.  Prints the event timeline and a
 summary showing (a) fidelity degrading under drift, (b) alarms firing,
 (c) recalibration restoring the mapping distance below the clear
 threshold, and (d) serving throughput uninterrupted throughout.
+
+``--driver subprocess`` runs every device out-of-process behind the
+JSON-over-pipe :class:`~repro.hw.subprocess_driver.SubprocessDriver` —
+the hardware-in-the-loop topology — and the same loop closes unchanged.
 
 ``simulate`` is the library entry point ``benchmarks/drift_recovery.py``
 reuses for the closed- vs. open-loop recovery curves.
@@ -23,9 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.noise import DEFAULT_NOISE
-from ..core.profiler import linear_layer_spec, layer_cost
-from ..core.sparsity import SparsityConfig
-from .drift import DriftConfig
+from ..hw.drift import DriftConfig
 from .monitor import MonitorConfig
 from .recalibrate import RecalConfig
 from .fleet import FleetRouter, RuntimeConfig, make_fleet, RECALIBRATING
@@ -35,19 +38,28 @@ __all__ = ["simulate", "default_runtime_config", "main"]
 
 def default_runtime_config(k: int = 6, sigma_drift: float = 0.015,
                            probe_every: int = 10,
-                           zo_steps: int = 400) -> RuntimeConfig:
+                           zo_steps: int = 400,
+                           driver_kind: str = "twin",
+                           auto_budget: bool = False,
+                           router_policy: str = "drift_aware"
+                           ) -> RuntimeConfig:
     """Demo-scale policy: drift crosses the alarm threshold within a few
     probe periods; a short warm-started recal restores ~initial error."""
+    monitor = MonitorConfig(n_probes=6, alarm_threshold=0.05,
+                            clear_threshold=0.02, consecutive=2)
     return RuntimeConfig(
         k=k,
         noise=DEFAULT_NOISE.post_ic(),
         drift=DriftConfig(sigma_phase=sigma_drift, theta=0.01),
-        monitor=MonitorConfig(n_probes=6, alarm_threshold=0.05,
-                              clear_threshold=0.02, consecutive=2),
-        recal=RecalConfig(zo_steps=zo_steps, delta0=0.05),
+        monitor=monitor,
+        recal=RecalConfig(zo_steps=zo_steps, delta0=0.05,
+                          auto_budget=auto_budget,
+                          auto_target=monitor.clear_threshold),
         probe_every=probe_every,
         recal_latency=4,
         max_concurrent_recals=1,
+        driver_kind=driver_kind,
+        router_policy=router_policy,
     )
 
 
@@ -70,43 +82,43 @@ def simulate(n_chips: int, steps: int, *, dim: int = 18, batch: int = 8,
     trace = dict(t=[], max_dist=[], mean_dist=[], serve_err=[],
                  n_recalibrating=[], served_chip=[])
     n_events = 0
-    for t in range(1, steps + 1):
-        x = jax.random.normal(jax.random.fold_in(kx, t), (batch, dim))
-        y, chip_id = router.serve(x)
-        if y is not None:
-            y_ref = x @ w.T
-            err = float(jnp.sum((y - y_ref) ** 2) /
-                        (jnp.sum(y_ref ** 2) + 1e-12))
-        else:
-            err = float("nan")
-        router.tick()
+    try:
+        for t in range(1, steps + 1):
+            x = jax.random.normal(jax.random.fold_in(kx, t), (batch, dim))
+            y, chip_id = router.serve(x)
+            if y is not None:
+                y_ref = x @ w.T
+                err = float(jnp.sum((y - y_ref) ** 2) /
+                            (jnp.sum(y_ref ** 2) + 1e-12))
+            else:
+                err = float("nan")
+            router.tick()
 
-        dists = router.true_distances()
-        trace["t"].append(t)
-        trace["max_dist"].append(max(dists))
-        trace["mean_dist"].append(sum(dists) / len(dists))
-        trace["serve_err"].append(err)
-        trace["n_recalibrating"].append(
-            sum(c.status == RECALIBRATING for c in router.chips))
-        trace["served_chip"].append(-1 if chip_id is None else chip_id)
+            dists = router.true_distances()
+            trace["t"].append(t)
+            trace["max_dist"].append(max(dists))
+            trace["mean_dist"].append(sum(dists) / len(dists))
+            trace["serve_err"].append(err)
+            trace["n_recalibrating"].append(
+                sum(c.status == RECALIBRATING for c in router.chips))
+            trace["served_chip"].append(-1 if chip_id is None else chip_id)
 
-        if verbose:
-            for ev in router.events[n_events:]:
-                print(f"[t={ev['tick']:4d}] {_fmt_event(ev)}")
-            n_events = len(router.events)
+            if verbose:
+                for ev in router.events[n_events:]:
+                    print(f"[t={ev['tick']:4d}] {_fmt_event(ev)}")
+                n_events = len(router.events)
 
-    report = router.report()
-    # serve-path PTC cost for overhead ratios (Appendix-G model)
-    serve_spec = linear_layer_spec("serve", dim, dim, batch * steps, k=cfg.k)
-    serve_calls = layer_cost(serve_spec, SparsityConfig(),
-                             inference_only=True).e_fwd
-    report["serve_ptc_calls"] = serve_calls
+        report = router.report()
+    finally:
+        router.close()
     return dict(trace=trace, report=report, config=dict(
         chips=n_chips, steps=steps, dim=dim, batch=batch, seed=seed,
         recal_enabled=recal_enabled, k=cfg.k,
         alarm_threshold=cfg.monitor.alarm_threshold,
         clear_threshold=cfg.monitor.clear_threshold,
-        sigma_drift=cfg.drift.sigma_phase))
+        sigma_drift=cfg.drift.sigma_phase,
+        driver=cfg.driver_kind, router_policy=cfg.router_policy,
+        auto_budget=cfg.recal.auto_budget))
 
 
 def _fmt_event(ev: dict) -> str:
@@ -117,7 +129,7 @@ def _fmt_event(ev: dict) -> str:
         return f"RECAL chip {ev['chip']}: job scheduled (chip unroutable)"
     return (f"RECAL chip {ev['chip']} done: distance "
             f"{ev['dist_before']:.4f} → {ev['dist_after']:.4f} "
-            f"[{ev['status']}]")
+            f"({ev['zo_steps']} ZO steps) [{ev['status']}]")
 
 
 def main(argv=None) -> int:
@@ -131,13 +143,25 @@ def main(argv=None) -> int:
     ap.add_argument("--sigma-drift", type=float, default=0.015)
     ap.add_argument("--probe-every", type=int, default=10)
     ap.add_argument("--zo-steps", type=int, default=400)
+    ap.add_argument("--driver", default="twin",
+                    choices=["twin", "subprocess"],
+                    help="device transport: in-process twin or "
+                         "JSON-over-pipe out-of-process twin (HIL shape)")
+    ap.add_argument("--policy", default="drift_aware",
+                    choices=["drift_aware", "least_served"],
+                    help="dispatch ranking policy")
+    ap.add_argument("--auto-budget", action="store_true",
+                    help="autotune recal ZO steps from d̂ at alarm time")
     ap.add_argument("--no-recal", action="store_true",
                     help="open-loop baseline: alarms fire, nothing recovers")
     args = ap.parse_args(argv)
 
     cfg = default_runtime_config(k=args.k, sigma_drift=args.sigma_drift,
                                  probe_every=args.probe_every,
-                                 zo_steps=args.zo_steps)
+                                 zo_steps=args.zo_steps,
+                                 driver_kind=args.driver,
+                                 auto_budget=args.auto_budget,
+                                 router_policy=args.policy)
     out = simulate(args.chips, args.steps, dim=args.dim, batch=args.batch,
                    seed=args.seed, cfg=cfg,
                    recal_enabled=not args.no_recal, verbose=True)
@@ -153,9 +177,9 @@ def main(argv=None) -> int:
     served = sum(1 for c in trace["served_chip"] if c >= 0)
     probe_calls = sum(c["probe_ptc_calls"] for c in report["chips"])
     recal_calls = sum(c["recal_ptc_calls"] for c in report["chips"])
-    serve_calls = report["serve_ptc_calls"]
+    serve_calls = sum(c["serve_ptc_calls"] for c in report["chips"])
 
-    print("\n--- closed-loop summary ---")
+    print(f"\n--- closed-loop summary ({args.driver} driver) ---")
     print(f"fidelity degraded under drift : peak distance {peak:.4f} "
           f"(alarm threshold {cfg.monitor.alarm_threshold})")
     print(f"alarms fired                  : {alarms} "
@@ -166,7 +190,7 @@ def main(argv=None) -> int:
     print(f"throughput uninterrupted      : {served}/{args.steps} batches "
           f"served, {report['dropped']} dropped")
     print(f"probe overhead                : {probe_calls:.0f} PTC calls "
-          f"({100 * probe_calls / serve_calls:.2f}% of serve path)")
+          f"({100 * probe_calls / max(serve_calls, 1):.2f}% of serve path)")
     print(f"recal overhead (out-of-band)  : {recal_calls:.0f} PTC calls")
     for c in report["chips"]:
         print(f"  chip {c['chip']}: {c['status']:<8} served={c['served']:4d} "

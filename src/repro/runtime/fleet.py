@@ -7,6 +7,13 @@ unhealthy devices, the scheduler/router idiom of LLM serving stacks
 (sglang-style: requests never block on maintenance work; recalibration
 runs out-of-band on a bounded number of "repair slots").
 
+Each :class:`Chip` holds a :class:`~repro.hw.driver.PhotonicDriver` —
+the router never touches device internals: it serves through
+``driver.forward_layer``, probes through the monitor's driver-based
+estimators, lets time pass with ``driver.advance``, and reads PTC-call
+budgets off ``driver.stats``.  Any transport (in-process twin,
+subprocess twin, real hardware) slots in unchanged.
+
 Per-chip state machine (see ``runtime/__init__`` for the full DESIGN
 note)::
 
@@ -16,32 +23,38 @@ note)::
                  └─ probe still above clear ──▶ DEGRADED (re-queued)
 
 DEGRADED chips still serve (stale but functional — better than dropping
-traffic); RECALIBRATING chips are never dispatched to.  The router
-prefers HEALTHY chips and falls back to DEGRADED ones only when no
-healthy chip is available, balancing by least-served.
+traffic); RECALIBRATING chips are never dispatched to.  Routing policy:
+
+* ``"drift_aware"`` (default) — rank dispatch candidates by *predicted*
+  fidelity at dispatch time: the last probe estimate extrapolated along
+  the OU relaxation law (variance relaxes toward its stationary level
+  ``σ_φ²/2θ`` with rate ``2θ``, i.e. half-life ``ln2/2θ`` ticks), so a
+  chip probed long ago is charged its forecast drift, not its stale
+  estimate.  Ties break by least-served.
+* ``"least_served"`` — the plain balancing baseline.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from ..core import unitary as un
 from ..core.mapping import parallel_map
 from ..core.noise import NoiseModel, DEFAULT_NOISE
 from ..core.ptc import blockize
-from .drift import DriftConfig, DriftState, init_drift, advance, DEFAULT_DRIFT
-from .monitor import (MonitorConfig, HealthState, realized_blocks,
-                      probe_mapping_distance, true_mapping_distance,
-                      update_health, clear_health, probe_ptc_calls)
+from ..hw import make_driver
+from ..hw.drift import DriftConfig, DEFAULT_DRIFT
+from .monitor import (MonitorConfig, HealthState, probe_mapping_distance,
+                      update_health, clear_health)
 from .recalibrate import RecalConfig, recalibrate
 
 __all__ = ["HEALTHY", "DEGRADED", "RECALIBRATING", "RuntimeConfig",
-           "Chip", "FleetRouter", "make_chip", "make_fleet"]
+           "Chip", "FleetRouter", "make_chip", "make_fleet",
+           "predicted_distance"]
 
 HEALTHY = "healthy"
 DEGRADED = "degraded"
@@ -64,28 +77,28 @@ class RuntimeConfig:
     probe_every: int = 10        # ticks between health checks per chip
     recal_latency: int = 4       # ticks a recal job occupies the chip
     max_concurrent_recals: int = 1  # repair-slot bandwidth
+    driver_kind: str = "twin"    # "twin" | "subprocess" (hw.make_driver)
+    router_policy: str = "drift_aware"  # | "least_served"
 
 
 @dataclasses.dataclass
 class Chip:
-    """One virtual chip: a mapped weight + its drifting realization."""
+    """One virtual chip: a mapped weight behind its control-plane driver."""
 
     chip_id: int
     m: int
     n: int
     w_blocks: jax.Array          # (B, k, k) mapping targets
-    phi: jax.Array               # (B, 2T) commanded phases
-    sigma: jax.Array             # (B, k) attenuator settings
-    drift: DriftState
+    driver: object               # PhotonicDriver (owns phi/sigma/clock/meter)
     health: HealthState
     status: str = HEALTHY
     recal_ticks_left: int = 0
+    last_probe_tick: int = 0     # when health.distance was last measured
     # counters
     served: int = 0
     alarms: int = 0
     recals: int = 0
-    probe_calls: float = 0.0
-    recal_calls: float = 0.0
+    recal_calls: float = 0.0     # PTC calls spent by recal jobs (job deltas)
 
     @property
     def routable(self) -> bool:
@@ -93,19 +106,23 @@ class Chip:
 
 
 def make_chip(key: jax.Array, chip_id: int, w: jax.Array,
-              cfg: RuntimeConfig) -> Chip:
-    """Deploy ``w`` onto a fresh device: PM (commanded-SVD + OSP; Σ
-    absorbs most of the residual, the cheap large-model mode) and start
-    the drift clock."""
-    pm = parallel_map(key, w, cfg.k, cfg.noise, kind=cfg.kind, run_zo=False)
-    b = pm.phi_u.shape[0]
-    phi = jnp.concatenate([pm.phi_u, pm.phi_v], axis=-1)
-    sigma = pm.params.s.reshape(b, cfg.k)
+              cfg: RuntimeConfig, driver=None) -> Chip:
+    """Deploy ``w`` onto a fresh device: construct the chip's driver
+    (``cfg.driver_kind`` transport), PM it (commanded-SVD + OSP; Σ
+    absorbs most of the residual, the cheap large-model mode) — the
+    drift clock is the driver's own."""
+    m, n = int(w.shape[0]), int(w.shape[1])
+    b = (-(-m // cfg.k)) * (-(-n // cfg.k))
+    kd, kpm = jax.random.split(key)
+    if driver is None:
+        driver = make_driver(cfg.driver_kind, kd, b, cfg.k, cfg.noise,
+                             cfg.kind, m=m, n=n, drift=cfg.drift)
+    pm = parallel_map(kpm, w, cfg.k, cfg.noise, kind=cfg.kind,
+                      run_zo=False, driver=driver)
     w_blocks = blockize(w, cfg.k).reshape(b, cfg.k, cfg.k)
     health = HealthState(distance=float(np.asarray(pm.err_osp).mean()))
-    return Chip(chip_id=chip_id, m=w.shape[0], n=w.shape[1],
-                w_blocks=w_blocks, phi=phi, sigma=sigma,
-                drift=init_drift(pm.dev), health=health)
+    return Chip(chip_id=chip_id, m=m, n=n, w_blocks=w_blocks,
+                driver=driver, health=health)
 
 
 def make_fleet(key: jax.Array, n_chips: int, w: jax.Array,
@@ -116,13 +133,34 @@ def make_fleet(key: jax.Array, n_chips: int, w: jax.Array,
     return [make_chip(keys[i], i, w, cfg) for i in range(n_chips)]
 
 
+def predicted_distance(chip: Chip, now: int, drift: DriftConfig) -> float:
+    """Forecast of a chip's mapping distance at tick ``now``.
+
+    Small-angle, the distance tracks the phase-error variance, whose OU
+    law relaxes toward the stationary level ``σ_φ²/2θ`` with rate
+    ``2θ``::
+
+        d(Δ) ≈ d_∞ + (d̂ − d_∞)·exp(−2θΔ),   d_∞ = σ_φ²/(2θ)
+
+    so a stale low estimate inflates toward the stationary floor while a
+    fresh one is trusted as-is.  A heuristic (constant-factor-free), but
+    monotone in both the estimate and its staleness — exactly what a
+    dispatch *ranking* needs.
+    """
+    dt = max(0, now - chip.last_probe_tick)
+    d_inf = drift.sigma_phase ** 2 / (2.0 * drift.theta + 1e-12)
+    decay = math.exp(-2.0 * drift.theta * dt)
+    return d_inf + (chip.health.distance - d_inf) * decay
+
+
 class FleetRouter:
     """Dispatches serve traffic; drives drift, probes, and repair jobs.
 
     The router owns virtual time: one :meth:`tick` = one scheduling
-    quantum (drift advances on every chip, due health checks run, repair
-    jobs count down / complete).  ``dispatch``/``serve`` picks a chip for
-    one batch; RECALIBRATING chips are structurally unroutable.
+    quantum (every chip's driver advances its clock, due health checks
+    run, repair jobs count down / complete).  ``dispatch``/``serve``
+    picks a chip for one batch; RECALIBRATING chips are structurally
+    unroutable.
     """
 
     def __init__(self, chips: list[Chip], cfg: RuntimeConfig,
@@ -136,7 +174,6 @@ class FleetRouter:
         self.dropped = 0             # batches with no routable chip
         self.events: list[dict] = []
         self._key = jax.random.PRNGKey(seed)
-        self._spec = un.mesh_spec(cfg.k, cfg.kind)
 
     # -- key plumbing -------------------------------------------------------
 
@@ -147,11 +184,18 @@ class FleetRouter:
     # -- routing ------------------------------------------------------------
 
     def dispatch(self) -> Optional[Chip]:
-        """Pick the least-served routable chip, preferring HEALTHY."""
+        """Pick a routable chip, preferring HEALTHY; rank within the pool
+        by the configured policy (predicted fidelity decay or plain
+        least-served)."""
         for pool in (HEALTHY, DEGRADED):
             cands = [c for c in self.chips if c.status == pool]
-            if cands:
-                return min(cands, key=lambda c: c.served)
+            if not cands:
+                continue
+            if self.cfg.router_policy == "drift_aware":
+                return min(cands, key=lambda c: (
+                    predicted_distance(c, self.tick_count, self.cfg.drift),
+                    c.served, c.chip_id))
+            return min(cands, key=lambda c: c.served)
         return None
 
     def serve(self, x: jax.Array) -> tuple[Optional[jax.Array], Optional[int]]:
@@ -162,22 +206,22 @@ class FleetRouter:
         if chip is None:
             self.dropped += 1
             return None, None
-        y = _chip_forward(self._spec, chip.phi, chip.sigma,
-                          chip.drift.dev, self.cfg.noise, x, chip.m)
+        y = chip.driver.forward_layer(x)
         chip.served += 1
         return y, chip.chip_id
 
     # -- the closed loop ----------------------------------------------------
 
     def tick(self, dt: float = 1.0) -> None:
-        """Advance virtual time: drift every chip, run due probes, fire
-        alarms, schedule/complete out-of-band recalibration jobs."""
+        """Advance virtual time: every chip's clock runs, due probes
+        fire, alarms raise, out-of-band recalibration jobs schedule and
+        complete."""
         cfg = self.cfg
         self.tick_count += 1
         in_repair = sum(c.status == RECALIBRATING for c in self.chips)
 
         for chip in self.chips:
-            chip.drift = advance(chip.drift, dt, self._next_key(), cfg.drift)
+            chip.driver.advance(dt)
 
             if chip.status == RECALIBRATING:
                 chip.recal_ticks_left -= 1
@@ -199,13 +243,11 @@ class FleetRouter:
 
     def _probe(self, chip: Chip) -> None:
         cfg = self.cfg
-        est = probe_mapping_distance(
-            self._next_key(), self._spec, chip.phi, chip.sigma,
-            chip.drift.dev, cfg.noise, chip.w_blocks, cfg.monitor.n_probes)
+        est = probe_mapping_distance(self._next_key(), chip.driver,
+                                     chip.w_blocks, cfg.monitor.n_probes)
         was_alarmed = chip.health.alarmed
         chip.health = update_health(chip.health, float(est), cfg.monitor)
-        chip.probe_calls += probe_ptc_calls(chip.m, chip.n, cfg.k,
-                                            cfg.monitor.n_probes)
+        chip.last_probe_tick = self.tick_count
         if chip.health.alarmed and not was_alarmed:
             chip.alarms += 1
             chip.status = DEGRADED
@@ -214,63 +256,51 @@ class FleetRouter:
                                     distance=chip.health.distance))
 
     def _finish_recal(self, chip: Chip) -> None:
-        """The out-of-band job lands: apply its result against the chip's
-        current (post-latency) drifted state and re-probe to clear."""
+        """The out-of-band job lands: run it against the chip's current
+        (post-latency) drifted state and re-probe to clear."""
         cfg = self.cfg
-        res = recalibrate(self._next_key(), self._spec, chip.phi, chip.sigma,
-                          chip.drift.dev, cfg.noise, chip.w_blocks, cfg.recal)
-        chip.phi, chip.sigma = res.phi, res.sigma
-        chip.recal_calls += res.ptc_calls
+        res = recalibrate(self._next_key(), chip.driver, chip.w_blocks,
+                          cfg.recal, dist_hint=chip.health.distance)
         chip.recals += 1
-        est = probe_mapping_distance(
-            self._next_key(), self._spec, chip.phi, chip.sigma,
-            chip.drift.dev, cfg.noise, chip.w_blocks, cfg.monitor.n_probes)
-        chip.probe_calls += probe_ptc_calls(chip.m, chip.n, cfg.k,
-                                            cfg.monitor.n_probes)
+        chip.recal_calls += res.ptc_calls
+        est = probe_mapping_distance(self._next_key(), chip.driver,
+                                     chip.w_blocks, cfg.monitor.n_probes)
         chip.health = clear_health(chip.health, float(est), cfg.monitor)
+        chip.last_probe_tick = self.tick_count
         chip.status = HEALTHY if not chip.health.alarmed else DEGRADED
         self.events.append(dict(
             tick=self.tick_count, event="recal_done", chip=chip.chip_id,
             dist_before=float(res.dist_before),
-            dist_after=float(res.dist_after), status=chip.status))
+            dist_after=float(res.dist_after), zo_steps=res.zo_steps,
+            status=chip.status))
 
     # -- reporting ----------------------------------------------------------
 
     def true_distances(self) -> list[float]:
-        """Exact per-chip mapping distances (simulator read-out)."""
-        return [float(true_mapping_distance(
-            self._spec, c.phi, c.sigma, c.drift.dev, self.cfg.noise,
-            c.w_blocks)) for c in self.chips]
+        """Exact per-chip mapping distances — a twin-only readout routed
+        through the audited ``driver.unsafe_twin()`` escape hatch
+        (benchmark/diagnostic use; raises TwinUnavailable on real HW)."""
+        return [c.driver.unsafe_twin().true_mapping_distance(c.w_blocks)
+                for c in self.chips]
 
     def report(self) -> dict:
-        return dict(
-            ticks=self.tick_count,
-            dropped=self.dropped,
-            chips=[dict(chip=c.chip_id, status=c.status, served=c.served,
-                        distance=c.health.distance, alarms=c.alarms,
-                        recals=c.recals, probe_ptc_calls=c.probe_calls,
-                        recal_ptc_calls=c.recal_calls)
-                   for c in self.chips],
-            events=self.events,
-        )
+        chips = []
+        for c in self.chips:
+            s = c.driver.stats
+            # everything the driver metered that is neither serve traffic
+            # nor a recal job's delta is monitor probing (incl. the PM
+            # deployment readout)
+            chips.append(dict(chip=c.chip_id, status=c.status,
+                              served=c.served, distance=c.health.distance,
+                              alarms=c.alarms, recals=c.recals,
+                              probe_ptc_calls=s.total - s.serve - c.recal_calls,
+                              recal_ptc_calls=c.recal_calls,
+                              serve_ptc_calls=s.serve,
+                              ptc_calls=s.as_dict()))
+        return dict(ticks=self.tick_count, dropped=self.dropped,
+                    chips=chips, events=self.events)
 
-
-def _chip_forward(spec, phi, sigma, dev, model, x, out_dim):
-    """y = Ŵ x through the drifted realized blocks (paper dataflow:
-    per-block V* → Σ → U, electronic accumulation over q is implicit
-    here because each chip hosts a flat batch of blocks of one weight)."""
-    k = spec.k
-    w_hat = realized_blocks(spec, phi, sigma, dev, model)  # (B, k, k)
-    b = w_hat.shape[0]
-    # reassemble the (P, Q) grid from the flat block batch
-    p = -(-out_dim // k)
-    q = b // p
-    w = w_hat.reshape(p, q, k, k)
-    xb = x
-    n = q * k
-    if x.shape[-1] != n:
-        xb = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, n - x.shape[-1])])
-    xb = xb.reshape(x.shape[:-1] + (q, k))
-    y = jnp.einsum("pqij,...qj->...pi", w, xb)
-    y = y.reshape(x.shape[:-1] + (p * k,))
-    return y[..., :out_dim]
+    def close(self) -> None:
+        """Release every chip's driver transport (subprocess servers)."""
+        for c in self.chips:
+            c.driver.close()

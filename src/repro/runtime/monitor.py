@@ -4,16 +4,18 @@ On chip, the full realized transfer matrix is not observable for free —
 reading back all k columns of every block costs P·Q·k PTC calls.  The
 monitor instead estimates mapping fidelity *stochastically* from a
 handful of forward probes: random Gaussian inputs streamed through the
-(drifted) device, compared electronically against the target response,
+(drifted) device's :class:`~repro.hw.driver.PhotonicDriver`, compared
+electronically against the target response,
 
     d̂ = Σ_blocks ‖Ŵ x − W x‖² / Σ_blocks ‖W x‖²,
 
 an unbiased Hutchinson-style estimator of the fleet-level aggregate of
 ``mapping.matrix_distance`` (exact in the limit of many probes; the
-exact readout is exposed as :func:`true_mapping_distance` for tests and
-benchmarks).  Chips parked in the post-IC identity state are probed the
-same way against ``Ĩ`` via :func:`probe_identity_distance`, which
-reduces to ``calibration.identity_mse`` at full readout.
+full-readout variant is :func:`readout_mapping_distance`, and the twin's
+free ground truth lives behind ``driver.unsafe_twin()``).  Chips parked
+in the post-IC identity state are probed the same way against ``Ĩ`` via
+:func:`probe_identity_distance`, which reduces to
+``calibration.identity_mse`` at full readout.
 
 Alarm logic is hysteretic: ``consecutive`` probe estimates above
 ``alarm_threshold`` raise the alarm (one noisy estimate never trips
@@ -21,9 +23,9 @@ it); after recalibration the alarm clears only once a fresh probe falls
 below the *lower* ``clear_threshold``, so the loop cannot chatter
 around a single boundary.
 
-Probe overhead is costed with the paper's Appendix-G energy model
-(``core.profiler``): one probe column through a P×Q-block layer is
-P·Q PTC calls.
+Probe overhead is metered by the driver itself (``driver.stats``) in
+the paper's Appendix-G energy unit: one probe column through a
+P×Q-block layer is P·Q PTC calls.
 """
 
 from __future__ import annotations
@@ -34,17 +36,12 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from ..core import unitary as un
-from ..core.calibration import (DeviceRealization, identity_mse,
-                                realized_unitaries)
-from ..core.noise import NoiseModel
-from ..core.profiler import linear_layer_spec, layer_cost
-from ..core.sparsity import SparsityConfig
+from ..core.calibration import identity_mse
+from ..hw.driver import readout_blocks
 
-__all__ = ["MonitorConfig", "HealthState", "realized_blocks",
-           "aggregate_distance", "probe_mapping_distance",
-           "probe_identity_distance", "true_mapping_distance",
-           "update_health", "clear_health", "probe_ptc_calls"]
+__all__ = ["MonitorConfig", "HealthState", "aggregate_distance",
+           "probe_mapping_distance", "readout_mapping_distance",
+           "probe_identity_distance", "update_health", "clear_health"]
 
 
 class MonitorConfig(NamedTuple):
@@ -64,19 +61,6 @@ class HealthState:
     probes: int = 0              # health checks performed
 
 
-def realized_blocks(spec: un.MeshSpec, phi: jax.Array, sigma: jax.Array,
-                    dev: DeviceRealization, model: NoiseModel) -> jax.Array:
-    """Ŵ blocks the drifted device currently implements for commanded
-    phases ``phi = [Φ^U | Φ^V]`` (..., 2T) and attenuators ``sigma``.
-
-    The single definition of the runtime's transfer function — the
-    monitor scores it, ``recalibrate`` optimizes it, and the fleet
-    serves through it, so all three always see the same physics."""
-    t = spec.n_rot
-    u, v = realized_unitaries(spec, phi[..., :t], phi[..., t:], dev, model)
-    return (u * sigma[..., None, :]) @ v
-
-
 def aggregate_distance(w_hat: jax.Array, w_blocks: jax.Array) -> jax.Array:
     """Fleet-level scalar: Σ_blocks‖Ŵ−W‖² / Σ_blocks‖W‖² (the aggregate
     of ``mapping.matrix_distance`` over a chip's block batch)."""
@@ -85,53 +69,41 @@ def aggregate_distance(w_hat: jax.Array, w_blocks: jax.Array) -> jax.Array:
     return jnp.sum(num) / jnp.sum(den)
 
 
-@jax.jit
-def _probe_estimate(w_hat: jax.Array, w_blocks: jax.Array,
-                    x: jax.Array) -> jax.Array:
-    y_hat = jnp.einsum("bij,nj->bni", w_hat, x)
+def probe_mapping_distance(key: jax.Array, driver, w_blocks: jax.Array,
+                           n_probes: int) -> jax.Array:
+    """Stochastic estimate of the aggregate mapping distance from
+    ``n_probes`` Gaussian forward probes (shared across blocks)."""
+    k = w_blocks.shape[-1]
+    x = jax.random.normal(key, (n_probes, k))
+    y_hat = driver.forward(x, category="probe")            # (B, n, k)
     y_ref = jnp.einsum("bij,nj->bni", w_blocks, x)
     num = jnp.sum((y_hat - y_ref) ** 2)
     den = jnp.sum(y_ref ** 2) + 1e-12
     return num / den
 
 
-def probe_mapping_distance(key: jax.Array, spec: un.MeshSpec,
-                           phi: jax.Array, sigma: jax.Array,
-                           dev: DeviceRealization, model: NoiseModel,
-                           w_blocks: jax.Array, n_probes: int) -> jax.Array:
-    """Stochastic estimate of the aggregate mapping distance from
-    ``n_probes`` Gaussian forward probes (shared across blocks)."""
-    k = w_blocks.shape[-1]
-    x = jax.random.normal(key, (n_probes, k))
-    w_hat = realized_blocks(spec, phi, sigma, dev, model)
-    return _probe_estimate(w_hat, w_blocks, x)
+def readout_mapping_distance(driver, w_blocks: jax.Array) -> jax.Array:
+    """Exact aggregate distance from a full Ŵ readout: k unit-vector
+    probe columns per block (observability-legal, costs B·k calls)."""
+    return aggregate_distance(readout_blocks(driver), w_blocks)
 
 
-def true_mapping_distance(spec: un.MeshSpec, phi: jax.Array,
-                          sigma: jax.Array, dev: DeviceRealization,
-                          model: NoiseModel, w_blocks: jax.Array) -> jax.Array:
-    """Exact aggregate distance (full transfer-matrix readout) —
-    the probe estimator's ground truth."""
-    return aggregate_distance(realized_blocks(spec, phi, sigma, dev, model),
-                              w_blocks)
-
-
-def probe_identity_distance(key: jax.Array, spec: un.MeshSpec,
-                            phi: jax.Array, dev: DeviceRealization,
-                            model: NoiseModel, n_probes: int) -> jax.Array:
-    """Identity-state health: probe ``n_probes`` random basis columns of
-    the realized U/V* and score them against Ĩ columns (sign-agnostic).
-    With ``n_probes >= k`` this equals ``identity_mse`` over both meshes.
+def probe_identity_distance(key: jax.Array, driver,
+                            n_probes: int) -> jax.Array:
+    """Identity-state health: read back the realized U/V* (reciprocal
+    probes, metered by the driver) and score ``n_probes`` random basis
+    columns against Ĩ columns (sign-agnostic).  With ``n_probes >= k``
+    this equals ``identity_mse`` over both meshes.
     """
-    t = spec.n_rot
-    k = spec.k
-    u, v = realized_unitaries(spec, phi[..., :t], phi[..., t:], dev, model)
+    k = driver.k
     if n_probes >= k:
+        u, v = driver.readback_bases()
         return (jnp.mean(identity_mse(u)) + jnp.mean(identity_mse(v))) / 2.0
     cols = jax.random.choice(key, k, (n_probes,), replace=False)
+    u, v = driver.readback_bases(cols=cols)   # partial: 2·B·n_probes calls
     eye = jnp.eye(k)[:, cols]
-    err_u = jnp.mean((jnp.abs(u[..., :, cols]) - eye) ** 2)
-    err_v = jnp.mean((jnp.abs(v[..., :, cols]) - eye) ** 2)
+    err_u = jnp.mean((jnp.abs(u) - eye) ** 2)
+    err_v = jnp.mean((jnp.abs(v) - eye) ** 2)
     return (err_u + err_v) / 2.0
 
 
@@ -154,10 +126,3 @@ def clear_health(h: HealthState, estimate: float,
     return HealthState(distance=est, strikes=0 if ok else h.strikes,
                        alarmed=not ok if h.alarmed else False,
                        probes=h.probes + 1)
-
-
-def probe_ptc_calls(m: int, n: int, k: int, n_probes: int) -> float:
-    """PTC-call cost of one health check (Appendix-G energy model):
-    ``n_probes`` columns through the P×Q block grid."""
-    spec = linear_layer_spec("health_probe", m, n, n_probes, k=k)
-    return layer_cost(spec, SparsityConfig(), inference_only=True).e_fwd

@@ -4,10 +4,11 @@ When the monitor raises an alarm, the runtime does NOT redo the full
 cold-start IC→PM flow (hundreds of thousands of probes).  Drift is
 small and continuous, so the current commanded phases are an excellent
 warm start: a short alternate ZCD search (the same hardware-restricted
-search ``optim.zo`` used for IC/PM, §3.2–3.3) re-absorbs the walked
-phase biases at a fraction of the cold-start budget.  The Σ attenuators
-are then refreshed analytically with OSP (``mapping.osp``, Claim 1) on
-the freshly realized bases — on chip this is two reciprocal PTC probes
+search ``optim.zo`` used for IC/PM, §3.2–3.3), requested as an in-situ
+``driver.zo_refine`` job, re-absorbs the walked phase biases at a
+fraction of the cold-start budget.  The Σ attenuators are then
+refreshed analytically with OSP (``mapping.osp``, Claim 1) on the
+freshly read-back bases — on chip this is two reciprocal PTC probes
 per block and sign flips cancel on the diagonal.
 
 Optionally, a few *subspace-learning* steps follow: stochastic in-situ
@@ -20,29 +21,35 @@ which approaches the OSP optimum without any full matrix readout — the
 fast-adaptation mode for chips whose target is a live training state
 rather than a frozen weight.
 
-All stages run vmapped across the chip's blocks (independent physical
-circuits), mirroring IC/PM's batched-sub-task scalability trick.
+The ZO budget can be *autotuned* from the probe distance at alarm time
+(``RecalConfig.auto_budget``): ``benchmarks/drift_recovery.py`` shows
+recovery is ~flat in ZO steps beyond a warm-start-dependent knee, so a
+mild excursion gets a short job and only deep drift pays the full
+default budget (:func:`autotune_zo_steps`).
+
+Every device interaction goes through the
+:class:`~repro.hw.driver.PhotonicDriver` boundary; the job's probe
+budget is the driver's metered PTC-call delta.
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple
+import math
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from ..core import unitary as un
-from ..core.calibration import DeviceRealization, realized_unitaries
-from ..core.mapping import matrix_distance, osp
-from ..core.noise import NoiseModel
-from ..optim.zo import ZOConfig, zo_minimize
-from .monitor import aggregate_distance, true_mapping_distance
+from ..core.mapping import osp
+from ..optim.zo import ZOConfig
+from .monitor import aggregate_distance, readout_mapping_distance
 
-__all__ = ["RecalConfig", "RecalResult", "recalibrate"]
+__all__ = ["RecalConfig", "RecalResult", "recalibrate", "autotune_zo_steps"]
 
 
 class RecalConfig(NamedTuple):
-    zo_steps: int = 400          # warm-start ZCD probe steps per block
+    zo_steps: int = 400          # warm-start ZCD probe steps per block (max)
     inner: int | None = None     # decay period (default 2T)
     delta0: float = 0.05         # small initial step — we are near-optimal
     decay: float = 1.05
@@ -50,6 +57,11 @@ class RecalConfig(NamedTuple):
     sl_steps: int = 0            # optional in-situ Σ fine-tune steps
     sl_lr: float = 0.2
     sl_probes: int = 8           # probe columns per Σ step
+    # -- budget autotuning (drift_recovery knee heuristic) -------------------
+    auto_budget: bool = False    # derive the step budget from d̂ at alarm
+    auto_target: float = 0.02    # the recovery target (clear threshold)
+    auto_min: int = 80           # floor: warm starts need a minimum sweep
+    auto_coeff: float = 6.0      # knee slope, in units of 2T per log₂ excess
 
 
 class RecalResult(NamedTuple):
@@ -59,54 +71,72 @@ class RecalResult(NamedTuple):
     dist_after_zo: jax.Array     # ... after the warm ZO stage
     dist_after: jax.Array        # ... after OSP (+ SL) — the recovery point
     ptc_calls: float             # probe budget spent by this job
+    zo_steps: int                # ZCD budget actually spent (autotuned)
 
 
-def recalibrate(key: jax.Array, spec: un.MeshSpec, phi: jax.Array,
-                sigma: jax.Array, dev: DeviceRealization, model: NoiseModel,
-                w_blocks: jax.Array, cfg: RecalConfig = RecalConfig()
-                ) -> RecalResult:
-    """Refresh ``(phi, sigma)`` against the drifted ``dev``.
+def autotune_zo_steps(dist: float, cfg: RecalConfig, n_rot: int) -> int:
+    """Budget from the probe distance at alarm time.
 
-    ``phi``: (B, 2T) commanded phases (U‖V), ``sigma``: (B, k),
+    The drift-recovery curves knee once the warm ZCD has swept each
+    coordinate a handful of times; how many sweeps are needed grows with
+    how far the estimate sits above the recovery target, so we spend
+    ``auto_coeff`` alternate sweeps (2T probes each) per log₂ of excess,
+    floored at ``auto_min`` and capped at the fixed ``zo_steps`` default.
+    """
+    ratio = max(float(dist), 0.0) / max(cfg.auto_target, 1e-9)
+    if ratio <= 1.0:
+        return int(cfg.auto_min)
+    steps = int(round(cfg.auto_coeff * 2 * n_rot * math.log2(1.0 + ratio)))
+    return int(min(max(steps, cfg.auto_min), cfg.zo_steps))
+
+
+def recalibrate(key: jax.Array, driver, w_blocks: jax.Array,
+                cfg: RecalConfig = RecalConfig(),
+                dist_hint: Optional[float] = None) -> RecalResult:
+    """Refresh the driver's commanded ``(phi, sigma)`` against its
+    drifted device.
+
     ``w_blocks``: (B, k, k) mapping targets.  The device is treated as
     frozen for the duration of the job (recal is fast vs. drift).
+    ``dist_hint``: the monitor's probe estimate at alarm time, used by
+    budget autotuning (defaults to a fresh full readout).
     """
-    t = spec.n_rot
-    b, k = sigma.shape
+    k = driver.k
+    b = driver.n_blocks
+    t = un.mesh_spec(k, driver.kind).n_rot
+    calls0 = driver.stats.total
 
-    def block_err(ph, dev_b, w_b, s_b):
-        u, v = realized_unitaries(spec, ph[:t], ph[t:], dev_b, model)
-        return matrix_distance((u * s_b) @ v, w_b)
+    # the monitor's estimate at alarm time doubles as dist_before — no
+    # point paying a B·k readout just to restate what tripped the alarm
+    if dist_hint is not None:
+        dist_before = jnp.asarray(float(dist_hint), jnp.float32)
+    else:
+        dist_before = readout_mapping_distance(driver, w_blocks)
 
-    dist_before = true_mapping_distance(spec, phi, sigma, dev, model,
-                                        w_blocks)
+    steps = cfg.zo_steps
+    if cfg.auto_budget:
+        steps = autotune_zo_steps(float(dist_before), cfg, t)
 
-    # Stage 1 — incremental ZO, warm-started from the current phases.
-    zo_cfg = ZOConfig(steps=cfg.zo_steps, inner=cfg.inner or 2 * t,
+    # Stage 1 — incremental ZO, warm-started from the current phases
+    # (an on-controller job: per-probe round trips would defeat in-situ).
+    zo_cfg = ZOConfig(steps=steps, inner=cfg.inner or 2 * t,
                       delta0=cfg.delta0, decay=cfg.decay)
     kz, ks = jax.random.split(key)
-    keys = jax.random.split(kz, b)
+    res = driver.zo_refine(w_blocks, kz, zo_cfg, method=cfg.method)
+    phi_new = res.phi
 
-    def solve_one(phi_b, key_b, dev_b, w_b, s_b):
-        return zo_minimize(lambda ph: block_err(ph, dev_b, w_b, s_b),
-                           phi_b, key_b, zo_cfg, method=cfg.method,
-                           alt_split=t)
-
-    res = jax.jit(jax.vmap(solve_one))(phi, keys, dev, w_blocks, sigma)
-    phi_new = res.x
-    # each ZCD step issues ≤2 transfer-matrix evaluations of k columns
-    ptc_calls = float(cfg.zo_steps * 2 * b * k)
-
-    u, v = realized_unitaries(spec, phi_new[:, :t], phi_new[:, t:],
-                              dev, model)
+    sigma = driver.read_sigma()
+    u, v = driver.readback_bases()
     dist_after_zo = aggregate_distance((u * sigma[..., None, :]) @ v,
                                        w_blocks)
 
-    # Stage 2 — OSP refresh (Claim 1): two reciprocal probes per block.
+    # Stage 2 — OSP refresh (Claim 1): two reciprocal probes per block
+    # (the readback above); Σ_opt is electronic arithmetic on it.
     sigma_new = osp(u, v, w_blocks)
-    ptc_calls += float(2 * b * k)
 
-    # Stage 3 — optional in-situ stochastic Σ descent (Eq.-5 structure).
+    # Stage 3 — optional in-situ stochastic Σ descent (Eq.-5 structure):
+    # each step streams sl_probes Gaussian columns and two reciprocal
+    # passes; simulated here on the read-back bases, metered explicitly.
     if cfg.sl_steps > 0:
         def sl_step(s, key_i):
             x = jax.random.normal(key_i, (cfg.sl_probes, k))
@@ -119,10 +149,13 @@ def recalibrate(key: jax.Array, spec: un.MeshSpec, phi: jax.Array,
 
         sigma_new, _ = jax.lax.scan(
             sl_step, sigma_new, jax.random.split(ks, cfg.sl_steps))
-        ptc_calls += float(cfg.sl_steps * cfg.sl_probes * b * 2)
+        driver.charge("probe", float(cfg.sl_steps * cfg.sl_probes * b * 2))
 
+    driver.write_sigma(sigma_new)
     dist_after = aggregate_distance(
         (u * sigma_new[..., None, :]) @ v, w_blocks)
     return RecalResult(phi=phi_new, sigma=sigma_new,
                        dist_before=dist_before, dist_after_zo=dist_after_zo,
-                       dist_after=dist_after, ptc_calls=ptc_calls)
+                       dist_after=dist_after,
+                       ptc_calls=float(driver.stats.total - calls0),
+                       zo_steps=steps)

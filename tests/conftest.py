@@ -1,7 +1,6 @@
 """Shared pytest config.  NOTE: no XLA_FLAGS here — smoke tests and
 benches must see 1 device; only launch/dryrun.py forces 512."""
 
-import pytest
 
 
 def pytest_configure(config):

@@ -5,9 +5,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.noise import NoiseModel, IDEAL
-from repro.core.calibration import (calibrate_identity, sample_device,
-                                    identity_mse, calibration_sigma)
+from repro.core.noise import NoiseModel
+from repro.core.calibration import (calibrate_identity, identity_mse,
+                                    calibration_sigma)
+from repro.hw.device import sample_device
 from repro.optim.zo import ZOConfig
 
 

@@ -1,0 +1,264 @@
+"""PhotonicDriver conformance suite.
+
+Parametrized over the two shipped transports (in-process ``TwinDriver``
+and JSON-over-pipe ``SubprocessDriver``): a scripted control-plane
+session must produce *bit-identical* results on both — same physics,
+same seeds, same backend — and the PTC-call meter must charge exactly
+the Appendix-G costs.  Plus the guard test: control-plane modules
+(``repro.runtime``, ``core.calibration``, ``core.mapping``) must never
+touch twin internals except through the audited ``unsafe_twin()``
+escape hatch.
+"""
+
+import re
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.noise import DEFAULT_NOISE
+from repro.core.calibration import calibrate_identity
+from repro.core.mapping import parallel_map
+from repro.optim.zo import ZOConfig
+from repro.hw import make_driver, make_twin, TwinUnavailable
+from repro.hw.drift import DriftConfig
+from repro.hw.driver import PhotonicDriver
+from repro.runtime.recalibrate import RecalConfig, recalibrate
+
+K = 3
+M = N = 6
+B = (M // K) * (N // K)          # 4 blocks
+MODEL = DEFAULT_NOISE.post_ic()
+DRIFT = DriftConfig(sigma_phase=0.03, theta=0.01)
+TRANSPORTS = ["twin", "subprocess"]
+
+KEY = jax.random.PRNGKey(42)
+
+
+def _mk(transport):
+    return make_driver(transport, KEY, B, K, MODEL, m=M, n=N, drift=DRIFT)
+
+
+def _reference_twin():
+    return make_twin(KEY, B, K, MODEL, m=M, n=N, drift=DRIFT)
+
+
+def _blocks(seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((B, K, K)) * 0.4, jnp.float32)
+
+
+def _session(driver) -> dict:
+    """One scripted control-plane session exercising every ABC op."""
+    rng = np.random.default_rng(7)
+    t = driver.read_phases()[0].shape[-1]
+    pu = jnp.asarray(rng.uniform(0, 1, (B, t)), jnp.float32)
+    pv = jnp.asarray(rng.uniform(0, 1, (B, t)), jnp.float32)
+    sg = jnp.asarray(rng.uniform(0.5, 1.5, (B, K)), jnp.float32)
+    du = jnp.asarray(rng.choice([-1.0, 1.0], (B, K)), jnp.float32)
+    dv = jnp.asarray(rng.choice([-1.0, 1.0], (B, K)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((5, K)), jnp.float32)
+    xl = jnp.asarray(rng.standard_normal((3, N)), jnp.float32)
+    w = _blocks(1)
+
+    out = {}
+    driver.write_signs(du, dv)
+    driver.write_phases(pu, pv)
+    driver.write_sigma(sg)
+    out["phi_u"], out["phi_v"] = driver.read_phases()
+    out["sigma"] = driver.read_sigma()
+    out["fwd"] = driver.forward(x)
+    out["layer"] = driver.forward_layer(xl)
+    res = driver.zo_refine(w, jax.random.PRNGKey(3),
+                           ZOConfig(steps=30, inner=12, delta0=0.1,
+                                    decay=1.05))
+    out["zo_phi"], out["zo_loss"] = res.phi, res.loss
+    out["u"], out["v"] = driver.readback_bases()
+    for _ in range(5):
+        driver.advance(1.0)
+    out["fwd_drifted"] = driver.forward(x)
+    out["true_d"] = driver.unsafe_twin().true_mapping_distance(w)
+    out["stats"] = driver.stats.as_dict()
+    return out
+
+
+@pytest.mark.parametrize("transport", TRANSPORTS)
+def test_scripted_session_matches_reference_twin(transport):
+    """Every op's result is bit-identical to the in-process twin run
+    from the same construction seed (float32 survives the pipe exactly;
+    jobs execute the same code on the same backend)."""
+    driver = _mk(transport)
+    try:
+        got = _session(driver)
+    finally:
+        driver.close()
+    ref = _session(_reference_twin())
+    for name in ("phi_u", "phi_v", "sigma", "fwd", "layer", "zo_phi",
+                 "zo_loss", "u", "v", "fwd_drifted"):
+        np.testing.assert_array_equal(np.asarray(ref[name]),
+                                      np.asarray(got[name]), err_msg=name)
+    assert got["true_d"] == ref["true_d"]
+    assert got["stats"] == ref["stats"]
+
+
+@pytest.mark.parametrize("transport", TRANSPORTS)
+def test_ic_pm_recal_identical_across_transports(transport):
+    """The three control-plane flows (IC, PM, closed-loop recal) return
+    identical results over any transport."""
+    # IC on a fresh device (driver-generic entry point)
+    ic_cfg = ZOConfig(steps=40, inner=12, delta0=0.5, decay=1.05)
+    d1 = _mk(transport)
+    try:
+        ic = calibrate_identity(KEY, B, K, MODEL, cfg=ic_cfg, restarts=2,
+                                driver=d1)
+    finally:
+        d1.close()
+    ic_ref = calibrate_identity(KEY, B, K, MODEL, cfg=ic_cfg, restarts=2,
+                                driver=_reference_twin())
+    np.testing.assert_array_equal(np.asarray(ic_ref.phi_u),
+                                  np.asarray(ic.phi_u))
+    np.testing.assert_array_equal(np.asarray(ic_ref.mse_u),
+                                  np.asarray(ic.mse_u))
+
+    # PM deployment + drift + recalibration on the same chip
+    rng = np.random.default_rng(5)
+    w = jnp.asarray(rng.standard_normal((M, N)) / np.sqrt(M), jnp.float32)
+    pm_cfg = ZOConfig(steps=30, inner=12, delta0=0.2, decay=1.05)
+
+    def flow(driver):
+        pm = parallel_map(KEY, w, K, MODEL, cfg=pm_cfg, driver=driver)
+        for _ in range(30):
+            driver.advance(1.0)
+        rc = recalibrate(jax.random.PRNGKey(9), driver, _blocks(1),
+                         RecalConfig(zo_steps=40, delta0=0.05))
+        return pm, rc
+
+    d2 = _mk(transport)
+    try:
+        pm, rc = flow(d2)
+    finally:
+        d2.close()
+    pm_ref, rc_ref = flow(_reference_twin())
+    np.testing.assert_array_equal(np.asarray(pm_ref.err_osp),
+                                  np.asarray(pm.err_osp))
+    np.testing.assert_array_equal(np.asarray(pm_ref.phi_u),
+                                  np.asarray(pm.phi_u))
+    np.testing.assert_array_equal(np.asarray(rc_ref.phi),
+                                  np.asarray(rc.phi))
+    np.testing.assert_array_equal(np.asarray(rc_ref.sigma),
+                                  np.asarray(rc.sigma))
+    assert float(rc_ref.dist_after) == float(rc.dist_after)
+    assert rc_ref.ptc_calls == rc.ptc_calls
+
+
+@pytest.mark.parametrize("transport", TRANSPORTS)
+def test_ptc_call_accounting(transport):
+    """The driver meters exactly the Appendix-G charges per op."""
+    driver = _mk(transport)
+    try:
+        driver.reset_stats()
+        assert driver.stats.total == 0.0
+
+        driver.forward(jnp.ones((5, K)))
+        assert driver.stats.probe == B * 5           # E_fwd = B·n_cols
+
+        driver.readback_bases()
+        assert driver.stats.readback == 2 * B * K    # 2 reciprocal passes
+
+        driver.forward_layer(jnp.ones((7, N)))
+        assert driver.stats.serve == B * 7
+
+        steps = 10
+        driver.zo_refine(_blocks(), jax.random.PRNGKey(0),
+                         ZOConfig(steps=steps, inner=6, delta0=0.1,
+                                  decay=1.05))
+        assert driver.stats.search == steps * 2 * B * K
+
+        driver.charge("probe", 3.5)                  # controller-side meter
+        assert driver.stats.probe == B * 5 + 3.5
+        assert driver.stats.total == (B * 5 + 3.5 + 2 * B * K + B * 7
+                                      + steps * 2 * B * K)
+        driver.reset_stats()
+        assert driver.stats.total == 0.0
+    finally:
+        driver.close()
+
+
+def test_unsafe_twin_raises_without_twin_backing():
+    """A driver not backed by an inspectable twin refuses the hatch."""
+
+    class HardwareDriver(PhotonicDriver):
+        k = 3
+        kind = "clements"
+        n_blocks = 1
+        layer_shape = (3, 3)
+
+        def write_phases(self, *a):
+            pass
+
+        write_sigma = write_signs = write_phases
+
+        def read_phases(self):
+            return None, None
+
+        def read_sigma(self):
+            return None
+
+        def forward(self, x, category="probe"):
+            return x
+
+        forward_layer = read_sigma
+
+        def readback_bases(self):
+            return None, None
+
+        def zo_refine(self, *a, **k):
+            raise NotImplementedError
+
+        run_ic = zo_refine
+
+        def advance(self, dt=1.0):
+            pass
+
+        stats = property(lambda self: None)
+
+        def charge(self, *a):
+            pass
+
+    with pytest.raises(TwinUnavailable):
+        HardwareDriver().unsafe_twin()
+
+
+# ---------------------------------------------------------------------------
+# guard: control-plane modules stay on the legal surface
+# ---------------------------------------------------------------------------
+
+SRC = Path(__file__).resolve().parents[1] / "src" / "repro"
+CONTROL_PLANE = sorted(
+    list((SRC / "runtime").glob("*.py"))
+    + [SRC / "core" / "calibration.py", SRC / "core" / "mapping.py"])
+
+# twin-internal symbols and modules; a line mentioning unsafe_twin() is
+# the sanctioned escape hatch and is exempt
+_FORBIDDEN = re.compile(
+    r"\b(DeviceRealization|sample_device|realized_unitaries|realized_blocks"
+    r"|DriftState|init_drift|bias_deviation|TwinHandle"
+    r"|true_mapping_distance|chip_forward)\b"
+    r"|hw\.device|hw\.jobs|hw\.server|from \.\.hw\.drift import advance")
+
+
+def test_control_plane_never_imports_twin_internals():
+    assert CONTROL_PLANE, "guard scope is empty — layout changed?"
+    offenders = []
+    for path in CONTROL_PLANE:
+        for i, line in enumerate(path.read_text().splitlines(), 1):
+            if "unsafe_twin" in line:
+                continue
+            if _FORBIDDEN.search(line):
+                offenders.append(f"{path.relative_to(SRC.parent)}:{i}: "
+                                 f"{line.strip()}")
+    assert not offenders, (
+        "control-plane code reached into twin internals outside "
+        "unsafe_twin():\n" + "\n".join(offenders))

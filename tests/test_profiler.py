@@ -1,7 +1,7 @@
 """Appendix-G cost model: structural ratios the paper's Table 2 shows."""
 
 from repro.core.profiler import (LayerSpec, layer_cost, model_cost,
-                                 conv_layer_spec, vgg8_specs, resnet18_specs)
+                                 vgg8_specs, resnet18_specs)
 from repro.core.sparsity import SparsityConfig
 
 

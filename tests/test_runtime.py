@@ -1,24 +1,28 @@
-"""Closed-loop runtime: drift, monitor, recalibration, fleet routing."""
+"""Closed-loop runtime: drift, monitor, recalibration, fleet routing.
+
+Everything here drives devices through the ``PhotonicDriver`` boundary;
+twin internals are reached only via the ``unsafe_twin()`` escape hatch
+(which tests are explicitly allowed to use).
+"""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.core import unitary as un
-from repro.core.calibration import sample_device
-from repro.core.noise import NoiseModel, DEFAULT_NOISE, IDEAL
-from repro.runtime.drift import (DriftConfig, init_drift, advance,
-                                 bias_deviation)
+from repro.core.noise import DEFAULT_NOISE, IDEAL
+from repro.core.profiler import linear_layer_spec, layer_cost
+from repro.core.sparsity import SparsityConfig
+from repro.hw.drift import DriftConfig, advance, bias_deviation
+from repro.hw.twin import make_twin
 from repro.runtime.monitor import (MonitorConfig, HealthState,
                                    probe_mapping_distance,
                                    probe_identity_distance,
-                                   true_mapping_distance, update_health,
-                                   clear_health, probe_ptc_calls)
+                                   readout_mapping_distance, update_health,
+                                   clear_health)
 from repro.runtime.recalibrate import RecalConfig, recalibrate
 from repro.runtime.fleet import (RuntimeConfig, FleetRouter, make_chip,
-                                 make_fleet, HEALTHY, DEGRADED,
-                                 RECALIBRATING)
+                                 make_fleet, predicted_distance, HEALTHY,
+                                 DEGRADED, RECALIBRATING)
 
 K = 4
 DIM = 8
@@ -43,6 +47,11 @@ def _weight(seed=0):
                        jnp.float32)
 
 
+def _drift_chip(chip, ticks):
+    for _ in range(ticks):
+        chip.driver.advance(1.0)
+
+
 # ---------------------------------------------------------------------------
 # drift
 # ---------------------------------------------------------------------------
@@ -51,9 +60,10 @@ def _weight(seed=0):
 def test_drift_deterministic_under_fixed_seed():
     cfg = _small_cfg()
     chip = make_chip(jax.random.PRNGKey(0), 0, _weight(), cfg)
+    st0 = chip.driver.unsafe_twin().drift_state
 
     def run():
-        st = chip.drift
+        st = st0
         for t in range(10):
             st = advance(st, 1.0, jax.random.fold_in(jax.random.PRNGKey(7), t),
                          cfg.drift)
@@ -67,10 +77,24 @@ def test_drift_deterministic_under_fixed_seed():
     assert float(s1.t) == 10.0
 
 
+def test_driver_drift_chain_reproducible():
+    """Two chips built from the same seed walk identical drift paths —
+    the driver owns its entropy, so construction seeds pin trajectories."""
+    cfg = _small_cfg()
+    c1 = make_chip(jax.random.PRNGKey(3), 0, _weight(3), cfg)
+    c2 = make_chip(jax.random.PRNGKey(3), 0, _weight(3), cfg)
+    _drift_chip(c1, 7)
+    _drift_chip(c2, 7)
+    np.testing.assert_array_equal(
+        np.asarray(c1.driver.unsafe_twin().dev.noise_u.bias),
+        np.asarray(c2.driver.unsafe_twin().dev.noise_u.bias))
+
+
 def test_drift_moves_device_and_preserves_anchor():
     cfg = _small_cfg()
     chip = make_chip(jax.random.PRNGKey(1), 0, _weight(1), cfg)
-    st0 = chip.drift
+    h = chip.driver.unsafe_twin()
+    st0 = h.drift_state
     assert float(bias_deviation(st0)) == 0.0
     st = advance(st0, 1.0, jax.random.PRNGKey(3), cfg.drift)
     assert float(bias_deviation(st)) > 0.0
@@ -84,16 +108,10 @@ def test_drift_moves_device_and_preserves_anchor():
 def test_drift_degrades_mapping_distance():
     cfg = _small_cfg()
     chip = make_chip(jax.random.PRNGKey(2), 0, _weight(2), cfg)
-    spec = un.mesh_spec(K, cfg.kind)
-    d0 = float(true_mapping_distance(spec, chip.phi, chip.sigma,
-                                     chip.drift.dev, cfg.noise,
-                                     chip.w_blocks))
-    st = chip.drift
-    for t in range(60):
-        st = advance(st, 1.0, jax.random.fold_in(jax.random.PRNGKey(11), t),
-                     cfg.drift)
-    d1 = float(true_mapping_distance(spec, chip.phi, chip.sigma, st.dev,
-                                     cfg.noise, chip.w_blocks))
+    h = chip.driver.unsafe_twin()
+    d0 = h.true_mapping_distance(chip.w_blocks)
+    _drift_chip(chip, 60)
+    d1 = h.true_mapping_distance(chip.w_blocks)
     assert d1 > d0 * 2, (d0, d1)
 
 
@@ -105,17 +123,15 @@ def test_drift_degrades_mapping_distance():
 def test_probe_estimates_true_distance():
     cfg = _small_cfg()
     chip = make_chip(jax.random.PRNGKey(4), 0, _weight(4), cfg)
-    spec = un.mesh_spec(K, cfg.kind)
-    st = chip.drift
-    for t in range(40):
-        st = advance(st, 1.0, jax.random.fold_in(jax.random.PRNGKey(13), t),
-                     cfg.drift)
-    true = float(true_mapping_distance(spec, chip.phi, chip.sigma, st.dev,
-                                       cfg.noise, chip.w_blocks))
+    _drift_chip(chip, 40)
+    true = chip.driver.unsafe_twin().true_mapping_distance(chip.w_blocks)
     ests = [float(probe_mapping_distance(
-        jax.random.PRNGKey(100 + i), spec, chip.phi, chip.sigma, st.dev,
-        cfg.noise, chip.w_blocks, 16)) for i in range(8)]
+        jax.random.PRNGKey(100 + i), chip.driver, chip.w_blocks, 16))
+        for i in range(8)]
     assert abs(np.mean(ests) - true) < 0.5 * true + 1e-3
+    # the full k-column readout is exact
+    exact = float(readout_mapping_distance(chip.driver, chip.w_blocks))
+    np.testing.assert_allclose(exact, true, rtol=1e-5)
 
 
 def test_alarm_fires_exactly_at_threshold_policy():
@@ -146,26 +162,38 @@ def test_probe_identity_distance_branches():
     """Identity-state probing: zero for a perfect (sign-flipped) identity
     chip in both the full-readout and sampled-columns branches; positive
     once the commanded phases are perturbed."""
-    spec = un.mesh_spec(K, "clements")
-    dev = sample_device(jax.random.PRNGKey(0), (3,), K, IDEAL)
-    phi = jnp.zeros((3, 2 * spec.n_rot))
+    driver = make_twin(jax.random.PRNGKey(0), 3, K, IDEAL)
     key = jax.random.PRNGKey(1)
-    full = float(probe_identity_distance(key, spec, phi, dev, IDEAL,
-                                         n_probes=K))
-    sampled = float(probe_identity_distance(key, spec, phi, dev, IDEAL,
-                                            n_probes=2))
+    full = float(probe_identity_distance(key, driver, n_probes=K))
+    sampled = float(probe_identity_distance(key, driver, n_probes=2))
     assert full < 1e-10 and sampled < 1e-10
-    bad = phi.at[:, 0].add(0.5)
-    assert float(probe_identity_distance(key, spec, bad, dev, IDEAL,
-                                         n_probes=K)) > 1e-3
-    assert float(probe_identity_distance(key, spec, bad, dev, IDEAL,
-                                         n_probes=2)) >= 0.0
+    phi_u, phi_v = driver.read_phases()
+    driver.write_phases(phi_u.at[:, 0].add(0.5), phi_v)
+    assert float(probe_identity_distance(key, driver, n_probes=K)) > 1e-3
+    assert float(probe_identity_distance(key, driver, n_probes=2)) >= 0.0
 
 
 def test_probe_cost_matches_profiler_grid():
-    # one probe column through a P×Q grid = P·Q PTC calls
-    assert probe_ptc_calls(DIM, DIM, K, 1) == (DIM // K) ** 2
-    assert probe_ptc_calls(DIM, DIM, K, 6) == 6 * (DIM // K) ** 2
+    """Driver-metered probe cost equals the Appendix-G profiler charge:
+    one probe column through a P×Q grid = P·Q PTC calls."""
+    cfg = _small_cfg()
+    chip = make_chip(jax.random.PRNGKey(6), 0, _weight(6), cfg)
+    grid = (DIM // K) ** 2
+
+    def profiler_charge(n_probes):
+        spec = linear_layer_spec("health_probe", DIM, DIM, n_probes, k=K)
+        return layer_cost(spec, SparsityConfig(), inference_only=True).e_fwd
+
+    chip.driver.reset_stats()
+    probe_mapping_distance(jax.random.PRNGKey(0), chip.driver,
+                           chip.w_blocks, 1)
+    assert chip.driver.stats.probe == grid == profiler_charge(1)
+    probe_mapping_distance(jax.random.PRNGKey(1), chip.driver,
+                           chip.w_blocks, 6)
+    assert chip.driver.stats.probe == grid + 6 * grid
+    # serve traffic is metered separately, per streamed row
+    chip.driver.forward_layer(jnp.ones((5, DIM)))
+    assert chip.driver.stats.serve == 5 * grid == profiler_charge(5)
 
 
 # ---------------------------------------------------------------------------
@@ -176,21 +204,16 @@ def test_probe_cost_matches_profiler_grid():
 def test_recalibration_restores_distance_below_threshold():
     cfg = _small_cfg()
     chip = make_chip(jax.random.PRNGKey(5), 0, _weight(5), cfg)
-    spec = un.mesh_spec(K, cfg.kind)
-    st = chip.drift
-    for t in range(80):
-        st = advance(st, 1.0, jax.random.fold_in(jax.random.PRNGKey(17), t),
-                     cfg.drift)
-    res = recalibrate(jax.random.PRNGKey(6), spec, chip.phi, chip.sigma,
-                      st.dev, cfg.noise, chip.w_blocks, cfg.recal)
+    _drift_chip(chip, 80)
+    res = recalibrate(jax.random.PRNGKey(6), chip.driver, chip.w_blocks,
+                      cfg.recal)
     assert float(res.dist_before) > cfg.monitor.alarm_threshold
     assert float(res.dist_after) < cfg.monitor.alarm_threshold
     assert float(res.dist_after) < float(res.dist_before)
     assert res.ptc_calls > 0
-    # the result is self-consistent with an exact read-out
-    d = float(true_mapping_distance(spec, res.phi, res.sigma, st.dev,
-                                    cfg.noise, chip.w_blocks))
-    np.testing.assert_allclose(d, float(res.dist_after), rtol=1e-5)
+    # the result is self-consistent with the twin's exact read-out
+    d = chip.driver.unsafe_twin().true_mapping_distance(chip.w_blocks)
+    np.testing.assert_allclose(d, float(res.dist_after), rtol=1e-4)
 
 
 def test_recal_sl_steps_approach_osp():
@@ -198,14 +221,31 @@ def test_recal_sl_steps_approach_osp():
     cfg = _small_cfg(recal=RecalConfig(zo_steps=100, delta0=0.05,
                                        sl_steps=20, sl_probes=8))
     chip = make_chip(jax.random.PRNGKey(8), 0, _weight(8), cfg)
-    spec = un.mesh_spec(K, cfg.kind)
-    st = chip.drift
-    for t in range(40):
-        st = advance(st, 1.0, jax.random.fold_in(jax.random.PRNGKey(19), t),
-                     cfg.drift)
-    res = recalibrate(jax.random.PRNGKey(9), spec, chip.phi, chip.sigma,
-                      st.dev, cfg.noise, chip.w_blocks, cfg.recal)
+    _drift_chip(chip, 40)
+    res = recalibrate(jax.random.PRNGKey(9), chip.driver, chip.w_blocks,
+                      cfg.recal)
     assert float(res.dist_after) <= float(res.dist_before)
+
+
+def test_recal_budget_autotunes_with_drift_depth():
+    """Budget autotuning: a mild excursion gets a smaller ZO budget than
+    deep drift, both bounded by [auto_min, zo_steps], and recovery still
+    lands below the alarm threshold."""
+    recal_cfg = RecalConfig(zo_steps=400, delta0=0.05, auto_budget=True,
+                            auto_target=0.03, auto_min=60)
+    cfg = _small_cfg(recal=recal_cfg)
+    shallow = make_chip(jax.random.PRNGKey(20), 0, _weight(20), cfg)
+    deep = make_chip(jax.random.PRNGKey(21), 1, _weight(21), cfg)
+    _drift_chip(shallow, 25)
+    _drift_chip(deep, 150)
+    r_shallow = recalibrate(jax.random.PRNGKey(22), shallow.driver,
+                            shallow.w_blocks, recal_cfg)
+    r_deep = recalibrate(jax.random.PRNGKey(23), deep.driver,
+                         deep.w_blocks, recal_cfg)
+    assert float(r_deep.dist_before) > float(r_shallow.dist_before)
+    assert r_shallow.zo_steps <= r_deep.zo_steps
+    assert recal_cfg.auto_min <= r_shallow.zo_steps <= recal_cfg.zo_steps
+    assert float(r_deep.dist_after) < cfg.monitor.alarm_threshold
 
 
 # ---------------------------------------------------------------------------
@@ -256,8 +296,8 @@ def test_closed_loop_simulation_invariants():
 def test_fleet_chips_are_independent_realizations():
     cfg = _small_cfg()
     chips = make_fleet(jax.random.PRNGKey(14), 2, _weight(14), cfg)
-    g0 = np.asarray(chips[0].drift.dev.noise_u.gamma)
-    g1 = np.asarray(chips[1].drift.dev.noise_u.gamma)
+    g0 = np.asarray(chips[0].driver.unsafe_twin().dev.noise_u.gamma)
+    g1 = np.asarray(chips[1].driver.unsafe_twin().dev.noise_u.gamma)
     assert not np.allclose(g0, g1)
     # but they serve the same logical weight
     np.testing.assert_array_equal(np.asarray(chips[0].w_blocks),
@@ -265,7 +305,7 @@ def test_fleet_chips_are_independent_realizations():
 
 
 def test_router_prefers_healthy_and_balances_load():
-    cfg = _small_cfg()
+    cfg = _small_cfg(router_policy="least_served")
     chips = make_fleet(jax.random.PRNGKey(15), 3, _weight(15), cfg)
     router = FleetRouter(chips, cfg, seed=2)
     chips[0].status = DEGRADED
@@ -274,3 +314,29 @@ def test_router_prefers_healthy_and_balances_load():
         assert c.status == HEALTHY
         c.served += 1
     assert abs(chips[1].served - chips[2].served) <= 1
+
+
+def test_drift_aware_routing_ranks_by_predicted_decay():
+    """The default policy dispatches the chip with the lowest *predicted*
+    distance (last estimate + OU extrapolation), preferring HEALTHY."""
+    cfg = _small_cfg(router_policy="drift_aware")
+    chips = make_fleet(jax.random.PRNGKey(16), 3, _weight(16), cfg)
+    router = FleetRouter(chips, cfg, seed=3)
+    router.tick_count = 50
+    for c in chips:
+        c.health.distance = 0.010
+        c.last_probe_tick = 50
+    chips[1].health.distance = 0.002          # freshest, fittest
+    assert router.dispatch().chip_id == 1
+    # a stale estimate is inflated toward the OU stationary floor, so a
+    # long-unprobed chip loses to one probed just now at equal d̂
+    chips[1].last_probe_tick = 0
+    d_stale = predicted_distance(chips[1], 50, cfg.drift)
+    d_fresh = predicted_distance(chips[0], 50, cfg.drift)
+    assert d_stale > chips[1].health.distance
+    assert router.dispatch().chip_id != 1 or d_stale < d_fresh
+    # HEALTHY pool still beats DEGRADED regardless of prediction
+    chips[0].status = DEGRADED
+    chips[2].status = DEGRADED
+    chips[1].health.distance = 0.9
+    assert router.dispatch().chip_id == 1

@@ -6,9 +6,7 @@ and test_train_integration's subprocess test."""
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import smoke_config, get_config
 from repro.models.lm import init_model
