@@ -12,6 +12,16 @@ loop (drift runs away) — and emits:
   probe/recal overhead in PTC calls (Appendix-G energy model via
   ``core.profiler``).
 
+``multi_tenant`` (registered separately in ``benchmarks/run.py``) is
+the multi-tenant scenario: chips time-multiplexed across several mapped
+layers, partial recalibration re-tuning only the alarmed tenant's
+blocks.  It emits ``BENCH_multi_tenant.json`` showing — on BOTH the
+in-process twin and the subprocess (HIL) transport — that every alarmed
+tenant recovers below the alarm threshold while co-resident tenants'
+true distances move no more than their natural per-window drift, and
+(direct frozen-device check) that a partial recal leaves co-tenants'
+true distances *exactly* unchanged.
+
     PYTHONPATH=src python -m benchmarks.drift_recovery [--budget quick]
 """
 
@@ -26,17 +36,19 @@ from .common import ART, emit, Timer
 
 def _time_to_recovery(events: list[dict], clear_threshold: float) -> list[dict]:
     """Pair each alarm with the first subsequent recal_done on the same
-    chip whose post-recal distance clears the hysteresis threshold."""
-    open_alarms: dict[int, int] = {}
+    (chip, tenant) slot whose post-recal distance clears the hysteresis
+    threshold."""
+    open_alarms: dict[tuple, int] = {}
     out = []
     for ev in events:
-        chip = ev["chip"]
+        slot = (ev["chip"], ev.get("tenant", 0))
         if ev["event"] == "alarm":
-            open_alarms.setdefault(chip, ev["tick"])
-        elif (ev["event"] == "recal_done" and chip in open_alarms
+            open_alarms.setdefault(slot, ev["tick"])
+        elif (ev["event"] == "recal_done" and slot in open_alarms
               and ev["dist_after"] < clear_threshold):
-            alarm_tick = open_alarms.pop(chip)
-            out.append(dict(chip=chip, alarm_tick=alarm_tick,
+            alarm_tick = open_alarms.pop(slot)
+            out.append(dict(chip=slot[0], tenant=slot[1],
+                            alarm_tick=alarm_tick,
                             recover_tick=ev["tick"],
                             ticks=ev["tick"] - alarm_tick,
                             dist_after=ev["dist_after"]))
@@ -120,7 +132,109 @@ def main(budget: str = "quick") -> None:
     print(json.dumps(summary, indent=2))
 
 
+def _frozen_partial_recal(driver_kind: str, seed: int = 0) -> dict:
+    """Direct check with the device frozen (no ticks during the job):
+    drift a 3-tenant chip until its worst tenant is past the alarm
+    threshold, partially recalibrate that tenant's block range, and
+    read back every tenant's TRUE distance before/after — co-tenants
+    must be *exactly* unchanged (their commanded state was never
+    touched and the device did not move)."""
+    import jax
+    import numpy as np
+    from repro.runtime.demo import default_runtime_config, _make_weights
+    from repro.runtime.fleet import make_chip
+    from repro.runtime.recalibrate import recalibrate
+
+    cfg = default_runtime_config(k=4, sigma_drift=0.04, driver_kind=driver_kind)
+    dim, tenants = 12, 3
+    kw, kc, kr = jax.random.split(jax.random.PRNGKey(seed), 3)
+    ws = _make_weights(kw, dim, tenants)
+    chip = make_chip(kc, 0, ws, cfg)
+    try:
+        for _ in range(60):
+            chip.driver.advance(1.0)
+        h = chip.driver.unsafe_twin()
+        pre = [h.true_mapping_distance(t.w_blocks, t.block_range)
+               for t in chip.tenants]
+        worst = int(np.argmax(pre))
+        ten = chip.tenants[worst]
+        res = recalibrate(kr, chip.driver, ten.w_blocks, cfg.recal,
+                          block_range=ten.block_range)
+        post = [h.true_mapping_distance(t.w_blocks, t.block_range)
+                for t in chip.tenants]
+    finally:
+        chip.driver.close()
+    return dict(
+        driver=driver_kind, recal_tenant=worst,
+        dist_pre=pre, dist_post=post,
+        recovered=bool(post[worst] < cfg.monitor.alarm_threshold),
+        cotenants_bit_identical=all(
+            pre[j] == post[j] for j in range(tenants) if j != worst),
+        ptc_calls=res.ptc_calls)
+
+
+def multi_tenant(budget: str = "quick") -> None:
+    """Multi-tenant drift recovery, on both driver transports."""
+    from repro.runtime.demo import (simulate, default_runtime_config,
+                                    cotenant_shifts, drift_noise_band,
+                                    isolation_band)
+
+    chips, steps, tenants = (2, 80, 3) if budget == "quick" else (3, 200, 3)
+    summary = dict(budget=budget, chips=chips, steps=steps, tenants=tenants,
+                   transports={})
+    for driver_kind in ("twin", "subprocess"):
+        cfg = default_runtime_config(k=4, sigma_drift=0.04, probe_every=5,
+                                     driver_kind=driver_kind)
+        with Timer() as t:
+            out = simulate(chips, steps, dim=12, seed=0, cfg=cfg,
+                           tenants=tenants)
+        rep = out["report"]
+        recoveries = _time_to_recovery(rep["events"],
+                                       cfg.monitor.alarm_threshold)
+        shifts = cotenant_shifts(out["trace"], rep["events"],
+                                 cfg.recal_latency)
+        noise = drift_noise_band(out["trace"], rep["events"],
+                                 cfg.recal_latency)
+        worst_shift = max((abs(s["shift"]) for s in shifts), default=0.0)
+        frozen = _frozen_partial_recal(driver_kind)
+        summary["transports"][driver_kind] = dict(
+            wall_s=t.dt,
+            alarms=sum(c["alarms"] for c in rep["chips"]),
+            recals=sum(c["recals"] for c in rep["chips"]),
+            dropped=rep["dropped"],
+            recoveries=len(recoveries),
+            mean_time_to_recovery=(sum(r["ticks"] for r in recoveries)
+                                   / len(recoveries)) if recoveries else None,
+            recal_done_below_alarm=all(
+                ev["dist_after"] < cfg.monitor.alarm_threshold
+                for ev in rep["events"] if ev["event"] == "recal_done"),
+            cotenant_windows=len(shifts),
+            worst_cotenant_shift=worst_shift,
+            drift_noise_band=noise,
+            cotenants_within_noise=bool(worst_shift <= isolation_band(
+                noise, cfg.monitor.clear_threshold)),
+            frozen_device_check=frozen,
+            per_tenant=[[dict(tenant=t_["tenant"], served=t_["served"],
+                              alarms=t_["alarms"], recals=t_["recals"],
+                              distance=t_["distance"])
+                         for t_ in c["tenants"]] for c in rep["chips"]])
+    os.makedirs(ART, exist_ok=True)
+    path = os.path.join(ART, "BENCH_multi_tenant.json")
+    with open(path, "w") as f:
+        json.dump(summary, f, indent=2)
+    print(f"--- multi_tenant summary ({path}) ---")
+    print(json.dumps(summary, indent=2))
+    for kind, s in summary["transports"].items():
+        assert s["recals"] > 0 and s["recal_done_below_alarm"], kind
+        assert s["cotenants_within_noise"], kind
+        assert s["frozen_device_check"]["recovered"], kind
+        assert s["frozen_device_check"]["cotenants_bit_identical"], kind
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--budget", default="quick", choices=["quick", "normal"])
-    main(ap.parse_args().budget)
+    ap.add_argument("--scenario", default="single",
+                    choices=["single", "multi_tenant"])
+    _args = ap.parse_args()
+    (multi_tenant if _args.scenario == "multi_tenant" else main)(_args.budget)

@@ -69,6 +69,7 @@ def main() -> None:
         ("table2_sampling", sampling_table2.main),
         ("fig10_scalability", scalability.main),
         ("runtime_drift_recovery", drift_recovery.main),
+        ("runtime_multi_tenant", drift_recovery.multi_tenant),
         ("hw_driver_overhead", driver_overhead.main),
     ]
     for name, fn in benches:

@@ -68,7 +68,8 @@ def osp(u: jax.Array, v: jax.Array, w: jax.Array) -> jax.Array:
 def parallel_map(key: jax.Array, w: jax.Array, k: int, model=None, *,
                  kind: str = "clements", method: str = "zcd",
                  cfg: ZOConfig | None = None,
-                 dev=None, run_zo: bool = True, driver=None) -> PMResult:
+                 dev=None, run_zo: bool = True, driver=None,
+                 block_range: tuple[int, int] | None = None) -> PMResult:
     """Map a dense weight ``w`` (M, N) onto noisy k×k PTC blocks.
 
     Returns the REALIZED factor-level parameters — the state subspace
@@ -81,6 +82,12 @@ def parallel_map(key: jax.Array, w: jax.Array, k: int, model=None, *,
     ``n_blocks`` matching the P·Q grid of ``w``; when omitted, a fresh
     in-process twin is sampled (``dev`` optionally pins its realization,
     forwarded opaquely).
+
+    ``block_range``: deploy onto the tenant slice ``(start, stop)`` of
+    a shared (multi-tenant) chip instead of the whole block batch —
+    requires an explicit ``driver`` whose capacity covers the range;
+    every device interaction below is then scoped to those blocks, so
+    co-resident tenants' state is untouched.
     """
     spec = un.mesh_spec(k, kind)
     t = spec.n_rot
@@ -102,30 +109,42 @@ def parallel_map(key: jax.Array, w: jax.Array, k: int, model=None, *,
 
     kd, ko = jax.random.split(key)
     if driver is None:
+        if block_range is not None:
+            raise ValueError("block_range deployment needs an explicit "
+                             "driver (the shared multi-tenant chip)")
         from ..hw.twin import make_twin    # lazy: hw sits above core
         driver = make_twin(kd, b, k, model, kind, m=w.shape[0],
                            n=w.shape[1], dev=dev)
-    if driver.n_blocks != b:
+    if block_range is None and driver.n_blocks != b:
         raise ValueError(f"driver hosts {driver.n_blocks} blocks, "
+                         f"weight needs {b}")
+    if block_range is not None and block_range[1] - block_range[0] != b:
+        raise ValueError(f"block_range {block_range!r} spans "
+                         f"{block_range[1] - block_range[0]} blocks, "
                          f"weight needs {b}")
 
     # deploy the commanded state: signs from the decomposition (the
     # crossing configuration is commanded; Γ/Φ_b stay the device's own)
     driver.write_signs(jnp.asarray(d_u0, jnp.float32),
-                       jnp.asarray(d_v0, jnp.float32))
+                       jnp.asarray(d_v0, jnp.float32),
+                       block_range=block_range)
     driver.write_phases(jnp.asarray(phi_u0, jnp.float32),
-                        jnp.asarray(phi_v0, jnp.float32))
+                        jnp.asarray(phi_v0, jnp.float32),
+                        block_range=block_range)
     s_init = ideal.s.reshape(b, k)
-    driver.write_sigma(s_init)
+    driver.write_sigma(s_init, block_range=block_range)
 
     from ..hw.driver import readout_blocks
-    err_init = matrix_distance(readout_blocks(driver), w_blocks)
+    err_init = matrix_distance(readout_blocks(driver,
+                                              block_range=block_range),
+                               w_blocks)
 
     if run_zo:
         if cfg is None:
             cfg = ZOConfig(steps=max(300, 10 * t), inner=2 * t,
                            delta0=2 * np.pi / 255.0 * 8, decay=1.05)
-        res = driver.zo_refine(w_blocks, ko, cfg, method=method)
+        res = driver.zo_refine(w_blocks, ko, cfg, method=method,
+                               block_range=block_range)
         phi, err_zo, history = res.phi, res.loss, res.history
     else:
         phi = jnp.concatenate([jnp.asarray(phi_u0, jnp.float32),
@@ -133,11 +152,11 @@ def parallel_map(key: jax.Array, w: jax.Array, k: int, model=None, *,
         err_zo, history = err_init, err_init[:, None]
 
     # Step 3 — OSP on the realized bases (reciprocal readback probes).
-    u_real, v_real = driver.readback_bases()
+    u_real, v_real = driver.readback_bases(block_range=block_range)
     s_opt = osp(u_real, v_real, w_blocks)
     w_hat = (u_real * s_opt[..., None, :]) @ v_real
     err_osp = matrix_distance(w_hat, w_blocks)
-    driver.write_sigma(s_opt)
+    driver.write_sigma(s_opt, block_range=block_range)
 
     params = PTCParams(u=u_real.reshape(p, q, k, k),
                        s=s_opt.reshape(p, q, k),

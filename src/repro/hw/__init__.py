@@ -20,6 +20,12 @@ hardware-in-the-loop shape; swap the server for a real instrument daemon
 and the control plane is untouched).  Both meter every op that touches
 light in Appendix-G PTC calls (:class:`DriverStats`).
 
+Both transports are *tenant-addressable* (wire protocol v2): state
+writes, probes, and in-situ jobs accept ``block_range=(start, stop)``
+scoping them to one mapped layer's blocks when a chip is time-
+multiplexed across several tenants (``repro.runtime.fleet`` keeps the
+tenant → block-range registry on top of this).
+
 Twin-only readouts (exact mapping distance, the drifted realization) are
 reachable only through ``driver.unsafe_twin()`` — tests and benchmarks
 only; ``tests/test_driver.py`` guards the import boundary.
@@ -27,14 +33,16 @@ only; ``tests/test_driver.py`` guards the import boundary.
 
 from .driver import (PhotonicDriver, DriverStats, ZORefineResult,  # noqa: F401
                      ICJobResult, TwinUnavailable, probe_cost,
-                     readback_cost)
+                     readback_cost, resolve_block_range)
 from .drift import (DriftConfig, DriftState, init_drift, advance,  # noqa: F401
                     bias_deviation, DEFAULT_DRIFT)
+from .protocol import PROTOCOL_VERSION  # noqa: F401
 from .twin import TwinDriver, TwinHandle, make_twin  # noqa: F401
 from .subprocess_driver import SubprocessDriver  # noqa: F401
 
 __all__ = ["PhotonicDriver", "DriverStats", "ZORefineResult", "ICJobResult",
-           "TwinUnavailable", "probe_cost", "readback_cost", "DriftConfig",
+           "TwinUnavailable", "probe_cost", "readback_cost",
+           "resolve_block_range", "PROTOCOL_VERSION", "DriftConfig",
            "DriftState", "init_drift", "advance", "bias_deviation",
            "DEFAULT_DRIFT", "TwinDriver", "TwinHandle", "make_twin",
            "SubprocessDriver", "make_driver"]

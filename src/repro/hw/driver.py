@@ -41,6 +41,17 @@ are quarantined behind :meth:`PhotonicDriver.unsafe_twin`, which raises
 Only tests and benchmarks may use it; the conformance suite's guard test
 keeps it out of ``repro.runtime`` / ``core.calibration`` /
 ``core.mapping`` except through that explicit hatch.
+
+Multi-tenancy
+-------------
+One physical chip is time-multiplexed across several mapped layers
+("tenants", Bandyopadhyay et al.): each tenant owns a contiguous range
+of the chip's block batch.  Every stateful or light-touching op
+therefore takes an optional ``block_range=(start, stop)`` that scopes it
+to those blocks only — writes land on the range alone, probes stream
+through the range alone (and are charged for the range alone), and
+in-situ jobs re-tune the range alone.  ``block_range=None`` means the
+whole chip, which is the single-tenant behavior these APIs always had.
 """
 
 from __future__ import annotations
@@ -54,11 +65,29 @@ import jax.numpy as jnp
 
 __all__ = ["DriverStats", "PhotonicDriver", "ZORefineResult", "ICJobResult",
            "TwinUnavailable", "probe_cost", "readback_cost",
-           "readout_blocks"]
+           "readout_blocks", "resolve_block_range"]
 
 
 class TwinUnavailable(RuntimeError):
     """The driver is not backed by an inspectable digital twin."""
+
+
+def resolve_block_range(n_blocks: int,
+                        block_range: tuple[int, int] | None
+                        ) -> tuple[int, int]:
+    """Validate a tenant block range against the chip geometry.
+
+    ``None`` means the whole chip ``(0, n_blocks)``; otherwise the range
+    must be a non-empty ``(start, stop)`` inside ``[0, n_blocks]``.
+    """
+    if block_range is None:
+        return 0, n_blocks
+    start, stop = int(block_range[0]), int(block_range[1])
+    if not (0 <= start < stop <= n_blocks):
+        raise ValueError(
+            f"block_range {block_range!r} out of bounds for a chip with "
+            f"{n_blocks} blocks")
+    return start, stop
 
 
 def probe_cost(n_blocks: int, n_cols: int) -> float:
@@ -73,14 +102,16 @@ def readback_cost(n_blocks: int, k: int) -> float:
     return float(2 * n_blocks * k)
 
 
-def readout_blocks(driver: "PhotonicDriver", category: str = "probe"
-                   ) -> jax.Array:
+def readout_blocks(driver: "PhotonicDriver", category: str = "probe",
+                   block_range: tuple[int, int] | None = None) -> jax.Array:
     """Exact Ŵ readout, (B, k, k): k unit-vector probe columns per block
     — observability-legal (forward probes only), costs B·k PTC calls.
     The shared full-readout primitive for PM's error audit and the
-    monitor's exact distance."""
+    monitor's exact distance.  ``block_range`` scopes the readout to one
+    tenant's blocks (and charges only those)."""
     k = driver.k
-    y = driver.forward(jnp.eye(k, dtype=jnp.float32), category=category)
+    y = driver.forward(jnp.eye(k, dtype=jnp.float32), category=category,
+                       block_range=block_range)
     return jnp.transpose(y, (0, 2, 1))
 
 
@@ -167,17 +198,24 @@ class PhotonicDriver(abc.ABC):
         """(M, N) of the logical weight the block grid assembles."""
 
     # -- commanded state -----------------------------------------------------
+    #
+    # All writes take an optional ``block_range=(start, stop)`` scoping
+    # the command to one tenant's blocks; the arrays then carry the
+    # range's block count as their leading dim instead of B.
 
     @abc.abstractmethod
-    def write_phases(self, phi_u: jax.Array, phi_v: jax.Array) -> None:
+    def write_phases(self, phi_u: jax.Array, phi_v: jax.Array, *,
+                     block_range: tuple[int, int] | None = None) -> None:
         """Command the rotation phases, each (B, T)."""
 
     @abc.abstractmethod
-    def write_sigma(self, sigma: jax.Array) -> None:
+    def write_sigma(self, sigma: jax.Array, *,
+                    block_range: tuple[int, int] | None = None) -> None:
         """Command the Σ attenuators, (B, k)."""
 
     @abc.abstractmethod
-    def write_signs(self, d_u: jax.Array, d_v: jax.Array) -> None:
+    def write_signs(self, d_u: jax.Array, d_v: jax.Array, *,
+                    block_range: tuple[int, int] | None = None) -> None:
         """Command the ±1 crossing configuration, each (B, k)."""
 
     @abc.abstractmethod
@@ -191,33 +229,49 @@ class PhotonicDriver(abc.ABC):
     # -- observability-legal probes (metered) --------------------------------
 
     @abc.abstractmethod
-    def forward(self, x: jax.Array, category: str = "probe") -> jax.Array:
+    def forward(self, x: jax.Array, category: str = "probe", *,
+                block_range: tuple[int, int] | None = None) -> jax.Array:
         """Stream shared probe columns ``x`` (n, k) through every block's
-        realized response; returns (B, n, k).  Costs B·n PTC calls."""
+        realized response; returns (B, n, k).  Costs B·n PTC calls.
+        With ``block_range`` only that tenant's blocks are probed (and
+        charged)."""
 
     @abc.abstractmethod
-    def forward_layer(self, x: jax.Array) -> jax.Array:
+    def forward_layer(self, x: jax.Array, *,
+                      block_range: tuple[int, int] | None = None,
+                      out_dim: int | None = None) -> jax.Array:
         """Serve-path forward (..., N) → (..., M) through the assembled
-        P×Q grid.  Costs B·n_rows PTC calls (metered as ``serve``)."""
+        P×Q grid.  Costs B·n_rows PTC calls (metered as ``serve``).
+        With ``block_range``/``out_dim`` the forward runs through one
+        tenant's sub-grid: the range's blocks assemble an
+        (out_dim × n_t) layer."""
 
     @abc.abstractmethod
-    def readback_bases(self, cols=None) -> tuple[jax.Array, jax.Array]:
+    def readback_bases(self, cols=None, *,
+                       block_range: tuple[int, int] | None = None
+                       ) -> tuple[jax.Array, jax.Array]:
         """Reciprocal-probe readout of the realized bases (U, V*), each
         (B, k, k) — or, with ``cols`` (a column-index sequence), only
         those columns, (B, k, len(cols)).  Costs 2·B·k PTC calls for the
         full readout, 2·B·len(cols) for a partial one (metered as
-        ``readback``)."""
+        ``readback``).  ``block_range`` scopes the readout to one
+        tenant's blocks."""
 
     # -- in-situ jobs (run on the device's local controller; metered) --------
 
     @abc.abstractmethod
     def zo_refine(self, w_blocks: jax.Array, key: jax.Array, cfg,
-                  method: str = "zcd") -> ZORefineResult:
+                  method: str = "zcd", *,
+                  block_range: tuple[int, int] | None = None
+                  ) -> ZORefineResult:
         """Hardware-restricted alternate ZCD on the commanded phases
         against per-block targets ``w_blocks`` (electronic comparison),
         warm-started from the current written state.  ``cfg`` is a
         :class:`repro.optim.zo.ZOConfig` budget.  Writes the result and
-        returns it.  Costs steps·2·B·k PTC calls."""
+        returns it.  Costs steps·2·B·k PTC calls.  With ``block_range``
+        the search touches only that tenant's blocks — the partial-
+        recalibration primitive: co-resident tenants' phases are
+        untouched (bit-identical before/after)."""
 
     @abc.abstractmethod
     def run_ic(self, key: jax.Array, sigs: jax.Array, cfg, *,

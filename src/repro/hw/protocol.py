@@ -11,6 +11,17 @@ round-trips bit-exactly — the conformance suite relies on the twin and
 subprocess transports returning identical results for identical seeds.
 Configs (``NoiseModel``, ``DriftConfig``, ``ZOConfig``) travel as plain
 field dicts.
+
+Versioning: the client sends ``{"v": PROTOCOL_VERSION}`` inside the
+``init`` op's kwargs and the server echoes its own version in the init
+result; a mismatch is a hard error on both sides (no silent fallback —
+a stale server would misinterpret tenant-scoped ops).
+
+* v1 — original surface (PR 2): whole-chip ops only.
+* v2 — multi-tenant surface: ``block_range`` on ``write_phases`` /
+  ``write_sigma`` / ``write_signs`` / ``forward`` / ``forward_layer``
+  (+ ``out_dim``) / ``readback_bases`` / ``zo_refine`` and on
+  ``unsafe/true_mapping_distance``; version handshake added.
 """
 
 from __future__ import annotations
@@ -21,7 +32,10 @@ from typing import Any, IO
 
 import numpy as np
 
-__all__ = ["encode", "decode", "send", "recv", "ProtocolError"]
+__all__ = ["encode", "decode", "send", "recv", "ProtocolError",
+           "PROTOCOL_VERSION"]
+
+PROTOCOL_VERSION = 2
 
 _ND = "__nd__"
 

@@ -27,13 +27,19 @@ import jax.numpy as jnp
 from ..core.noise import NoiseModel
 from ..optim.zo import ZOConfig
 from .drift import DriftConfig
-from .protocol import encode, decode, send, recv, ProtocolError
+from .protocol import (encode, decode, send, recv, ProtocolError,
+                       PROTOCOL_VERSION)
 from .twin import make_twin
 
 __all__ = ["serve", "main"]
 
 
 def _build_driver(kw: dict):
+    v = int(kw.get("v", 1))
+    if v != PROTOCOL_VERSION:
+        raise RuntimeError(
+            f"driver protocol mismatch: client speaks v{v}, server "
+            f"speaks v{PROTOCOL_VERSION}")
     model = NoiseModel(**kw["model"])
     drift = DriftConfig(**kw["drift"]) if kw.get("drift") else None
     return make_twin(jnp.asarray(kw["key"]), int(kw["n_blocks"]),
@@ -41,19 +47,24 @@ def _build_driver(kw: dict):
                      m=kw.get("m"), n=kw.get("n"), drift=drift)
 
 
+def _rng(kw: dict):
+    br = kw.get("block_range")
+    return tuple(int(i) for i in br) if br is not None else None
+
+
 def _dispatch(driver, op: str, kw: dict):
     if op == "meta":
         m, n = driver.layer_shape
         return dict(k=driver.k, kind=driver.kind, n_blocks=driver.n_blocks,
-                    m=m, n=n)
+                    m=m, n=n, v=PROTOCOL_VERSION)
     if op == "write_phases":
-        driver.write_phases(kw["phi_u"], kw["phi_v"])
+        driver.write_phases(kw["phi_u"], kw["phi_v"], block_range=_rng(kw))
         return None
     if op == "write_sigma":
-        driver.write_sigma(kw["sigma"])
+        driver.write_sigma(kw["sigma"], block_range=_rng(kw))
         return None
     if op == "write_signs":
-        driver.write_signs(kw["d_u"], kw["d_v"])
+        driver.write_signs(kw["d_u"], kw["d_v"], block_range=_rng(kw))
         return None
     if op == "read_phases":
         phi_u, phi_v = driver.read_phases()
@@ -61,16 +72,22 @@ def _dispatch(driver, op: str, kw: dict):
     if op == "read_sigma":
         return dict(sigma=driver.read_sigma())
     if op == "forward":
-        return dict(y=driver.forward(kw["x"], kw.get("category", "probe")))
+        return dict(y=driver.forward(kw["x"], kw.get("category", "probe"),
+                                     block_range=_rng(kw)))
     if op == "forward_layer":
-        return dict(y=driver.forward_layer(kw["x"]))
+        out_dim = kw.get("out_dim")
+        return dict(y=driver.forward_layer(
+            kw["x"], block_range=_rng(kw),
+            out_dim=int(out_dim) if out_dim is not None else None))
     if op == "readback_bases":
-        u, v = driver.readback_bases(cols=kw.get("cols"))
+        u, v = driver.readback_bases(cols=kw.get("cols"),
+                                     block_range=_rng(kw))
         return dict(u=u, v=v)
     if op == "zo_refine":
         res = driver.zo_refine(kw["w_blocks"], jnp.asarray(kw["key"]),
                                ZOConfig(**kw["cfg"]),
-                               method=kw.get("method", "zcd"))
+                               method=kw.get("method", "zcd"),
+                               block_range=_rng(kw))
         return dict(phi=res.phi, loss=res.loss, history=res.history,
                     steps=res.steps)
     if op == "run_ic":
@@ -94,7 +111,7 @@ def _dispatch(driver, op: str, kw: dict):
     # -- unsafe/* : twin-internal readouts backing unsafe_twin() -------------
     if op == "unsafe/true_mapping_distance":
         return dict(d=driver.unsafe_twin().true_mapping_distance(
-            jnp.asarray(kw["w_blocks"])))
+            jnp.asarray(kw["w_blocks"]), block_range=_rng(kw)))
     if op == "unsafe/bias_deviation":
         return dict(d=driver.unsafe_twin().bias_deviation())
     if op == "unsafe/dev":

@@ -29,7 +29,13 @@ from .drift import DriftConfig
 from ..core.noise import PhaseNoise
 from .driver import (PhotonicDriver, DriverStats, ZORefineResult, ICJobResult,
                      TwinUnavailable)
-from .protocol import encode, decode, send, recv, ProtocolError
+from .protocol import (encode, decode, send, recv, ProtocolError,
+                       PROTOCOL_VERSION)
+
+
+def _rng_kw(block_range):
+    """Wire form of a block range (JSON list, or None for whole-chip)."""
+    return None if block_range is None else [int(i) for i in block_range]
 
 __all__ = ["SubprocessDriver", "RemoteTwinHandle"]
 
@@ -64,8 +70,10 @@ class RemoteTwinHandle:
         r = self._d._rpc("unsafe/realized_unitaries")
         return jnp.asarray(r["u"]), jnp.asarray(r["v"])
 
-    def true_mapping_distance(self, w_blocks: jax.Array) -> float:
-        r = self._d._rpc("unsafe/true_mapping_distance", w_blocks=w_blocks)
+    def true_mapping_distance(self, w_blocks: jax.Array,
+                              block_range=None) -> float:
+        r = self._d._rpc("unsafe/true_mapping_distance", w_blocks=w_blocks,
+                         block_range=_rng_kw(block_range))
         return float(r["d"])
 
     def bias_deviation(self) -> float:
@@ -96,9 +104,15 @@ class SubprocessDriver(PhotonicDriver):
             stderr=self._stderr, text=True, env=env)
         self._rid = 0
         meta = self._rpc(
-            "init", key=np.asarray(key), n_blocks=int(n_blocks), k=int(k),
+            "init", v=PROTOCOL_VERSION, key=np.asarray(key),
+            n_blocks=int(n_blocks), k=int(k),
             kind=kind, m=m, n=n, model=dataclasses.asdict(model),
             drift=drift._asdict() if drift is not None else None)
+        if int(meta.get("v", 1)) != PROTOCOL_VERSION:
+            self.close()
+            raise ProtocolError(
+                f"driver protocol mismatch: server speaks "
+                f"v{meta.get('v', 1)}, client speaks v{PROTOCOL_VERSION}")
         self._meta = meta
 
     # -- transport -----------------------------------------------------------
@@ -175,14 +189,17 @@ class SubprocessDriver(PhotonicDriver):
 
     # -- commanded state -----------------------------------------------------
 
-    def write_phases(self, phi_u, phi_v) -> None:
-        self._rpc("write_phases", phi_u=phi_u, phi_v=phi_v)
+    def write_phases(self, phi_u, phi_v, *, block_range=None) -> None:
+        self._rpc("write_phases", phi_u=phi_u, phi_v=phi_v,
+                  block_range=_rng_kw(block_range))
 
-    def write_sigma(self, sigma) -> None:
-        self._rpc("write_sigma", sigma=sigma)
+    def write_sigma(self, sigma, *, block_range=None) -> None:
+        self._rpc("write_sigma", sigma=sigma,
+                  block_range=_rng_kw(block_range))
 
-    def write_signs(self, d_u, d_v) -> None:
-        self._rpc("write_signs", d_u=d_u, d_v=d_v)
+    def write_signs(self, d_u, d_v, *, block_range=None) -> None:
+        self._rpc("write_signs", d_u=d_u, d_v=d_v,
+                  block_range=_rng_kw(block_range))
 
     def read_phases(self) -> tuple[jax.Array, jax.Array]:
         r = self._rpc("read_phases")
@@ -193,24 +210,32 @@ class SubprocessDriver(PhotonicDriver):
 
     # -- probes --------------------------------------------------------------
 
-    def forward(self, x, category: str = "probe") -> jax.Array:
-        return jnp.asarray(self._rpc("forward", x=x, category=category)["y"])
+    def forward(self, x, category: str = "probe", *,
+                block_range=None) -> jax.Array:
+        return jnp.asarray(self._rpc("forward", x=x, category=category,
+                                     block_range=_rng_kw(block_range))["y"])
 
-    def forward_layer(self, x) -> jax.Array:
-        return jnp.asarray(self._rpc("forward_layer", x=x)["y"])
+    def forward_layer(self, x, *, block_range=None,
+                      out_dim: int | None = None) -> jax.Array:
+        return jnp.asarray(self._rpc(
+            "forward_layer", x=x, block_range=_rng_kw(block_range),
+            out_dim=int(out_dim) if out_dim is not None else None)["y"])
 
-    def readback_bases(self, cols=None) -> tuple[jax.Array, jax.Array]:
+    def readback_bases(self, cols=None, *,
+                       block_range=None) -> tuple[jax.Array, jax.Array]:
         if cols is not None:
             cols = [int(c) for c in np.asarray(cols).tolist()]
-        r = self._rpc("readback_bases", cols=cols)
+        r = self._rpc("readback_bases", cols=cols,
+                      block_range=_rng_kw(block_range))
         return jnp.asarray(r["u"]), jnp.asarray(r["v"])
 
     # -- in-situ jobs --------------------------------------------------------
 
     def zo_refine(self, w_blocks, key, cfg: ZOConfig,
-                  method: str = "zcd") -> ZORefineResult:
+                  method: str = "zcd", *, block_range=None) -> ZORefineResult:
         r = self._rpc("zo_refine", w_blocks=w_blocks, key=np.asarray(key),
-                      cfg=cfg._asdict(), method=method)
+                      cfg=cfg._asdict(), method=method,
+                      block_range=_rng_kw(block_range))
         return ZORefineResult(phi=jnp.asarray(r["phi"]),
                               loss=jnp.asarray(r["loss"]),
                               history=jnp.asarray(r["history"]),

@@ -30,7 +30,7 @@ from .device import (DeviceRealization, sample_device, realized_unitaries,
 from .drift import DriftConfig, DriftState, init_drift, advance, \
     bias_deviation
 from .driver import (PhotonicDriver, DriverStats, ZORefineResult, ICJobResult,
-                     probe_cost, readback_cost)
+                     probe_cost, readback_cost, resolve_block_range)
 
 __all__ = ["TwinDriver", "TwinHandle", "make_twin"]
 
@@ -71,11 +71,18 @@ class TwinHandle:
         return realized_blocks(d._spec, d._phi, d._sigma, d._state.dev,
                                d._model)
 
-    def true_mapping_distance(self, w_blocks: jax.Array) -> float:
-        """Exact aggregate mapping distance (full-readout ground truth)."""
+    def true_mapping_distance(self, w_blocks: jax.Array,
+                              block_range: tuple[int, int] | None = None
+                              ) -> float:
+        """Exact aggregate mapping distance (full-readout ground truth).
+        ``block_range`` scopes it to one tenant's blocks (``w_blocks``
+        then carries the range's block count)."""
         d = self._d
-        return float(true_mapping_distance(d._spec, d._phi, d._sigma,
-                                           d._state.dev, d._model, w_blocks))
+        start, stop = resolve_block_range(d._b, block_range)
+        dev = jax.tree_util.tree_map(lambda a: a[start:stop], d._state.dev)
+        return float(true_mapping_distance(
+            d._spec, d._phi[start:stop], d._sigma[start:stop], dev,
+            d._model, w_blocks))
 
     def bias_deviation(self) -> float:
         """RMS phase-bias deviation from the anchor (radians)."""
@@ -83,18 +90,25 @@ class TwinHandle:
 
 
 @functools.lru_cache(maxsize=64)
-def _jitted_probe_ops(k: int, kind: str, model: NoiseModel, m_out: int):
-    """Compiled forward/layer/readback graphs keyed on the driver's
-    static physics (NoiseModel is a frozen dataclass, hence hashable)."""
+def _jitted_probe_ops(k: int, kind: str, model: NoiseModel):
+    """Compiled forward/readback graphs keyed on the driver's static
+    physics (NoiseModel is a frozen dataclass, hence hashable)."""
     spec = un.mesh_spec(k, kind)
     t = spec.n_rot
     fwd = jax.jit(lambda phi, sigma, dev, x: jnp.einsum(
         "bij,nj->bni", realized_blocks(spec, phi, sigma, dev, model), x))
-    layer = jax.jit(lambda phi, sigma, dev, x: chip_forward(
-        spec, phi, sigma, dev, model, x, m_out))
     readback = jax.jit(lambda phi, dev: realized_unitaries(
         spec, phi[:, :t], phi[:, t:], dev, model))
-    return fwd, layer, readback
+    return fwd, readback
+
+
+@functools.lru_cache(maxsize=256)
+def _jitted_layer(k: int, kind: str, model: NoiseModel, m_out: int):
+    """Compiled serve-path graph, keyed additionally on the output dim —
+    each tenant geometry compiles once and is shared fleet-wide."""
+    spec = un.mesh_spec(k, kind)
+    return jax.jit(lambda phi, sigma, dev, x: chip_forward(
+        spec, phi, sigma, dev, model, x, m_out))
 
 
 class TwinDriver(PhotonicDriver):
@@ -122,8 +136,18 @@ class TwinDriver(PhotonicDriver):
         self._stats = DriverStats()
         # jitted probe paths, shared across drivers with the same physics
         # (a fleet of N identical chips compiles each graph once, not N×)
-        self._jit_forward, self._jit_layer, self._jit_readback = \
-            _jitted_probe_ops(k, kind, model, self._m)
+        self._jit_forward, self._jit_readback = _jitted_probe_ops(
+            k, kind, model)
+
+    def _slice(self, block_range):
+        """(start, stop, phi, sigma, dev) scoped to ``block_range``."""
+        start, stop = resolve_block_range(self._b, block_range)
+        if (start, stop) == (0, self._b):
+            return start, stop, self._phi, self._sigma, self._state.dev
+        dev = jax.tree_util.tree_map(lambda a: a[start:stop],
+                                     self._state.dev)
+        return start, stop, self._phi[start:stop], self._sigma[start:stop], \
+            dev
 
     # -- geometry ------------------------------------------------------------
 
@@ -145,18 +169,32 @@ class TwinDriver(PhotonicDriver):
 
     # -- commanded state -----------------------------------------------------
 
-    def write_phases(self, phi_u: jax.Array, phi_v: jax.Array) -> None:
+    def write_phases(self, phi_u: jax.Array, phi_v: jax.Array, *,
+                     block_range=None) -> None:
         t = self._spec.n_rot
-        phi_u = jnp.asarray(phi_u, jnp.float32).reshape(self._b, t)
-        phi_v = jnp.asarray(phi_v, jnp.float32).reshape(self._b, t)
-        self._phi = jnp.concatenate([phi_u, phi_v], axis=-1)
+        start, stop = resolve_block_range(self._b, block_range)
+        nb = stop - start
+        phi_u = jnp.asarray(phi_u, jnp.float32).reshape(nb, t)
+        phi_v = jnp.asarray(phi_v, jnp.float32).reshape(nb, t)
+        phi = jnp.concatenate([phi_u, phi_v], axis=-1)
+        self._phi = phi if nb == self._b else \
+            self._phi.at[start:stop].set(phi)
 
-    def write_sigma(self, sigma: jax.Array) -> None:
-        self._sigma = jnp.asarray(sigma, jnp.float32).reshape(self._b, self.k)
+    def write_sigma(self, sigma: jax.Array, *, block_range=None) -> None:
+        start, stop = resolve_block_range(self._b, block_range)
+        sigma = jnp.asarray(sigma, jnp.float32).reshape(stop - start, self.k)
+        self._sigma = sigma if stop - start == self._b else \
+            self._sigma.at[start:stop].set(sigma)
 
-    def write_signs(self, d_u: jax.Array, d_v: jax.Array) -> None:
-        d_u = jnp.asarray(d_u, jnp.float32).reshape(self._b, self.k)
-        d_v = jnp.asarray(d_v, jnp.float32).reshape(self._b, self.k)
+    def write_signs(self, d_u: jax.Array, d_v: jax.Array, *,
+                    block_range=None) -> None:
+        start, stop = resolve_block_range(self._b, block_range)
+        nb = stop - start
+        d_u = jnp.asarray(d_u, jnp.float32).reshape(nb, self.k)
+        d_v = jnp.asarray(d_v, jnp.float32).reshape(nb, self.k)
+        if nb != self._b:
+            d_u = self._state.dev.d_u.at[start:stop].set(d_u)
+            d_v = self._state.dev.d_v.at[start:stop].set(d_v)
         # signs are topological: they configure both the live device and
         # the drift anchor (OU never walks them)
         self._state = DriftState(
@@ -173,42 +211,52 @@ class TwinDriver(PhotonicDriver):
 
     # -- probes --------------------------------------------------------------
 
-    def forward(self, x: jax.Array, category: str = "probe") -> jax.Array:
+    def forward(self, x: jax.Array, category: str = "probe", *,
+                block_range=None) -> jax.Array:
         x = jnp.asarray(x, jnp.float32)
-        y = self._jit_forward(self._phi, self._sigma, self._state.dev, x)
-        self._stats.charge(category, probe_cost(self._b, x.shape[0]))
+        start, stop, phi, sigma, dev = self._slice(block_range)
+        y = self._jit_forward(phi, sigma, dev, x)
+        self._stats.charge(category, probe_cost(stop - start, x.shape[0]))
         return y
 
-    def forward_layer(self, x: jax.Array) -> jax.Array:
+    def forward_layer(self, x: jax.Array, *, block_range=None,
+                      out_dim: int | None = None) -> jax.Array:
         x = jnp.asarray(x, jnp.float32)
-        y = self._jit_layer(self._phi, self._sigma, self._state.dev, x)
+        start, stop, phi, sigma, dev = self._slice(block_range)
+        m_out = int(out_dim) if out_dim is not None else self._m
+        layer = _jitted_layer(self.k, self._kind, self._model, m_out)
+        y = layer(phi, sigma, dev, x)
         n_cols = int(np.prod(x.shape[:-1])) if x.ndim > 1 else 1
-        self._stats.charge("serve", probe_cost(self._b, n_cols))
+        self._stats.charge("serve", probe_cost(stop - start, n_cols))
         return y
 
-    def readback_bases(self, cols=None) -> tuple[jax.Array, jax.Array]:
-        u, v = self._jit_readback(self._phi, self._state.dev)
+    def readback_bases(self, cols=None, *,
+                       block_range=None) -> tuple[jax.Array, jax.Array]:
+        start, stop, phi, _, dev = self._slice(block_range)
+        u, v = self._jit_readback(phi, dev)
         if cols is not None:
             idx = jnp.asarray(cols, jnp.int32)
             u, v = u[..., :, idx], v[..., :, idx]
             self._stats.charge("readback",
-                               readback_cost(self._b, int(idx.shape[0])))
+                               readback_cost(stop - start, int(idx.shape[0])))
         else:
-            self._stats.charge("readback", readback_cost(self._b, self.k))
+            self._stats.charge("readback",
+                               readback_cost(stop - start, self.k))
         return u, v
 
     # -- in-situ jobs --------------------------------------------------------
 
     def zo_refine(self, w_blocks: jax.Array, key: jax.Array, cfg: ZOConfig,
-                  method: str = "zcd") -> ZORefineResult:
-        res = jobs.phase_refine(self._spec, self._model, self._state.dev,
-                                self._phi, self._sigma,
+                  method: str = "zcd", *, block_range=None) -> ZORefineResult:
+        start, stop, phi, sigma, dev = self._slice(block_range)
+        res = jobs.phase_refine(self._spec, self._model, dev, phi, sigma,
                                 jnp.asarray(w_blocks, jnp.float32), key,
                                 cfg, method)
-        self._phi = res.x
+        self._phi = res.x if stop - start == self._b else \
+            self._phi.at[start:stop].set(res.x)
         # each ZCD step issues ≤2 transfer-matrix evaluations of k columns
         self._stats.charge("search",
-                           float(cfg.steps * 2 * self._b * self.k))
+                           float(cfg.steps * 2 * (stop - start) * self.k))
         return ZORefineResult(phi=res.x, loss=res.f, history=res.history,
                               steps=int(cfg.steps))
 

@@ -10,6 +10,11 @@ photonic runtime (``repro.runtime``): N virtual chip instances with
 independent device realizations back the serving plane, health probes
 run out-of-band, and (with ``--drift``) thermal phase drift degrades
 chips until the router schedules recalibration around live traffic.
+With ``--fleet-tenants T`` every chip is time-multiplexed across T
+mapped layers (per-layer Σ banks), and each decode step's PTC traffic
+is routed to a (chip, tenant) slot — step ``i`` exercises tenant
+``i mod T``, the round-robin a T-layer model would drive — so a single
+drifted layer triggers *partial* recalibration of its own blocks only.
 The LM math itself stays on the digital twin; the fleet models the
 photonic boards' device state, health, and routing — every decode step
 is routed through one chip's *drifted* transfer function and accounted.
@@ -22,6 +27,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..data import lm_batch
 from ..models.lm import init_model, init_decode_cache, build_serve_step
@@ -30,7 +36,7 @@ from .train import parse_arch
 
 
 def _build_fleet(args):
-    from ..runtime.demo import default_runtime_config
+    from ..runtime.demo import default_runtime_config, _make_weights
     from ..runtime.fleet import make_fleet, FleetRouter
 
     sigma = args.drift_sigma if args.drift else 0.0
@@ -39,32 +45,17 @@ def _build_fleet(args):
                                  driver_kind=args.fleet_driver)
     kw, kf = jax.random.split(jax.random.PRNGKey(args.seed + 17))
     dim = args.fleet_dim
-    w = jax.random.normal(kw, (dim, dim)) / jnp.sqrt(
-        jnp.asarray(dim, jnp.float32))
-    chips = make_fleet(kf, args.fleet, w, cfg)
-    return FleetRouter(chips, cfg, seed=args.seed), dim
+    tenants = max(1, args.fleet_tenants)
+    weights = _make_weights(kw, dim, tenants)
+    chips = make_fleet(kf, args.fleet,
+                       weights if tenants > 1 else weights[0], cfg)
+    return FleetRouter(chips, cfg, seed=args.seed), dim, tenants
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--fleet", type=int, default=0,
-                    help="route decode steps through N virtual chips")
-    ap.add_argument("--drift", action="store_true",
-                    help="enable thermal phase drift on the fleet")
-    ap.add_argument("--drift-sigma", type=float, default=0.015)
-    ap.add_argument("--probe-every", type=int, default=10)
-    ap.add_argument("--fleet-k", type=int, default=6)
-    ap.add_argument("--fleet-dim", type=int, default=18)
-    ap.add_argument("--fleet-driver", default="twin",
-                    choices=["twin", "subprocess"],
-                    help="photonic device transport behind the fleet")
-    args = ap.parse_args(argv)
-
+def run(args) -> dict:
+    """Serve ``args.gen`` tokens (optionally through the fleet runtime)
+    and return the outcome: generated tokens plus the router's report —
+    the seeded-regression surface the e2e test locks down."""
     cfg = parse_arch(args.arch)
     key = jax.random.PRNGKey(args.seed)
     params = init_model(key, cfg)
@@ -84,16 +75,17 @@ def main(argv=None):
 
     on_step = None
     router = None
+    report = None
     if args.fleet > 0:
-        router, fleet_dim = _build_fleet(args)
+        router, fleet_dim, tenants = _build_fleet(args)
         kx = jax.random.PRNGKey(args.seed + 23)
 
         def on_step(i):
             # every serve-path step (prefill included) runs on one
-            # routed (drifted) board
+            # routed (drifted) board, on the step's (chip, tenant) slot
             x = jax.random.normal(jax.random.fold_in(kx, i),
                                   (args.batch, fleet_dim))
-            router.serve(x)
+            router.serve(x, tenant=i % tenants)
             router.tick()
 
     try:
@@ -101,24 +93,61 @@ def main(argv=None):
         gen, cache = greedy_decode(serve, params, cache, prompt, args.gen,
                                    extras=extras, on_step=on_step)
         dt = time.time() - t0
-        print(f"generated {gen.shape} tokens in {dt:.1f}s "
-              f"({gen.size / dt:.1f} tok/s)")
-        print("sample:", gen[0][:24])
-
         if router is not None:
-            rep = router.report()
-            alarms = sum(c["alarms"] for c in rep["chips"])
-            recals = sum(c["recals"] for c in rep["chips"])
-            print(f"fleet: {args.fleet} chips, {rep['ticks']} ticks, "
-                  f"{rep['dropped']} dropped, {alarms} alarms, "
-                  f"{recals} recals")
-            for c in rep["chips"]:
-                print(f"  chip {c['chip']}: {c['status']:<13} "
-                      f"served={c['served']:4d} d̂={c['distance']:.4f} "
-                      f"alarms={c['alarms']} recals={c['recals']}")
+            report = router.report()
     finally:
         if router is not None:
             router.close()
+    return dict(gen=np.asarray(gen), wall_s=dt, report=report)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fleet", type=int, default=0,
+                    help="route decode steps through N virtual chips")
+    ap.add_argument("--drift", action="store_true",
+                    help="enable thermal phase drift on the fleet")
+    ap.add_argument("--drift-sigma", type=float, default=0.015)
+    ap.add_argument("--probe-every", type=int, default=10)
+    ap.add_argument("--fleet-k", type=int, default=6)
+    ap.add_argument("--fleet-dim", type=int, default=18)
+    ap.add_argument("--fleet-tenants", type=int, default=1,
+                    help="mapped layers time-sharing each chip; decode "
+                         "step i routes to tenant i %% T")
+    ap.add_argument("--fleet-driver", default="twin",
+                    choices=["twin", "subprocess"],
+                    help="photonic device transport behind the fleet")
+    args = ap.parse_args(argv)
+
+    out = run(args)
+    gen = out["gen"]
+    print(f"generated {gen.shape} tokens in {out['wall_s']:.1f}s "
+          f"({gen.size / out['wall_s']:.1f} tok/s)")
+    print("sample:", gen[0][:24])
+
+    rep = out["report"]
+    if rep is not None:
+        alarms = sum(c["alarms"] for c in rep["chips"])
+        recals = sum(c["recals"] for c in rep["chips"])
+        print(f"fleet: {args.fleet} chips x {max(1, args.fleet_tenants)} "
+              f"tenant(s), {rep['ticks']} ticks, "
+              f"{rep['dropped']} dropped, {alarms} alarms, "
+              f"{recals} recals")
+        for c in rep["chips"]:
+            print(f"  chip {c['chip']}: {c['status']:<13} "
+                  f"served={c['served']:4d} d̂={c['distance']:.4f} "
+                  f"alarms={c['alarms']} recals={c['recals']}")
+            if args.fleet_tenants > 1:
+                for t in c["tenants"]:
+                    print(f"    tenant {t['tenant']} "
+                          f"blocks{t['block_range']}: "
+                          f"served={t['served']:4d} d̂={t['distance']:.4f} "
+                          f"alarms={t['alarms']} recals={t['recals']}")
     return 0
 
 

@@ -9,10 +9,16 @@ on-chip re-optimization).  This package closes the loop, talking to
 devices exclusively through the :class:`repro.hw.driver.PhotonicDriver`
 control-plane ABC:
 
-    monitor.py      the sensor:   stochastic fidelity probes + hysteretic alarm
+    monitor.py      the sensor:   stochastic fidelity probes + hysteretic
+                                  alarm, resolved per tenant from one
+                                  shared probe stream
     recalibrate.py  the actuator: warm ZO job + OSP refresh (+ in-situ Σ),
-                                  budget autotuned from d̂ at alarm time
-    fleet.py        the plane:    N-chip registry + drift-aware router
+                                  budget autotuned from d̂ at alarm time,
+                                  scoped to one tenant's block range for
+                                  partial recalibration
+    fleet.py        the plane:    N-chip registry + tenant slots
+                                  (tenant → Σ bank + block range) +
+                                  drift-aware (chip, tenant) router
     demo.py         the driver:   ``python -m repro.runtime.demo``
 
 (the plant — OU phase drift on the device realization — lives on the
@@ -36,6 +42,11 @@ Design invariants:
   at most ``max_concurrent_recals`` chips are in repair at once and the
   router structurally never dispatches to a RECALIBRATING chip.
   DEGRADED chips keep serving (stale beats down).
+* **Repairs are tenant-scoped.**  On a multi-tenant chip only the
+  alarmed tenant's blocks are re-tuned (warm ZO + OSP over its block
+  range); co-resident tenants' commanded phases and Σ banks are
+  bit-identical across the job — one noisy layer never costs its
+  neighbors their calibration.
 * **Alarms are hysteretic.**  ``consecutive`` strikes above
   ``alarm_threshold`` raise; recovery must pass the *lower*
   ``clear_threshold`` — no chatter around one boundary.
@@ -53,11 +64,12 @@ Design invariants:
 """
 
 from .monitor import (MonitorConfig, HealthState, aggregate_distance,
-                      probe_mapping_distance, readout_mapping_distance,
+                      probe_mapping_distance, probe_tenant_distances,
+                      readout_mapping_distance,
                       probe_identity_distance, update_health,
                       clear_health)  # noqa: F401
 from .recalibrate import (RecalConfig, RecalResult, recalibrate,
                           autotune_zo_steps)  # noqa: F401
-from .fleet import (HEALTHY, DEGRADED, RECALIBRATING, RuntimeConfig, Chip,
-                    FleetRouter, make_chip, make_fleet,
+from .fleet import (HEALTHY, DEGRADED, RECALIBRATING, RuntimeConfig, Tenant,
+                    Chip, FleetRouter, make_chip, make_fleet,
                     predicted_distance)  # noqa: F401

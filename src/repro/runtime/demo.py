@@ -2,15 +2,24 @@
 
     PYTHONPATH=src python -m repro.runtime.demo --chips 4 --steps 200
     PYTHONPATH=src python -m repro.runtime.demo --driver subprocess
+    PYTHONPATH=src python -m repro.runtime.demo --tenants 3
 
 Builds a fleet of N virtual chips (independent manufacturing draws of
-the same mapped weight), then runs the serving loop under phase drift:
-every tick one batch is routed to a healthy chip while the monitor
-probes fidelity out-of-band; alarms trigger warm-started recalibration
-jobs that the router schedules around.  Prints the event timeline and a
-summary showing (a) fidelity degrading under drift, (b) alarms firing,
-(c) recalibration restoring the mapping distance below the clear
-threshold, and (d) serving throughput uninterrupted throughout.
+the same mapped weight(s)), then runs the serving loop under phase
+drift: every tick one batch is routed to a healthy chip while the
+monitor probes fidelity out-of-band; alarms trigger warm-started
+recalibration jobs that the router schedules around.  Prints the event
+timeline and a summary showing (a) fidelity degrading under drift,
+(b) alarms firing, (c) recalibration restoring the mapping distance
+below the clear threshold, and (d) serving throughput uninterrupted
+throughout.
+
+``--tenants T`` time-multiplexes every chip across T mapped layers
+(per-layer Σ banks on contiguous block ranges of one shared device).
+Health is tracked per tenant, traffic round-robins across tenants, and
+repair jobs are *partial*: only the alarmed tenant's blocks are
+re-tuned, so the summary additionally shows co-resident tenants riding
+through a neighbor's recalibration untouched.
 
 ``--driver subprocess`` runs every device out-of-process behind the
 JSON-over-pipe :class:`~repro.hw.subprocess_driver.SubprocessDriver` —
@@ -63,31 +72,48 @@ def default_runtime_config(k: int = 6, sigma_drift: float = 0.015,
     )
 
 
+def _make_weights(key: jax.Array, dim: int, tenants: int) -> list[jax.Array]:
+    """Per-tenant logical weights (one for the single-tenant case, the
+    historical seed path)."""
+    scale = jnp.sqrt(jnp.asarray(dim, jnp.float32))
+    if tenants == 1:
+        return [jax.random.normal(key, (dim, dim)) / scale]
+    return [jax.random.normal(jax.random.fold_in(key, i), (dim, dim)) / scale
+            for i in range(tenants)]
+
+
 def simulate(n_chips: int, steps: int, *, dim: int = 18, batch: int = 8,
              seed: int = 0, cfg: RuntimeConfig | None = None,
-             recal_enabled: bool = True, verbose: bool = False) -> dict:
+             tenants: int = 1, recal_enabled: bool = True,
+             verbose: bool = False) -> dict:
     """Run the closed (or open) loop and record the trajectory.
 
     Returns a dict with per-tick traces (``t``, ``max_dist``,
-    ``mean_dist``, ``serve_err``, ``n_recalibrating``) plus the router's
-    final report — everything the recovery benchmark needs.
+    ``mean_dist``, ``serve_err``, ``n_recalibrating``, plus
+    ``tenant_dist`` — per-(chip, tenant) true distances) and the
+    router's final report — everything the recovery benchmarks need.
+    Traffic round-robins across tenants: tick ``t`` serves tenant
+    ``t % tenants``.
     """
     cfg = cfg or default_runtime_config()
     kw, kf, kx = jax.random.split(jax.random.PRNGKey(seed), 3)
-    w = jax.random.normal(kw, (dim, dim)) / jnp.sqrt(jnp.asarray(dim, jnp.float32))
-    chips = make_fleet(kf, n_chips, w, cfg)
+    weights = _make_weights(kw, dim, tenants)
+    chips = make_fleet(kf, n_chips, weights if tenants > 1 else weights[0],
+                       cfg)
     router = FleetRouter(chips, cfg, seed=seed + 1,
                          recal_enabled=recal_enabled)
 
     trace = dict(t=[], max_dist=[], mean_dist=[], serve_err=[],
-                 n_recalibrating=[], served_chip=[])
+                 n_recalibrating=[], served_chip=[], served_tenant=[],
+                 tenant_dist=[])
     n_events = 0
     try:
         for t in range(1, steps + 1):
+            tenant = (t - 1) % tenants
             x = jax.random.normal(jax.random.fold_in(kx, t), (batch, dim))
-            y, chip_id = router.serve(x)
+            y, chip_id = router.serve(x, tenant=tenant)
             if y is not None:
-                y_ref = x @ w.T
+                y_ref = x @ weights[tenant].T
                 err = float(jnp.sum((y - y_ref) ** 2) /
                             (jnp.sum(y_ref ** 2) + 1e-12))
             else:
@@ -102,6 +128,12 @@ def simulate(n_chips: int, steps: int, *, dim: int = 18, batch: int = 8,
             trace["n_recalibrating"].append(
                 sum(c.status == RECALIBRATING for c in router.chips))
             trace["served_chip"].append(-1 if chip_id is None else chip_id)
+            trace["served_tenant"].append(tenant)
+            # single-tenant: the per-chip readout above IS the tenant
+            # readout — don't pay (or RPC) the same exact readout twice
+            trace["tenant_dist"].append(
+                [[d] for d in dists] if tenants == 1
+                else router.true_tenant_distances())
 
             if verbose:
                 for ev in router.events[n_events:]:
@@ -113,7 +145,7 @@ def simulate(n_chips: int, steps: int, *, dim: int = 18, batch: int = 8,
         router.close()
     return dict(trace=trace, report=report, config=dict(
         chips=n_chips, steps=steps, dim=dim, batch=batch, seed=seed,
-        recal_enabled=recal_enabled, k=cfg.k,
+        tenants=tenants, recal_enabled=recal_enabled, k=cfg.k,
         alarm_threshold=cfg.monitor.alarm_threshold,
         clear_threshold=cfg.monitor.clear_threshold,
         sigma_drift=cfg.drift.sigma_phase,
@@ -121,13 +153,74 @@ def simulate(n_chips: int, steps: int, *, dim: int = 18, batch: int = 8,
         auto_budget=cfg.recal.auto_budget))
 
 
+def cotenant_shifts(trace: dict, events: list[dict],
+                    recal_latency: int) -> list[dict]:
+    """For each completed recal, how far every co-resident tenant's TRUE
+    distance moved across the repair window (job start → job done).
+
+    The partial-recal invariant says co-tenants' commanded state is
+    untouched; their true distance can still move by natural drift over
+    the window, so the shift should sit within the per-window drift
+    noise — this is the quantity the multi-tenant benchmark bounds.
+    """
+    out = []
+    td = trace["tenant_dist"]
+    for ev in events:
+        if ev["event"] != "recal_done":
+            continue
+        t_done = ev["tick"] - 1                      # trace index of done
+        t_start = max(0, t_done - recal_latency)     # ≈ job-start index
+        chip = ev["chip"]
+        n_tenants = len(td[t_done][chip])
+        for j in range(n_tenants):
+            if j == ev.get("tenant", 0):
+                continue
+            out.append(dict(
+                tick=ev["tick"], chip=chip, recal_tenant=ev.get("tenant", 0),
+                cotenant=j, dist_pre=td[t_start][chip][j],
+                dist_post=td[t_done][chip][j],
+                shift=td[t_done][chip][j] - td[t_start][chip][j]))
+    return out
+
+
+def isolation_band(noise: float, fallback: float) -> float:
+    """Co-tenant shift tolerance from the empirical drift noise: both
+    the worst co-tenant shift and the worst repair-free shift are maxima
+    of the same drift distribution, so allow 2× headroom; fall back to
+    ``fallback`` when no repair-free window existed to estimate from."""
+    return 2.0 * noise + 1e-3 if noise > 0 else fallback
+
+
+def drift_noise_band(trace: dict, events: list[dict],
+                     recal_latency: int) -> float:
+    """Largest |Δ true distance| over any repair-free window of
+    ``recal_latency`` ticks, across every (chip, tenant) — the natural
+    per-window drift scale co-tenant shifts are judged against."""
+    td = trace["tenant_dist"]
+    done = {(ev["chip"], ev["tick"]) for ev in events
+            if ev["event"] == "recal_done"}
+    worst = 0.0
+    for t_start in range(0, len(td) - recal_latency):
+        t_done = t_start + recal_latency
+        for chip in range(len(td[0])):
+            if any((chip, tk) in done
+                   for tk in range(t_start + 2, t_done + 2)):
+                continue        # a repair landed on this chip this window
+            for j in range(len(td[t_start][chip])):
+                shift = abs(td[t_done][chip][j] - td[t_start][chip][j])
+                worst = max(worst, shift)
+    return worst
+
+
 def _fmt_event(ev: dict) -> str:
+    ten = f".t{ev['tenant']}" if ev.get("tenant") is not None else ""
     if ev["event"] == "alarm":
-        return (f"ALARM chip {ev['chip']}: probe distance "
+        return (f"ALARM chip {ev['chip']}{ten}: probe distance "
                 f"{ev['distance']:.4f} above threshold")
     if ev["event"] == "recal_start":
-        return f"RECAL chip {ev['chip']}: job scheduled (chip unroutable)"
-    return (f"RECAL chip {ev['chip']} done: distance "
+        return (f"RECAL chip {ev['chip']}{ten}: partial job scheduled "
+                f"(chip unroutable)")
+    return (f"RECAL chip {ev['chip']}{ten} done: distance "
             f"{ev['dist_before']:.4f} → {ev['dist_after']:.4f} "
             f"({ev['zo_steps']} ZO steps) [{ev['status']}]")
 
@@ -143,6 +236,9 @@ def main(argv=None) -> int:
     ap.add_argument("--sigma-drift", type=float, default=0.015)
     ap.add_argument("--probe-every", type=int, default=10)
     ap.add_argument("--zo-steps", type=int, default=400)
+    ap.add_argument("--tenants", type=int, default=1,
+                    help="mapped layers time-sharing each chip "
+                         "(per-layer Σ banks + partial recalibration)")
     ap.add_argument("--driver", default="twin",
                     choices=["twin", "subprocess"],
                     help="device transport: in-process twin or "
@@ -163,7 +259,7 @@ def main(argv=None) -> int:
                                  auto_budget=args.auto_budget,
                                  router_policy=args.policy)
     out = simulate(args.chips, args.steps, dim=args.dim, batch=args.batch,
-                   seed=args.seed, cfg=cfg,
+                   seed=args.seed, cfg=cfg, tenants=args.tenants,
                    recal_enabled=not args.no_recal, verbose=True)
     trace, report = out["trace"], out["report"]
 
@@ -179,7 +275,8 @@ def main(argv=None) -> int:
     recal_calls = sum(c["recal_ptc_calls"] for c in report["chips"])
     serve_calls = sum(c["serve_ptc_calls"] for c in report["chips"])
 
-    print(f"\n--- closed-loop summary ({args.driver} driver) ---")
+    print(f"\n--- closed-loop summary ({args.driver} driver, "
+          f"{args.tenants} tenant(s)/chip) ---")
     print(f"fidelity degraded under drift : peak distance {peak:.4f} "
           f"(alarm threshold {cfg.monitor.alarm_threshold})")
     print(f"alarms fired                  : {alarms} "
@@ -196,13 +293,36 @@ def main(argv=None) -> int:
         print(f"  chip {c['chip']}: {c['status']:<8} served={c['served']:4d} "
               f"d̂={c['distance']:.4f} alarms={c['alarms']} "
               f"recals={c['recals']}")
+        if args.tenants > 1:
+            for t in c["tenants"]:
+                print(f"    tenant {t['tenant']} blocks"
+                      f"{t['block_range']}: served={t['served']:4d} "
+                      f"d̂={t['distance']:.4f} alarms={t['alarms']} "
+                      f"recals={t['recals']}")
+
+    cotenants_ok = True
+    if args.tenants > 1 and not args.no_recal:
+        shifts = cotenant_shifts(trace, report["events"], cfg.recal_latency)
+        if shifts:
+            worst = max(abs(s["shift"]) for s in shifts)
+            # a partial recal must not cost co-tenants more than their
+            # own per-window drift scale (they were never touched)
+            noise = drift_noise_band(trace, report["events"],
+                                     cfg.recal_latency)
+            band = isolation_band(noise, cfg.monitor.clear_threshold)
+            cotenants_ok = worst <= band
+            print(f"partial-recal isolation       : {len(shifts)} co-tenant "
+                  f"windows, worst |Δd| {worst:.4f} "
+                  f"({'within' if cotenants_ok else 'OUTSIDE'} drift band "
+                  f"{band:.4f})")
 
     degraded = peak > cfg.monitor.alarm_threshold
     if args.no_recal:
         ok = degraded and served == args.steps
     else:
         ok = (degraded and alarms > 0 and recals > 0
-              and len(recovered) > 0 and served == args.steps)
+              and len(recovered) > 0 and served == args.steps
+              and cotenants_ok)
     return 0 if ok else 1
 
 

@@ -7,30 +7,48 @@ unhealthy devices, the scheduler/router idiom of LLM serving stacks
 (sglang-style: requests never block on maintenance work; recalibration
 runs out-of-band on a bounded number of "repair slots").
 
+Multi-tenancy: L2ight's premise is that one photonic tensor core is
+time-multiplexed across many mapped layers (Bandyopadhyay et al.
+demonstrate the multi-layer-on-one-chip shape in hardware).  Each
+:class:`Chip` therefore hosts a list of :class:`Tenant` slots — one
+mapped layer each, owning a contiguous block range and its Σ bank on
+the shared device plus its own :class:`HealthState`.  Health probes
+resolve per tenant from one shared probe stream, alarms are per
+tenant, and recalibration is *partial*: only the alarmed tenant's
+blocks are re-tuned (``recalibrate(..., block_range=...)``), so
+co-resident tenants' commanded phases and Σ banks stay bit-identical
+through a repair.  A single-tenant chip (one weight spanning every
+block) is the degenerate case and behaves exactly as before.
+
 Each :class:`Chip` holds a :class:`~repro.hw.driver.PhotonicDriver` —
 the router never touches device internals: it serves through
-``driver.forward_layer``, probes through the monitor's driver-based
-estimators, lets time pass with ``driver.advance``, and reads PTC-call
-budgets off ``driver.stats``.  Any transport (in-process twin,
-subprocess twin, real hardware) slots in unchanged.
+``driver.forward_layer`` (scoped to the dispatched tenant's block
+range), probes through the monitor's driver-based estimators, lets
+time pass with ``driver.advance``, and reads PTC-call budgets off
+``driver.stats``.  Any transport (in-process twin, subprocess twin,
+real hardware) slots in unchanged.
 
 Per-chip state machine (see ``runtime/__init__`` for the full DESIGN
 note)::
 
-    HEALTHY ──probe d̂ > alarm (×consecutive)──▶ DEGRADED
-    DEGRADED ──repair slot free──▶ RECALIBRATING   (not routable)
-    RECALIBRATING ──job done, probe d̂ < clear──▶ HEALTHY
-                 └─ probe still above clear ──▶ DEGRADED (re-queued)
+    HEALTHY ──tenant probe d̂ > alarm (×consecutive)──▶ DEGRADED
+    DEGRADED ──repair slot free──▶ RECALIBRATING   (not routable;
+                                    partial recal of the worst alarmed
+                                    tenant's blocks only)
+    RECALIBRATING ──job done, tenant probe d̂ < clear──▶ HEALTHY
+                 └─ probe still above clear, or another tenant
+                    alarmed ──▶ DEGRADED (re-queued)
 
 DEGRADED chips still serve (stale but functional — better than dropping
 traffic); RECALIBRATING chips are never dispatched to.  Routing policy:
 
 * ``"drift_aware"`` (default) — rank dispatch candidates by *predicted*
-  fidelity at dispatch time: the last probe estimate extrapolated along
-  the OU relaxation law (variance relaxes toward its stationary level
-  ``σ_φ²/2θ`` with rate ``2θ``, i.e. half-life ``ln2/2θ`` ticks), so a
-  chip probed long ago is charged its forecast drift, not its stale
-  estimate.  Ties break by least-served.
+  fidelity of the requested tenant at dispatch time: the tenant's last
+  probe estimate extrapolated along the OU relaxation law (variance
+  relaxes toward its stationary level ``σ_φ²/2θ`` with rate ``2θ``,
+  i.e. half-life ``ln2/2θ`` ticks), so a tenant probed long ago is
+  charged its forecast drift, not its stale estimate.  Ties break by
+  least-served.
 * ``"least_served"`` — the plain balancing baseline.
 """
 
@@ -38,9 +56,10 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from ..core.mapping import parallel_map
@@ -49,11 +68,11 @@ from ..core.ptc import blockize
 from ..hw import make_driver
 from ..hw.drift import DriftConfig, DEFAULT_DRIFT
 from .monitor import (MonitorConfig, HealthState, probe_mapping_distance,
-                      update_health, clear_health)
+                      probe_tenant_distances, update_health, clear_health)
 from .recalibrate import RecalConfig, recalibrate
 
 __all__ = ["HEALTHY", "DEGRADED", "RECALIBRATING", "RuntimeConfig",
-           "Chip", "FleetRouter", "make_chip", "make_fleet",
+           "Tenant", "Chip", "FleetRouter", "make_chip", "make_fleet",
            "predicted_distance"]
 
 HEALTHY = "healthy"
@@ -82,19 +101,39 @@ class RuntimeConfig:
 
 
 @dataclasses.dataclass
-class Chip:
-    """One virtual chip: a mapped weight behind its control-plane driver."""
+class Tenant:
+    """One mapped layer resident on a chip: a Σ bank + block range on
+    the shared device, with its own health/alarm state and counters."""
 
-    chip_id: int
+    tenant_id: int
     m: int
     n: int
-    w_blocks: jax.Array          # (B, k, k) mapping targets
-    driver: object               # PhotonicDriver (owns phi/sigma/clock/meter)
+    block_range: tuple[int, int]   # (start, stop) into the chip's blocks
+    w_blocks: jax.Array            # (b_t, k, k) mapping targets
     health: HealthState
+    last_probe_tick: int = 0       # when health.distance was last measured
+    # counters
+    served: int = 0
+    alarms: int = 0
+    recals: int = 0
+    recal_calls: float = 0.0       # PTC calls spent on this tenant's recals
+
+    @property
+    def n_blocks(self) -> int:
+        return self.block_range[1] - self.block_range[0]
+
+
+@dataclasses.dataclass
+class Chip:
+    """One virtual chip: tenant slots behind a control-plane driver."""
+
+    chip_id: int
+    driver: object               # PhotonicDriver (owns phi/sigma/clock/meter)
+    tenants: list[Tenant]
     status: str = HEALTHY
     recal_ticks_left: int = 0
-    last_probe_tick: int = 0     # when health.distance was last measured
-    # counters
+    recal_tenant: Optional[int] = None   # tenant the pending job re-tunes
+    # chip-level counters (tenant counters hold the breakdown)
     served: int = 0
     alarms: int = 0
     recals: int = 0
@@ -104,37 +143,110 @@ class Chip:
     def routable(self) -> bool:
         return self.status != RECALIBRATING
 
+    @property
+    def alarmed(self) -> bool:
+        return any(t.health.alarmed for t in self.tenants)
 
-def make_chip(key: jax.Array, chip_id: int, w: jax.Array,
-              cfg: RuntimeConfig, driver=None) -> Chip:
-    """Deploy ``w`` onto a fresh device: construct the chip's driver
-    (``cfg.driver_kind`` transport), PM it (commanded-SVD + OSP; Σ
-    absorbs most of the residual, the cheap large-model mode) — the
-    drift clock is the driver's own."""
-    m, n = int(w.shape[0]), int(w.shape[1])
-    b = (-(-m // cfg.k)) * (-(-n // cfg.k))
+    # -- single-tenant compatibility surface ---------------------------------
+    # A chip made from one weight has exactly one tenant spanning every
+    # block; these views keep the pre-tenant API working unchanged.
+
+    @property
+    def m(self) -> int:
+        return self.tenants[0].m
+
+    @property
+    def n(self) -> int:
+        return self.tenants[0].n
+
+    @property
+    def w_blocks(self) -> jax.Array:
+        if len(self.tenants) == 1:
+            return self.tenants[0].w_blocks
+        return jnp.concatenate([t.w_blocks for t in self.tenants], axis=0)
+
+    @property
+    def health(self) -> HealthState:
+        return self.tenants[0].health
+
+    @health.setter
+    def health(self, h: HealthState) -> None:
+        self.tenants[0].health = h
+
+    @property
+    def last_probe_tick(self) -> int:
+        return self.tenants[0].last_probe_tick
+
+    @last_probe_tick.setter
+    def last_probe_tick(self, tick: int) -> None:
+        self.tenants[0].last_probe_tick = tick
+
+
+def _tenant_layout(weights: Sequence[jax.Array], k: int
+                   ) -> list[tuple[int, int, tuple[int, int]]]:
+    """(m, n, block_range) per tenant, packed contiguously in order."""
+    out = []
+    offset = 0
+    for w in weights:
+        m, n = int(w.shape[0]), int(w.shape[1])
+        b = (-(-m // k)) * (-(-n // k))
+        out.append((m, n, (offset, offset + b)))
+        offset += b
+    return out
+
+
+def make_chip(key: jax.Array, chip_id: int, w, cfg: RuntimeConfig,
+              driver=None) -> Chip:
+    """Deploy weight(s) onto a fresh device.
+
+    ``w`` is either one (M, N) array — a single-tenant chip, identical
+    to the historical behavior — or a sequence of arrays, one mapped
+    layer per tenant, packed into contiguous block ranges of one shared
+    device.  Constructs the chip's driver (``cfg.driver_kind``
+    transport) sized for the total block count, then PMs each tenant
+    onto its range (commanded-SVD + OSP; Σ absorbs most of the
+    residual, the cheap large-model mode) — the drift clock is the
+    driver's own.
+    """
+    weights = list(w) if isinstance(w, (list, tuple)) else [w]
+    layout = _tenant_layout(weights, cfg.k)
+    total_blocks = layout[-1][2][1]
+    single = len(weights) == 1
     kd, kpm = jax.random.split(key)
     if driver is None:
-        driver = make_driver(cfg.driver_kind, kd, b, cfg.k, cfg.noise,
-                             cfg.kind, m=m, n=n, drift=cfg.drift)
-    pm = parallel_map(kpm, w, cfg.k, cfg.noise, kind=cfg.kind,
-                      run_zo=False, driver=driver)
-    w_blocks = blockize(w, cfg.k).reshape(b, cfg.k, cfg.k)
-    health = HealthState(distance=float(np.asarray(pm.err_osp).mean()))
-    return Chip(chip_id=chip_id, m=m, n=n, w_blocks=w_blocks,
-                driver=driver, health=health)
+        m0, n0 = layout[0][0], layout[0][1]
+        driver = make_driver(cfg.driver_kind, kd, total_blocks, cfg.k,
+                             cfg.noise, cfg.kind, m=m0, n=n0,
+                             drift=cfg.drift)
+    tenants = []
+    for i, (wi, (m, n, rng)) in enumerate(zip(weights, layout)):
+        kt = kpm if i == 0 else jax.random.fold_in(kpm, i)
+        pm = parallel_map(kt, wi, cfg.k, cfg.noise, kind=cfg.kind,
+                          run_zo=False, driver=driver,
+                          block_range=None if single else rng)
+        b = rng[1] - rng[0]
+        w_blocks = blockize(wi, cfg.k).reshape(b, cfg.k, cfg.k)
+        health = HealthState(distance=float(np.asarray(pm.err_osp).mean()))
+        tenants.append(Tenant(tenant_id=i, m=m, n=n, block_range=rng,
+                              w_blocks=w_blocks, health=health))
+    return Chip(chip_id=chip_id, driver=driver, tenants=tenants)
 
 
-def make_fleet(key: jax.Array, n_chips: int, w: jax.Array,
+def make_fleet(key: jax.Array, n_chips: int, w,
                cfg: RuntimeConfig) -> list[Chip]:
-    """N chips serving the same logical weight, each with an independent
-    realization (different manufacturing draw + drift path)."""
+    """N chips serving the same logical weight(s), each with an
+    independent realization (different manufacturing draw + drift
+    path).  ``w`` may be a list of weights — every chip then hosts the
+    same tenant layout."""
     keys = jax.random.split(key, n_chips)
     return [make_chip(keys[i], i, w, cfg) for i in range(n_chips)]
 
 
-def predicted_distance(chip: Chip, now: int, drift: DriftConfig) -> float:
-    """Forecast of a chip's mapping distance at tick ``now``.
+def predicted_distance(chip: Chip, now: int, drift: DriftConfig,
+                       tenant: Optional[Tenant] = None) -> float:
+    """Forecast of a tenant's mapping distance at tick ``now``
+    (defaults to the chip's first tenant — the whole chip when
+    single-tenant).
 
     Small-angle, the distance tracks the phase-error variance, whose OU
     law relaxes toward the stationary level ``σ_φ²/2θ`` with rate
@@ -147,10 +259,11 @@ def predicted_distance(chip: Chip, now: int, drift: DriftConfig) -> float:
     monotone in both the estimate and its staleness — exactly what a
     dispatch *ranking* needs.
     """
-    dt = max(0, now - chip.last_probe_tick)
+    t = tenant if tenant is not None else chip.tenants[0]
+    dt = max(0, now - t.last_probe_tick)
     d_inf = drift.sigma_phase ** 2 / (2.0 * drift.theta + 1e-12)
     decay = math.exp(-2.0 * drift.theta * dt)
-    return d_inf + (chip.health.distance - d_inf) * decay
+    return d_inf + (t.health.distance - d_inf) * decay
 
 
 class FleetRouter:
@@ -159,8 +272,8 @@ class FleetRouter:
     The router owns virtual time: one :meth:`tick` = one scheduling
     quantum (every chip's driver advances its clock, due health checks
     run, repair jobs count down / complete).  ``dispatch``/``serve``
-    picks a chip for one batch; RECALIBRATING chips are structurally
-    unroutable.
+    picks a chip for one batch of one tenant's traffic; RECALIBRATING
+    chips are structurally unroutable.
     """
 
     def __init__(self, chips: list[Chip], cfg: RuntimeConfig,
@@ -183,31 +296,40 @@ class FleetRouter:
 
     # -- routing ------------------------------------------------------------
 
-    def dispatch(self) -> Optional[Chip]:
-        """Pick a routable chip, preferring HEALTHY; rank within the pool
-        by the configured policy (predicted fidelity decay or plain
-        least-served)."""
+    def dispatch(self, tenant: int = 0) -> Optional[Chip]:
+        """Pick a routable chip for ``tenant``'s traffic, preferring
+        HEALTHY; rank within the pool by the configured policy
+        (predicted per-tenant fidelity decay or plain least-served)."""
         for pool in (HEALTHY, DEGRADED):
-            cands = [c for c in self.chips if c.status == pool]
+            cands = [c for c in self.chips
+                     if c.status == pool and tenant < len(c.tenants)]
             if not cands:
                 continue
             if self.cfg.router_policy == "drift_aware":
                 return min(cands, key=lambda c: (
-                    predicted_distance(c, self.tick_count, self.cfg.drift),
-                    c.served, c.chip_id))
-            return min(cands, key=lambda c: c.served)
+                    predicted_distance(c, self.tick_count, self.cfg.drift,
+                                       c.tenants[tenant]),
+                    c.tenants[tenant].served, c.served, c.chip_id))
+            return min(cands, key=lambda c: (c.tenants[tenant].served,
+                                             c.served, c.chip_id))
         return None
 
-    def serve(self, x: jax.Array) -> tuple[Optional[jax.Array], Optional[int]]:
-        """Route one batch ``x`` (..., n) through a chip's realized
-        (drifted!) transfer function.  Returns (y, chip_id); (None, None)
-        if every chip is mid-recalibration (counted as ``dropped``)."""
-        chip = self.dispatch()
+    def serve(self, x: jax.Array, tenant: int = 0
+              ) -> tuple[Optional[jax.Array], Optional[int]]:
+        """Route one batch ``x`` (..., n_t) of ``tenant``'s traffic
+        through a chip's realized (drifted!) transfer function, scoped
+        to that tenant's block range.  Returns (y, chip_id);
+        (None, None) if every chip is mid-recalibration (counted as
+        ``dropped``)."""
+        chip = self.dispatch(tenant)
         if chip is None:
             self.dropped += 1
             return None, None
-        y = chip.driver.forward_layer(x)
+        t = chip.tenants[tenant]
+        y = chip.driver.forward_layer(x, block_range=t.block_range,
+                                      out_dim=t.m)
         chip.served += 1
+        t.served += 1
         return y, chip.chip_id
 
     # -- the closed loop ----------------------------------------------------
@@ -233,55 +355,84 @@ class FleetRouter:
             if self.tick_count % cfg.probe_every == 0:
                 self._probe(chip)
 
-            if (chip.health.alarmed and self.recal_enabled
+            if (chip.alarmed and self.recal_enabled
                     and in_repair < cfg.max_concurrent_recals):
+                # repair the worst alarmed tenant; others re-queue after
+                alarmed = [t for t in chip.tenants if t.health.alarmed]
+                worst = max(alarmed, key=lambda t: t.health.distance)
                 chip.status = RECALIBRATING
+                chip.recal_tenant = worst.tenant_id
                 chip.recal_ticks_left = cfg.recal_latency
                 in_repair += 1
-                self.events.append(dict(tick=self.tick_count, event="recal_start",
-                                        chip=chip.chip_id))
+                self.events.append(dict(tick=self.tick_count,
+                                        event="recal_start",
+                                        chip=chip.chip_id,
+                                        tenant=worst.tenant_id))
 
     def _probe(self, chip: Chip) -> None:
+        """One shared probe stream, scored per tenant (B·n_probes PTC
+        calls total — same light as a whole-chip check)."""
         cfg = self.cfg
-        est = probe_mapping_distance(self._next_key(), chip.driver,
-                                     chip.w_blocks, cfg.monitor.n_probes)
-        was_alarmed = chip.health.alarmed
-        chip.health = update_health(chip.health, float(est), cfg.monitor)
-        chip.last_probe_tick = self.tick_count
-        if chip.health.alarmed and not was_alarmed:
-            chip.alarms += 1
-            chip.status = DEGRADED
-            self.events.append(dict(tick=self.tick_count, event="alarm",
-                                    chip=chip.chip_id,
-                                    distance=chip.health.distance))
+        ests = probe_tenant_distances(
+            self._next_key(), chip.driver,
+            [(t.block_range, t.w_blocks) for t in chip.tenants],
+            cfg.monitor.n_probes)
+        for ten, est in zip(chip.tenants, ests):
+            was_alarmed = ten.health.alarmed
+            ten.health = update_health(ten.health, float(est), cfg.monitor)
+            ten.last_probe_tick = self.tick_count
+            if ten.health.alarmed and not was_alarmed:
+                ten.alarms += 1
+                chip.alarms += 1
+                chip.status = DEGRADED
+                self.events.append(dict(tick=self.tick_count, event="alarm",
+                                        chip=chip.chip_id,
+                                        tenant=ten.tenant_id,
+                                        distance=ten.health.distance))
 
     def _finish_recal(self, chip: Chip) -> None:
-        """The out-of-band job lands: run it against the chip's current
-        (post-latency) drifted state and re-probe to clear."""
+        """The out-of-band job lands: partial recalibration of the
+        alarmed tenant's block range against the chip's current
+        (post-latency) drifted state, then a scoped re-probe to clear.
+        Co-resident tenants' commanded state is untouched."""
         cfg = self.cfg
-        res = recalibrate(self._next_key(), chip.driver, chip.w_blocks,
-                          cfg.recal, dist_hint=chip.health.distance)
+        ten = chip.tenants[chip.recal_tenant or 0]
+        res = recalibrate(self._next_key(), chip.driver, ten.w_blocks,
+                          cfg.recal, dist_hint=ten.health.distance,
+                          block_range=ten.block_range)
+        ten.recals += 1
         chip.recals += 1
+        ten.recal_calls += res.ptc_calls
         chip.recal_calls += res.ptc_calls
         est = probe_mapping_distance(self._next_key(), chip.driver,
-                                     chip.w_blocks, cfg.monitor.n_probes)
-        chip.health = clear_health(chip.health, float(est), cfg.monitor)
-        chip.last_probe_tick = self.tick_count
-        chip.status = HEALTHY if not chip.health.alarmed else DEGRADED
+                                     ten.w_blocks, cfg.monitor.n_probes,
+                                     block_range=ten.block_range)
+        ten.health = clear_health(ten.health, float(est), cfg.monitor)
+        ten.last_probe_tick = self.tick_count
+        chip.status = HEALTHY if not chip.alarmed else DEGRADED
         self.events.append(dict(
             tick=self.tick_count, event="recal_done", chip=chip.chip_id,
+            tenant=ten.tenant_id,
             dist_before=float(res.dist_before),
             dist_after=float(res.dist_after), zo_steps=res.zo_steps,
             status=chip.status))
+        chip.recal_tenant = None
 
     # -- reporting ----------------------------------------------------------
 
     def true_distances(self) -> list[float]:
-        """Exact per-chip mapping distances — a twin-only readout routed
-        through the audited ``driver.unsafe_twin()`` escape hatch
-        (benchmark/diagnostic use; raises TwinUnavailable on real HW)."""
+        """Exact per-chip mapping distances (all tenants aggregated) — a
+        twin-only readout routed through the audited
+        ``driver.unsafe_twin()`` escape hatch (benchmark/diagnostic use;
+        raises TwinUnavailable on real HW)."""
         return [c.driver.unsafe_twin().true_mapping_distance(c.w_blocks)
                 for c in self.chips]
+
+    def true_tenant_distances(self) -> list[list[float]]:
+        """Exact per-(chip, tenant) mapping distances — twin-only, same
+        escape hatch as :meth:`true_distances`."""
+        return [[c.driver.unsafe_twin().true_mapping_distance(t.w_blocks, t.block_range)
+                 for t in c.tenants] for c in self.chips]
 
     def report(self) -> dict:
         chips = []
@@ -290,17 +441,38 @@ class FleetRouter:
             # everything the driver metered that is neither serve traffic
             # nor a recal job's delta is monitor probing (incl. the PM
             # deployment readout)
-            chips.append(dict(chip=c.chip_id, status=c.status,
-                              served=c.served, distance=c.health.distance,
-                              alarms=c.alarms, recals=c.recals,
-                              probe_ptc_calls=s.total - s.serve - c.recal_calls,
-                              recal_ptc_calls=c.recal_calls,
-                              serve_ptc_calls=s.serve,
-                              ptc_calls=s.as_dict()))
+            chips.append(dict(
+                chip=c.chip_id, status=c.status,
+                served=c.served,
+                distance=max(t.health.distance for t in c.tenants),
+                alarms=c.alarms, recals=c.recals,
+                probe_ptc_calls=s.total - s.serve - c.recal_calls,
+                recal_ptc_calls=c.recal_calls,
+                serve_ptc_calls=s.serve,
+                ptc_calls=s.as_dict(),
+                tenants=[dict(tenant=t.tenant_id,
+                              block_range=list(t.block_range),
+                              m=t.m, n=t.n, served=t.served,
+                              distance=t.health.distance,
+                              alarmed=t.health.alarmed,
+                              alarms=t.alarms, recals=t.recals,
+                              recal_ptc_calls=t.recal_calls)
+                         for t in c.tenants]))
         return dict(ticks=self.tick_count, dropped=self.dropped,
                     chips=chips, events=self.events)
 
     def close(self) -> None:
-        """Release every chip's driver transport (subprocess servers)."""
+        """Release every chip's driver transport (subprocess servers).
+
+        Every handle is closed even if one raises — chips parked
+        mid-recalibration (or whose transport errors on shutdown) must
+        not leak their server processes; failures are collected and
+        re-raised once all handles have been attempted."""
+        errors = []
         for c in self.chips:
-            c.driver.close()
+            try:
+                c.driver.close()
+            except Exception as e:  # noqa: BLE001 - collect, close the rest
+                errors.append(f"chip {c.chip_id}: {e!r}")
+        if errors:
+            raise RuntimeError("fleet close failed for " + "; ".join(errors))

@@ -17,6 +17,14 @@ in the post-IC identity state are probed the same way against ``Ĩ`` via
 :func:`probe_identity_distance`, which reduces to
 ``calibration.identity_mse`` at full readout.
 
+On a multi-tenant chip (several mapped layers time-sharing one block
+batch) the same probe stream is scored per tenant:
+:func:`probe_tenant_distances` streams one set of Gaussian columns
+through the whole chip and slices the response per tenant block range,
+so per-tenant health costs no more light than whole-chip health.  Each
+tenant then owns its own :class:`HealthState` and its own hysteretic
+alarm — one drifted layer never masks (or falsely trips) another.
+
 Alarm logic is hysteretic: ``consecutive`` probe estimates above
 ``alarm_threshold`` raise the alarm (one noisy estimate never trips
 it); after recalibration the alarm clears only once a fresh probe falls
@@ -40,8 +48,9 @@ from ..core.calibration import identity_mse
 from ..hw.driver import readout_blocks
 
 __all__ = ["MonitorConfig", "HealthState", "aggregate_distance",
-           "probe_mapping_distance", "readout_mapping_distance",
-           "probe_identity_distance", "update_health", "clear_health"]
+           "probe_mapping_distance", "probe_tenant_distances",
+           "readout_mapping_distance", "probe_identity_distance",
+           "update_health", "clear_health"]
 
 
 class MonitorConfig(NamedTuple):
@@ -70,22 +79,54 @@ def aggregate_distance(w_hat: jax.Array, w_blocks: jax.Array) -> jax.Array:
 
 
 def probe_mapping_distance(key: jax.Array, driver, w_blocks: jax.Array,
-                           n_probes: int) -> jax.Array:
+                           n_probes: int,
+                           block_range: tuple[int, int] | None = None
+                           ) -> jax.Array:
     """Stochastic estimate of the aggregate mapping distance from
-    ``n_probes`` Gaussian forward probes (shared across blocks)."""
+    ``n_probes`` Gaussian forward probes (shared across blocks).
+    ``block_range`` scopes the probe to one tenant's blocks (``w_blocks``
+    then carries that tenant's targets only)."""
     k = w_blocks.shape[-1]
     x = jax.random.normal(key, (n_probes, k))
-    y_hat = driver.forward(x, category="probe")            # (B, n, k)
+    y_hat = driver.forward(x, category="probe",
+                           block_range=block_range)      # (B, n, k)
     y_ref = jnp.einsum("bij,nj->bni", w_blocks, x)
     num = jnp.sum((y_hat - y_ref) ** 2)
     den = jnp.sum(y_ref ** 2) + 1e-12
     return num / den
 
 
-def readout_mapping_distance(driver, w_blocks: jax.Array) -> jax.Array:
+def probe_tenant_distances(key: jax.Array, driver,
+                           tenants: "list[tuple[tuple[int, int], jax.Array]]",
+                           n_probes: int) -> list[jax.Array]:
+    """Per-tenant distance estimates from ONE shared probe stream.
+
+    ``tenants`` is a list of ``(block_range, w_blocks)`` specs.  The same
+    ``n_probes`` Gaussian columns stream through the whole chip once
+    (B·n PTC calls — no cheaper way to cover every tenant), and each
+    tenant's estimate is scored against its own targets over its own
+    block slice, so a fleet health check costs the same as the old
+    whole-chip probe while yielding per-tenant resolution.
+    """
+    k = driver.k
+    x = jax.random.normal(key, (n_probes, k))
+    y_hat = driver.forward(x, category="probe")            # (B, n, k)
+    out = []
+    for (start, stop), w_blocks in tenants:
+        y_ref = jnp.einsum("bij,nj->bni", w_blocks, x)
+        num = jnp.sum((y_hat[start:stop] - y_ref) ** 2)
+        out.append(num / (jnp.sum(y_ref ** 2) + 1e-12))
+    return out
+
+
+def readout_mapping_distance(driver, w_blocks: jax.Array,
+                             block_range: tuple[int, int] | None = None
+                             ) -> jax.Array:
     """Exact aggregate distance from a full Ŵ readout: k unit-vector
     probe columns per block (observability-legal, costs B·k calls)."""
-    return aggregate_distance(readout_blocks(driver), w_blocks)
+    return aggregate_distance(readout_blocks(driver,
+                                             block_range=block_range),
+                              w_blocks)
 
 
 def probe_identity_distance(key: jax.Array, driver,

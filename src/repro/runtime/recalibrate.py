@@ -27,6 +27,15 @@ recovery is ~flat in ZO steps beyond a warm-start-dependent knee, so a
 mild excursion gets a short job and only deep drift pays the full
 default budget (:func:`autotune_zo_steps`).
 
+On a multi-tenant chip, pass ``block_range`` for *partial*
+recalibration: the warm ZO job, the OSP readback, and the Σ write are
+all scoped to the alarmed tenant's blocks (the power-aware sparse-ZO
+motivation — re-tune only what drifted past tolerance), and
+co-resident tenants' commanded phases and Σ banks are bit-identical
+before and after the job.  The budget autotunes from *that tenant's*
+probe distance, and the PTC bill scales with the tenant's block count,
+not the chip's.
+
 Every device interaction goes through the
 :class:`~repro.hw.driver.PhotonicDriver` boundary; the job's probe
 budget is the driver's metered PTC-call delta.
@@ -92,7 +101,8 @@ def autotune_zo_steps(dist: float, cfg: RecalConfig, n_rot: int) -> int:
 
 def recalibrate(key: jax.Array, driver, w_blocks: jax.Array,
                 cfg: RecalConfig = RecalConfig(),
-                dist_hint: Optional[float] = None) -> RecalResult:
+                dist_hint: Optional[float] = None,
+                block_range: Optional[tuple[int, int]] = None) -> RecalResult:
     """Refresh the driver's commanded ``(phi, sigma)`` against its
     drifted device.
 
@@ -100,9 +110,13 @@ def recalibrate(key: jax.Array, driver, w_blocks: jax.Array,
     frozen for the duration of the job (recal is fast vs. drift).
     ``dist_hint``: the monitor's probe estimate at alarm time, used by
     budget autotuning (defaults to a fresh full readout).
+    ``block_range``: partial recalibration — scope every stage to the
+    alarmed tenant's ``(start, stop)`` block slice (``w_blocks`` then
+    carries that tenant's targets); all other blocks' commanded state
+    stays bit-identical.
     """
     k = driver.k
-    b = driver.n_blocks
+    b = w_blocks.shape[0]
     t = un.mesh_spec(k, driver.kind).n_rot
     calls0 = driver.stats.total
 
@@ -111,7 +125,8 @@ def recalibrate(key: jax.Array, driver, w_blocks: jax.Array,
     if dist_hint is not None:
         dist_before = jnp.asarray(float(dist_hint), jnp.float32)
     else:
-        dist_before = readout_mapping_distance(driver, w_blocks)
+        dist_before = readout_mapping_distance(driver, w_blocks,
+                                               block_range=block_range)
 
     steps = cfg.zo_steps
     if cfg.auto_budget:
@@ -122,11 +137,14 @@ def recalibrate(key: jax.Array, driver, w_blocks: jax.Array,
     zo_cfg = ZOConfig(steps=steps, inner=cfg.inner or 2 * t,
                       delta0=cfg.delta0, decay=cfg.decay)
     kz, ks = jax.random.split(key)
-    res = driver.zo_refine(w_blocks, kz, zo_cfg, method=cfg.method)
+    res = driver.zo_refine(w_blocks, kz, zo_cfg, method=cfg.method,
+                           block_range=block_range)
     phi_new = res.phi
 
     sigma = driver.read_sigma()
-    u, v = driver.readback_bases()
+    if block_range is not None:
+        sigma = sigma[block_range[0]:block_range[1]]
+    u, v = driver.readback_bases(block_range=block_range)
     dist_after_zo = aggregate_distance((u * sigma[..., None, :]) @ v,
                                        w_blocks)
 
@@ -151,7 +169,7 @@ def recalibrate(key: jax.Array, driver, w_blocks: jax.Array,
             sl_step, sigma_new, jax.random.split(ks, cfg.sl_steps))
         driver.charge("probe", float(cfg.sl_steps * cfg.sl_probes * b * 2))
 
-    driver.write_sigma(sigma_new)
+    driver.write_sigma(sigma_new, block_range=block_range)
     dist_after = aggregate_distance(
         (u * sigma_new[..., None, :]) @ v, w_blocks)
     return RecalResult(phi=phi_new, sigma=sigma_new,

@@ -4,10 +4,12 @@ Parametrized over the two shipped transports (in-process ``TwinDriver``
 and JSON-over-pipe ``SubprocessDriver``): a scripted control-plane
 session must produce *bit-identical* results on both — same physics,
 same seeds, same backend — and the PTC-call meter must charge exactly
-the Appendix-G costs.  Plus the guard test: control-plane modules
-(``repro.runtime``, ``core.calibration``, ``core.mapping``) must never
-touch twin internals except through the audited ``unsafe_twin()``
-escape hatch.
+the Appendix-G costs.  The tenant-addressable session exercises every
+``block_range``-scoped op (v2 protocol surface) the same way, including
+scoped-write/whole-read consistency.  Plus the guard test: control-plane
+modules (``repro.runtime``, ``core.calibration``, ``core.mapping``)
+must never touch twin internals except through the audited
+``unsafe_twin()`` escape hatch.
 """
 
 import re
@@ -101,6 +103,131 @@ def test_scripted_session_matches_reference_twin(transport):
                                       np.asarray(got[name]), err_msg=name)
     assert got["true_d"] == ref["true_d"]
     assert got["stats"] == ref["stats"]
+
+
+def _tenant_session(driver) -> dict:
+    """A scripted MULTI-TENANT control-plane session: two tenants on one
+    chip (blocks [0, 4) and [4, 6) when B=6... here B=4 → [0, 3)/[3, 4)),
+    exercising every block_range-scoped op of the v2 surface."""
+    rng = np.random.default_rng(11)
+    t = driver.read_phases()[0].shape[-1]
+    br0, br1 = (0, 3), (3, B)
+    b0, b1 = 3, B - 3
+    out = {}
+    # scoped writes: tenant 0 then tenant 1, different states
+    driver.write_signs(
+        jnp.asarray(rng.choice([-1.0, 1.0], (b0, K)), jnp.float32),
+        jnp.asarray(rng.choice([-1.0, 1.0], (b0, K)), jnp.float32),
+        block_range=br0)
+    driver.write_phases(
+        jnp.asarray(rng.uniform(0, 1, (b0, t)), jnp.float32),
+        jnp.asarray(rng.uniform(0, 1, (b0, t)), jnp.float32),
+        block_range=br0)
+    driver.write_sigma(
+        jnp.asarray(rng.uniform(0.5, 1.5, (b0, K)), jnp.float32),
+        block_range=br0)
+    driver.write_phases(
+        jnp.asarray(rng.uniform(0, 1, (b1, t)), jnp.float32),
+        jnp.asarray(rng.uniform(0, 1, (b1, t)), jnp.float32),
+        block_range=br1)
+    driver.write_sigma(
+        jnp.asarray(rng.uniform(0.5, 1.5, (b1, K)), jnp.float32),
+        block_range=br1)
+    # whole-chip reads see the per-tenant writes landed in place
+    out["phi_u"], out["phi_v"] = driver.read_phases()
+    out["sigma"] = driver.read_sigma()
+    # scoped probes + scoped serve path
+    x = jnp.asarray(rng.standard_normal((4, K)), jnp.float32)
+    out["fwd0"] = driver.forward(x, block_range=br0)
+    out["fwd1"] = driver.forward(x, block_range=br1)
+    xl = jnp.asarray(rng.standard_normal((2, b1 * K)), jnp.float32)
+    out["layer1"] = driver.forward_layer(xl, block_range=br1, out_dim=K)
+    # scoped in-situ job (the partial-recal primitive): tenant 0 only
+    w0 = jnp.asarray(rng.standard_normal((b0, K, K)) * 0.4, jnp.float32)
+    res = driver.zo_refine(w0, jax.random.PRNGKey(5),
+                           ZOConfig(steps=20, inner=12, delta0=0.1,
+                                    decay=1.05), block_range=br0)
+    out["zo_phi"] = res.phi
+    out["u1"], out["v1"] = driver.readback_bases(block_range=br1)
+    out["u0_cols"], _ = driver.readback_bases(cols=[0, 2], block_range=br0)
+    for _ in range(4):
+        driver.advance(1.0)
+    out["fwd0_drifted"] = driver.forward(x, block_range=br0)
+    out["true0"] = driver.unsafe_twin().true_mapping_distance(w0, br0)
+    out["stats"] = driver.stats.as_dict()
+    return out
+
+
+@pytest.mark.parametrize("transport", TRANSPORTS)
+def test_tenant_session_matches_reference_twin(transport):
+    """Every tenant-scoped op is bit-identical across transports (the
+    v2 wire protocol forwards block ranges losslessly)."""
+    driver = _mk(transport)
+    try:
+        got = _tenant_session(driver)
+    finally:
+        driver.close()
+    ref = _tenant_session(_reference_twin())
+    for name in ("phi_u", "phi_v", "sigma", "fwd0", "fwd1", "layer1",
+                 "zo_phi", "u1", "v1", "u0_cols", "fwd0_drifted"):
+        np.testing.assert_array_equal(np.asarray(ref[name]),
+                                      np.asarray(got[name]), err_msg=name)
+    assert got["true0"] == ref["true0"]
+    assert got["stats"] == ref["stats"]
+
+
+@pytest.mark.parametrize("transport", TRANSPORTS)
+def test_tenant_scoped_ptc_accounting(transport):
+    """Scoped ops charge for the tenant's block count, not the chip's."""
+    driver = _mk(transport)
+    try:
+        driver.reset_stats()
+        driver.forward(jnp.ones((5, K)), block_range=(0, 3))
+        assert driver.stats.probe == 3 * 5
+        driver.readback_bases(block_range=(3, B))
+        assert driver.stats.readback == 2 * (B - 3) * K
+        driver.forward_layer(jnp.ones((7, K)), block_range=(3, B),
+                             out_dim=K)
+        assert driver.stats.serve == (B - 3) * 7
+        steps = 5
+        driver.zo_refine(_blocks()[:3], jax.random.PRNGKey(0),
+                         ZOConfig(steps=steps, inner=6, delta0=0.1,
+                                  decay=1.05), block_range=(0, 3))
+        assert driver.stats.search == steps * 2 * 3 * K
+    finally:
+        driver.close()
+
+
+@pytest.mark.parametrize("transport", TRANSPORTS)
+def test_block_range_bounds_rejected(transport):
+    """Out-of-bounds tenant ranges are a hard error on every transport."""
+    driver = _mk(transport)
+    try:
+        for bad in ((0, B + 1), (-1, 2), (2, 2), (3, 1)):
+            with pytest.raises((ValueError, RuntimeError)):
+                driver.forward(jnp.ones((2, K)), block_range=bad)
+    finally:
+        driver.close()
+
+
+def test_protocol_version_handshake_rejects_mismatch():
+    """A v1 client (no / wrong version field) is refused by the v2
+    server — no silent fallback onto a surface it would misread."""
+    import io
+    from repro.hw.protocol import encode, PROTOCOL_VERSION
+    from repro.hw.server import serve
+
+    assert PROTOCOL_VERSION == 2
+    req = {"id": 1, "op": "init", "kw": encode(dict(
+        v=1, key=np.zeros(2, np.uint32), n_blocks=B, k=K,
+        model=dict(), drift=None))}
+    import json as _json
+    fin = io.StringIO(_json.dumps(req) + "\n")
+    fout = io.StringIO()
+    serve(fin, fout)
+    resp = _json.loads(fout.getvalue().splitlines()[0])
+    assert resp["ok"] is False
+    assert "protocol mismatch" in resp["error"]
 
 
 @pytest.mark.parametrize("transport", TRANSPORTS)

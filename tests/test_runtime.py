@@ -316,6 +316,126 @@ def test_router_prefers_healthy_and_balances_load():
     assert abs(chips[1].served - chips[2].served) <= 1
 
 
+def test_multi_tenant_chip_layout_and_compat_views():
+    """Tenants pack contiguous block ranges of one shared device; the
+    single-tenant compatibility views (w_blocks/health) keep working."""
+    cfg = _small_cfg()
+    ws = [_weight(30), _weight(31)[:4]]          # (8,8) + (4,8) layers
+    chip = make_chip(jax.random.PRNGKey(30), 0, ws, cfg)
+    t0, t1 = chip.tenants
+    assert t0.block_range == (0, 4) and t1.block_range == (4, 6)
+    assert chip.driver.n_blocks == 6
+    assert (t0.m, t0.n) == (8, 8) and (t1.m, t1.n) == (4, 8)
+    # aggregate view concatenates tenant targets in block order
+    np.testing.assert_array_equal(
+        np.asarray(chip.w_blocks),
+        np.concatenate([np.asarray(t0.w_blocks), np.asarray(t1.w_blocks)]))
+    assert chip.health is t0.health
+    # single-tenant construction is the degenerate case
+    solo = make_chip(jax.random.PRNGKey(31), 1, _weight(31), cfg)
+    assert len(solo.tenants) == 1
+    assert solo.tenants[0].block_range == (0, solo.driver.n_blocks)
+
+
+def test_multi_tenant_serve_routes_block_range():
+    """serve(tenant=j) forwards through tenant j's sub-grid only: the
+    output matches the tenant's logical weight (to mapping error), and
+    per-tenant served counters account the traffic."""
+    cfg = _small_cfg()
+    ws = [_weight(32), _weight(33)]
+    chips = make_fleet(jax.random.PRNGKey(32), 2, ws, cfg)
+    router = FleetRouter(chips, cfg, seed=5)
+    x = jnp.asarray(np.random.default_rng(3).standard_normal((4, DIM)),
+                    jnp.float32)
+    for j, w in enumerate(ws):
+        y, cid = router.serve(x, tenant=j)
+        assert cid is not None
+        y_ref = x @ w.T
+        err = float(jnp.sum((y - y_ref) ** 2) / jnp.sum(y_ref ** 2))
+        assert err < 0.05, (j, err)
+    assert sum(c.tenants[0].served for c in chips) == 1
+    assert sum(c.tenants[1].served for c in chips) == 1
+    assert sum(c.served for c in chips) == 2
+
+
+def test_multi_tenant_closed_loop_partial_recal():
+    """Closed loop over a 2-tenant fleet: alarms and recals are
+    per-tenant, repairs recover the alarmed tenant, and throughput
+    holds (N−1 chips keep serving)."""
+    cfg = _small_cfg()
+    chips = make_fleet(jax.random.PRNGKey(34), 3, [_weight(34), _weight(35)],
+                       cfg)
+    router = FleetRouter(chips, cfg, seed=6)
+    for t in range(1, 81):
+        y, cid = router.serve(jnp.ones((2, DIM)), tenant=(t - 1) % 2)
+        if cid is not None:
+            assert chips[cid].status != RECALIBRATING
+        router.tick()
+    rep = router.report()
+    assert rep["dropped"] == 0
+    assert sum(c["alarms"] for c in rep["chips"]) > 0
+    done = [e for e in rep["events"] if e["event"] == "recal_done"]
+    assert done
+    assert all("tenant" in e for e in done)
+    assert all(e["dist_after"] < cfg.monitor.alarm_threshold for e in done)
+    # tenant counters carry the breakdown the chip counters aggregate
+    for c in rep["chips"]:
+        assert sum(t["recals"] for t in c["tenants"]) == c["recals"]
+        assert sum(t["alarms"] for t in c["tenants"]) == c["alarms"]
+        assert sum(t["served"] for t in c["tenants"]) == c["served"]
+
+
+def test_fleet_close_survives_failing_driver_and_mid_recal():
+    """close() releases EVERY driver handle — chips parked
+    mid-recalibration included — even when an earlier handle's close
+    raises (the failure is re-raised after all handles are attempted)."""
+    cfg = _small_cfg()
+    chips = make_fleet(jax.random.PRNGKey(36), 3, _weight(36), cfg)
+    router = FleetRouter(chips, cfg, seed=7)
+    chips[1].status = RECALIBRATING        # mid-repair at shutdown
+    closed = []
+
+    class _Boom:
+        def __init__(self, inner, i):
+            self._inner, self._i = inner, i
+
+        def close(self):
+            if self._i == 0:
+                raise OSError("transport already gone")
+            closed.append(self._i)
+            self._inner.close()
+
+    for i, c in enumerate(chips):
+        c.driver = _Boom(c.driver, i)
+    with np.testing.assert_raises(RuntimeError):
+        router.close()
+    assert closed == [1, 2]                # the rest still closed
+
+
+def test_no_subprocess_server_leak_after_multi_tenant_demo(monkeypatch):
+    """A multi-tenant demo run over the subprocess transport leaves no
+    twin server process behind: every driver spawned during the run has
+    been closed (child reaped) by the router's shutdown path."""
+    from repro.hw import subprocess_driver as sd
+    from repro.runtime.demo import simulate, default_runtime_config
+
+    spawned = []
+    orig_init = sd.SubprocessDriver.__init__
+
+    def spy_init(self, *a, **kw):
+        orig_init(self, *a, **kw)
+        spawned.append(self)
+
+    monkeypatch.setattr(sd.SubprocessDriver, "__init__", spy_init)
+    cfg = default_runtime_config(k=4, sigma_drift=0.05, probe_every=4,
+                                 zo_steps=60, driver_kind="subprocess")
+    out = simulate(2, 12, dim=8, batch=2, seed=0, cfg=cfg, tenants=2)
+    assert out["report"]["ticks"] == 12
+    assert len(spawned) == 2
+    for d in spawned:
+        assert d._proc is None          # close() ran and reaped the child
+
+
 def test_drift_aware_routing_ranks_by_predicted_decay():
     """The default policy dispatches the chip with the lowest *predicted*
     distance (last estimate + OU extrapolation), preferring HEALTHY."""

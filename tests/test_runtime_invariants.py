@@ -1,0 +1,162 @@
+"""Property-based runtime invariants (hypothesis, or the seeded shim).
+
+Three invariants the closed loop's correctness rests on, exercised over
+randomized inputs rather than single examples:
+
+* the router NEVER dispatches to a non-``routable`` chip, whatever the
+  fleet's status/health configuration;
+* the monitor's per-tenant hysteresis is monotone in the probe
+  distance — a larger estimate can never produce a *less* alarmed
+  state than a smaller one from the same starting point;
+* partial recalibration is surgical — the untouched tenants' Σ banks
+  and commanded phases are bit-identical across the job, for any
+  tenant layout and any choice of repaired tenant.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # optional dev extra; fall back to the shim
+    from _hypothesis_shim import given, settings, strategies as st
+
+from repro.core.noise import DEFAULT_NOISE
+from repro.hw.drift import DriftConfig
+from repro.runtime.monitor import (MonitorConfig, HealthState, update_health,
+                                   clear_health)
+from repro.runtime.recalibrate import RecalConfig, recalibrate
+from repro.runtime.fleet import (RuntimeConfig, FleetRouter, make_chip,
+                                 make_fleet, HEALTHY, DEGRADED,
+                                 RECALIBRATING)
+
+K = 3
+POST_IC = DEFAULT_NOISE.post_ic()
+STATUSES = [HEALTHY, DEGRADED, RECALIBRATING]
+
+
+def _cfg(**kw):
+    defaults = dict(
+        k=K, noise=POST_IC,
+        drift=DriftConfig(sigma_phase=0.04, theta=0.01),
+        monitor=MonitorConfig(n_probes=6, alarm_threshold=0.05,
+                              clear_threshold=0.03, consecutive=2),
+        recal=RecalConfig(zo_steps=30, delta0=0.05),
+        probe_every=5, recal_latency=2, max_concurrent_recals=1)
+    defaults.update(kw)
+    return RuntimeConfig(**defaults)
+
+
+def _weights(seed: int, n_tenants: int, dim: int = 6) -> list[jax.Array]:
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(rng.standard_normal((dim, dim)) / np.sqrt(dim),
+                        jnp.float32) for _ in range(n_tenants)]
+
+
+# ---------------------------------------------------------------------------
+# invariant 1: the router never dispatches to a non-routable chip
+# ---------------------------------------------------------------------------
+
+_FLEET = make_fleet(jax.random.PRNGKey(0), 4, _weights(0, 2), _cfg())
+
+
+@settings(max_examples=40, deadline=None)
+@given(s0=st.sampled_from(STATUSES), s1=st.sampled_from(STATUSES),
+       s2=st.sampled_from(STATUSES), s3=st.sampled_from(STATUSES),
+       d0=st.floats(0.0, 0.5), d1=st.floats(0.0, 0.5),
+       now=st.integers(0, 200), tenant=st.integers(0, 1),
+       policy=st.sampled_from(["drift_aware", "least_served"]))
+def test_dispatch_only_routable(s0, s1, s2, s3, d0, d1, now, tenant, policy):
+    router = FleetRouter(_FLEET, _cfg(router_policy=policy), seed=1)
+    router.tick_count = now
+    for chip, status in zip(_FLEET, (s0, s1, s2, s3)):
+        chip.status = status
+        chip.tenants[0].health.distance = d0
+        chip.tenants[1].health.distance = d1
+    try:
+        got = router.dispatch(tenant)
+        if all(s == RECALIBRATING for s in (s0, s1, s2, s3)):
+            assert got is None
+        else:
+            assert got is not None and got.routable
+            assert got.status != RECALIBRATING
+            # HEALTHY pool is strictly preferred over DEGRADED
+            if any(s == HEALTHY for s in (s0, s1, s2, s3)):
+                assert got.status == HEALTHY
+    finally:
+        for chip in _FLEET:
+            chip.status = HEALTHY
+
+
+# ---------------------------------------------------------------------------
+# invariant 2: hysteresis is monotone in the probe distance
+# ---------------------------------------------------------------------------
+
+_MON = MonitorConfig(alarm_threshold=0.05, clear_threshold=0.02,
+                     consecutive=2)
+
+
+@settings(max_examples=60, deadline=None)
+@given(lo=st.floats(0.0, 0.4), delta=st.floats(0.0, 0.4),
+       strikes=st.integers(0, 3), alarmed=st.sampled_from([False, True]))
+def test_update_health_monotone_in_distance(lo, delta, strikes, alarmed):
+    hi = lo + delta
+    h0 = HealthState(distance=0.0, strikes=strikes, alarmed=alarmed)
+    h_lo = update_health(h0, lo, _MON)
+    h_hi = update_health(h0, hi, _MON)
+    assert h_hi.strikes >= h_lo.strikes
+    assert h_hi.alarmed >= h_lo.alarmed
+    # and monotone along sequences: element-wise larger probe streams
+    # never yield a less-alarmed terminal state
+    a, b = h0, h0
+    for _ in range(3):
+        a = update_health(a, lo, _MON)
+        b = update_health(b, hi, _MON)
+        assert b.strikes >= a.strikes
+        assert b.alarmed >= a.alarmed
+
+
+@settings(max_examples=60, deadline=None)
+@given(lo=st.floats(0.0, 0.4), delta=st.floats(0.0, 0.4),
+       strikes=st.integers(0, 3))
+def test_clear_health_monotone_in_distance(lo, delta, strikes):
+    hi = lo + delta
+    h0 = HealthState(distance=0.9, strikes=strikes, alarmed=True)
+    c_lo = clear_health(h0, lo, _MON)
+    c_hi = clear_health(h0, hi, _MON)
+    assert c_hi.alarmed >= c_lo.alarmed
+    # clearing obeys the LOWER threshold exactly
+    assert c_lo.alarmed == (lo >= _MON.clear_threshold)
+
+
+# ---------------------------------------------------------------------------
+# invariant 3: partial recal never touches co-tenant Σ banks / phases
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=6, deadline=None)
+@given(n_tenants=st.integers(2, 3), victim=st.integers(0, 2),
+       seed=st.integers(0, 1000), ticks=st.integers(10, 50))
+def test_partial_recal_leaves_cotenants_bit_identical(n_tenants, victim,
+                                                      seed, ticks):
+    victim = victim % n_tenants
+    cfg = _cfg()
+    chip = make_chip(jax.random.PRNGKey(seed), 0,
+                     _weights(seed, n_tenants), cfg)
+    for _ in range(ticks):
+        chip.driver.advance(1.0)
+    ten = chip.tenants[victim]
+    sig0 = np.asarray(chip.driver.read_sigma())
+    pu0, pv0 = map(np.asarray, chip.driver.read_phases())
+    recalibrate(jax.random.PRNGKey(seed + 1), chip.driver, ten.w_blocks,
+                cfg.recal, block_range=ten.block_range)
+    sig1 = np.asarray(chip.driver.read_sigma())
+    pu1, pv1 = map(np.asarray, chip.driver.read_phases())
+    start, stop = ten.block_range
+    outside = np.r_[0:start, stop:chip.driver.n_blocks]
+    np.testing.assert_array_equal(sig0[outside], sig1[outside])
+    np.testing.assert_array_equal(pu0[outside], pu1[outside])
+    np.testing.assert_array_equal(pv0[outside], pv1[outside])
+    # ... while the repaired tenant's state DID move (the job is real)
+    assert not np.array_equal(pu0[start:stop], pu1[start:stop])
