@@ -12,19 +12,28 @@ response is observable — is enforced here as an API boundary::
     runtime/fleet.py      serving/routing ───▶    hw/server.py   remote twin
 
     hw/driver.py             the ABC + PTC-call accounting
-    hw/subprocess_driver.py  JSON-over-pipe client (HIL transport)
+    hw/stream_driver.py      shared op-stream client (pipelining, batch)
+    hw/subprocess_driver.py  pipe transport (HIL topology)
+    hw/socket_driver.py      TCP transport (remote-host topology)
 
-Two transports ship: :class:`TwinDriver` (in-process, jit-friendly) and
-:class:`SubprocessDriver` (JSON-over-pipe to ``repro.hw.server`` — the
-hardware-in-the-loop shape; swap the server for a real instrument daemon
-and the control plane is untouched).  Both meter every op that touches
+Three transports ship: :class:`TwinDriver` (in-process, jit-friendly)
+and two op-stream clients sharing one :class:`StreamDriver` base —
+:class:`SubprocessDriver` (JSON over stdin/stdout pipes to
+``repro.hw.server``, the hardware-in-the-loop shape) and
+:class:`SocketDriver` (the same framing over TCP, so the device server
+can run on another host; swap the server for a real instrument daemon
+and the control plane is untouched).  All meter every op that touches
 light in Appendix-G PTC calls (:class:`DriverStats`).
 
-Both transports are *tenant-addressable* (wire protocol v2): state
-writes, probes, and in-situ jobs accept ``block_range=(start, stop)``
-scoping them to one mapped layer's blocks when a chip is time-
+All transports are *tenant-addressable* (wire protocol v2 surface):
+state writes, probes, and in-situ jobs accept ``block_range=(start,
+stop)`` scoping them to one mapped layer's blocks when a chip is time-
 multiplexed across several tenants (``repro.runtime.fleet`` keeps the
-tenant → block-range registry on top of this).
+tenant → block-range registry on top of this).  Protocol v3 adds the
+*batched data plane*: ``driver.run_batch`` ships an ordered op list in
+one wire frame, and the stream transports pipeline result-less writes
+into the next observable op's frame — closing the ~23× probe-throughput
+gap the per-op round-trips cost (``benchmarks/driver_overhead.py``).
 
 Twin-only readouts (exact mapping distance, the drifted realization) are
 reachable only through ``driver.unsafe_twin()`` — tests and benchmarks
@@ -36,25 +45,35 @@ from .driver import (PhotonicDriver, DriverStats, ZORefineResult,  # noqa: F401
                      readback_cost, resolve_block_range)
 from .drift import (DriftConfig, DriftState, init_drift, advance,  # noqa: F401
                     bias_deviation, DEFAULT_DRIFT)
-from .protocol import PROTOCOL_VERSION  # noqa: F401
+from .protocol import PROTOCOL_VERSION, MAX_FRAME_BYTES  # noqa: F401
 from .twin import TwinDriver, TwinHandle, make_twin  # noqa: F401
+from .stream_driver import StreamDriver  # noqa: F401
 from .subprocess_driver import SubprocessDriver  # noqa: F401
+from .socket_driver import SocketDriver  # noqa: F401
 
 __all__ = ["PhotonicDriver", "DriverStats", "ZORefineResult", "ICJobResult",
            "TwinUnavailable", "probe_cost", "readback_cost",
-           "resolve_block_range", "PROTOCOL_VERSION", "DriftConfig",
-           "DriftState", "init_drift", "advance", "bias_deviation",
-           "DEFAULT_DRIFT", "TwinDriver", "TwinHandle", "make_twin",
-           "SubprocessDriver", "make_driver"]
+           "resolve_block_range", "PROTOCOL_VERSION", "MAX_FRAME_BYTES",
+           "DriftConfig", "DriftState", "init_drift", "advance",
+           "bias_deviation", "DEFAULT_DRIFT", "TwinDriver", "TwinHandle",
+           "make_twin", "StreamDriver", "SubprocessDriver", "SocketDriver",
+           "make_driver"]
 
 
 def make_driver(transport: str, key, n_blocks: int, k: int, model,
                 kind: str = "clements", *, m: int | None = None,
-                n: int | None = None, drift=None) -> PhotonicDriver:
-    """Uniform driver factory: ``transport`` ∈ {"twin", "subprocess"}."""
+                n: int | None = None, drift=None,
+                address: tuple[str, int] | None = None) -> PhotonicDriver:
+    """Uniform driver factory: ``transport`` ∈ {"twin", "subprocess",
+    "socket"}.  ``address=(host, port)`` points the socket transport at
+    a remote ``repro.hw.server --socket`` daemon; without it the socket
+    driver self-hosts a loopback server child."""
     if transport == "twin":
         return make_twin(key, n_blocks, k, model, kind, m=m, n=n, drift=drift)
     if transport == "subprocess":
         return SubprocessDriver(key, n_blocks, k, model, kind, m=m, n=n,
                                 drift=drift)
+    if transport == "socket":
+        return SocketDriver(key, n_blocks, k, model, kind, m=m, n=n,
+                            drift=drift, address=address)
     raise ValueError(f"unknown driver transport: {transport!r}")

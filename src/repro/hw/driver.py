@@ -52,6 +52,23 @@ to those blocks only — writes land on the range alone, probes stream
 through the range alone (and are charged for the range alone), and
 in-situ jobs re-tune the range alone.  ``block_range=None`` means the
 whole chip, which is the single-tenant behavior these APIs always had.
+
+Batched op lists
+----------------
+Every driver also executes an *ordered op list* via :meth:`run_batch`
+(``[(op_name, kwargs), ...]`` → per-op results).  In process this is
+plain sequential dispatch; on the stream transports (subprocess pipe,
+TCP socket) the whole list travels as ONE wire frame (protocol v3's
+``batch`` op), amortizing the ~1 ms round-trip that otherwise dominates
+fine-grained probe sweeps.  Semantics are identical by construction —
+ops execute in list order against the same device, every op is metered
+individually — so batched and sequential encodings are bit-identical
+for equal seeds, which the conformance suite asserts on all transports.
+Stream transports additionally *pipeline* result-less writes
+(``write_*`` / ``advance`` / ``charge`` / ``reset_stats``): they queue
+client-side and flush ahead of the next observable op in the same
+frame (see :mod:`repro.hw.stream_driver`); :meth:`flush` forces the
+queue down early.
 """
 
 from __future__ import annotations
@@ -62,10 +79,53 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 __all__ = ["DriverStats", "PhotonicDriver", "ZORefineResult", "ICJobResult",
            "TwinUnavailable", "probe_cost", "readback_cost",
-           "readout_blocks", "resolve_block_range"]
+           "readout_blocks", "resolve_block_range", "BATCHABLE_OPS",
+           "STAT_CATEGORIES", "forward_coalesce_key", "coalesce_spans"]
+
+# the PTC meter's categories (DriverStats fields a charge may land in)
+STAT_CATEGORIES = frozenset(["serve", "probe", "readback", "search"])
+
+# the op surface a batched list may carry — identical to the wire
+# protocol's dispatchable set, so in-process and stream transports
+# accept/reject exactly the same lists (lifecycle ops like ``close`` /
+# ``unsafe_twin`` are excluded on every transport)
+BATCHABLE_OPS = frozenset([
+    "write_phases", "write_sigma", "write_signs", "read_phases",
+    "read_sigma", "forward", "forward_layer", "readback_bases",
+    "zo_refine", "run_ic", "advance", "charge", "reset_stats", "stats",
+])
+
+
+def forward_coalesce_key(kw: dict):
+    """Coalescibility key for a batched ``forward`` op: consecutive
+    forwards merge into one vmapped device call only when probe shape,
+    metering category, and tenant scope all agree.  Works on python
+    kwargs and decoded wire kwargs alike."""
+    br = kw.get("block_range")
+    return (np.shape(kw.get("x")), kw.get("category", "probe"),
+            None if br is None else (int(br[0]), int(br[1])))
+
+
+def coalesce_spans(keys: list) -> "list[tuple[int, int]]":
+    """``[start, stop)`` spans of a batch op list, merging runs of equal
+    consecutive non-None keys — the ONE definition of the coalescing
+    rule shared by the in-process ``run_batch`` and the wire server's
+    batch dispatcher (divergence would break batched ≡ sequential
+    bit-identity on exactly one transport)."""
+    spans = []
+    i = 0
+    while i < len(keys):
+        j = i
+        while (keys[i] is not None and j + 1 < len(keys)
+               and keys[j + 1] == keys[i]):
+            j += 1
+        spans.append((i, j + 1))
+        i = j + 1
+    return spans
 
 
 class TwinUnavailable(RuntimeError):
@@ -303,6 +363,39 @@ class PhotonicDriver(abc.ABC):
     def reset_stats(self) -> None:
         s = self.stats
         s.serve = s.probe = s.readback = s.search = 0.0
+
+    # -- batched op lists ----------------------------------------------------
+
+    def run_batch(self, ops: "list[tuple[str, dict]]") -> list:
+        """Execute an ordered op list; returns per-op results.
+
+        ``ops`` entries are ``(method_name, kwargs)`` — any op in
+        :data:`BATCHABLE_OPS` (``"stats"`` yields a snapshot of the
+        meter at that point in the list); anything else — lifecycle
+        ops, private internals — is rejected on EVERY transport, so a
+        list that works in-process also works over the wire.  This
+        default dispatches sequentially; stream transports override it
+        to ship the whole list in one wire frame.  Either way the ops
+        run in list order against the same device and each op is
+        metered individually, so results are bit-identical across
+        encodings.
+        """
+        out = []
+        for name, kw in ops:
+            if name not in BATCHABLE_OPS:
+                raise ValueError(
+                    f"op {name!r} cannot appear inside a batch")
+            if name == "stats":
+                s = self.stats
+                out.append(DriverStats(serve=s.serve, probe=s.probe,
+                                       readback=s.readback, search=s.search))
+            else:
+                out.append(getattr(self, name)(**kw))
+        return out
+
+    def flush(self) -> None:
+        """Force any client-side pipelined writes onto the device
+        (no-op for in-process drivers, which apply writes eagerly)."""
 
     # -- lifecycle / escape hatch --------------------------------------------
 

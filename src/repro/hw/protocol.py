@@ -1,6 +1,8 @@
-"""JSON-over-pipe wire protocol for out-of-process drivers.
+"""JSON op-stream wire protocol for out-of-process drivers.
 
-Newline-delimited JSON request/response frames::
+Newline-delimited JSON request/response frames, over any byte stream
+(the subprocess transport uses stdin/stdout pipes, the socket transport
+a TCP connection — same framing)::
 
     → {"id": 7, "op": "forward", "kw": {"x": {"__nd__": ...}, ...}}
     ← {"id": 7, "ok": true, "result": {"y": {"__nd__": ...}}}
@@ -8,20 +10,57 @@ Newline-delimited JSON request/response frames::
 
 Arrays travel as base64 of their raw bytes plus dtype/shape, so float32
 round-trips bit-exactly — the conformance suite relies on the twin and
-subprocess transports returning identical results for identical seeds.
+stream transports returning identical results for identical seeds.
 Configs (``NoiseModel``, ``DriftConfig``, ``ZOConfig``) travel as plain
 field dicts.
+
+Framing limits: a frame longer than ``MAX_FRAME_BYTES`` is rejected
+(:class:`ProtocolError`) *without* buffering the whole line — a
+misbehaving peer cannot balloon the server's memory — and a line that is
+not valid JSON is likewise a hard :class:`ProtocolError` (the stream is
+assumed desynced; the connection terminates rather than guessing).
+
+The ``batch`` frame (v3)
+------------------------
+One request can carry an ordered op list executed server-side in one
+round-trip::
+
+    → {"id": 9, "op": "batch",
+       "kw": {"ops": [{"op": "advance", "kw": {"dt": 1.0}},
+                      {"op": "forward", "kw": {"x": ...}}]}}
+    ← {"id": 9, "ok": true, "result": [null, {"y": ...}]}
+
+Ops execute strictly in list order against the same device, exactly as
+if issued as individual frames — results are bit-identical to the
+sequential encoding, and every op inside the batch is metered
+individually (one batch ≠ one PTC call).  A failing op aborts the rest
+of the list; ops before it have already been applied (the same state
+the sequential encoding would have left), and the error names the
+failing index.  ``batch`` / ``init`` / ``shutdown`` cannot nest inside
+a batch.
+
+A run of consecutive ``forward`` ops with equal probe shape, category,
+and ``block_range`` may come back as ONE span entry
+``{"coalesced": n, "y": <(n, ...) nd>}`` in place of its ``n`` per-op
+results — the server executed them as one vectorized device call and
+stacked the (bit-identical) outputs so the span pays one codec pass
+instead of ``n``; clients split the leading axis back into per-op
+results.
 
 Versioning: the client sends ``{"v": PROTOCOL_VERSION}`` inside the
 ``init`` op's kwargs and the server echoes its own version in the init
 result; a mismatch is a hard error on both sides (no silent fallback —
-a stale server would misinterpret tenant-scoped ops).
+a stale peer would misinterpret batched or tenant-scoped ops).
 
 * v1 — original surface (PR 2): whole-chip ops only.
 * v2 — multi-tenant surface: ``block_range`` on ``write_phases`` /
   ``write_sigma`` / ``write_signs`` / ``forward`` / ``forward_layer``
   (+ ``out_dim``) / ``readback_bases`` / ``zo_refine`` and on
   ``unsafe/true_mapping_distance``; version handshake added.
+* v3 — op-stream data plane: the ``batch`` frame (client-side write
+  pipelining rides on it), frame-size limits, and the socket transport
+  (same framing over TCP).  A v2 peer would treat a ``batch`` frame as
+  an unknown op mid-session, so the handshake hard-rejects it.
 """
 
 from __future__ import annotations
@@ -33,15 +72,20 @@ from typing import Any, IO
 import numpy as np
 
 __all__ = ["encode", "decode", "send", "recv", "ProtocolError",
-           "PROTOCOL_VERSION"]
+           "PROTOCOL_VERSION", "MAX_FRAME_BYTES"]
 
-PROTOCOL_VERSION = 2
+PROTOCOL_VERSION = 3
+
+# Generous ceiling: the largest legitimate frames carry whole-chip phase
+# banks / block targets (base64 inflates raw float32 by 4/3).  64 MiB of
+# frame ≈ a 12M-parameter write — far beyond any single-chip op here.
+MAX_FRAME_BYTES = 64 * 1024 * 1024
 
 _ND = "__nd__"
 
 
 class ProtocolError(RuntimeError):
-    """Framing / transport failure on the driver pipe."""
+    """Framing / transport failure on the driver stream."""
 
 
 def encode(obj: Any) -> Any:
@@ -71,14 +115,25 @@ def decode(obj: Any) -> Any:
 
 
 def send(fp: IO[str], msg: dict) -> None:
-    fp.write(json.dumps(msg, separators=(",", ":")) + "\n")
+    line = json.dumps(msg, separators=(",", ":"))
+    if len(line) + 1 > MAX_FRAME_BYTES:
+        raise ProtocolError(
+            f"refusing to send oversized frame ({len(line) + 1} bytes > "
+            f"{MAX_FRAME_BYTES})")
+    fp.write(line + "\n")
     fp.flush()
 
 
-def recv(fp: IO[str]) -> dict:
-    line = fp.readline()
+def recv(fp: IO[str], max_bytes: int = MAX_FRAME_BYTES) -> dict:
+    # bounded readline: a peer streaming an endless line cannot make us
+    # buffer more than the frame ceiling before we reject it
+    line = fp.readline(max_bytes + 1)
     if not line:
-        raise ProtocolError("driver pipe closed (peer exited?)")
+        raise ProtocolError("driver stream closed (peer exited?)")
+    if len(line) > max_bytes or (len(line) == max_bytes
+                                 and not line.endswith("\n")):
+        raise ProtocolError(
+            f"oversized frame rejected (> {max_bytes} bytes)")
     try:
         return json.loads(line)
     except json.JSONDecodeError as e:

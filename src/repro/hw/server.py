@@ -1,16 +1,32 @@
 """Out-of-process twin server: ``python -m repro.hw.server``.
 
-Hosts one :class:`TwinDriver` and serves the driver protocol over
-stdin/stdout (newline-delimited JSON, see ``repro.hw.protocol``).  This
-is the hardware-in-the-loop shape: the parent's
-:class:`SubprocessDriver` sees only the control-plane surface, while the
-device physics lives in this process — swap this server for a real
-instrument daemon and nothing on the control plane changes.
+Hosts one :class:`TwinDriver` per session and serves the driver protocol
+(newline-delimited JSON, see ``repro.hw.protocol``) over either
+
+* **stdin/stdout** (the default — the :class:`SubprocessDriver` pipe
+  topology), or
+* **TCP** (``--socket HOST:PORT`` — the :class:`SocketDriver` topology,
+  so the twin can run on another host; ``PORT=0`` binds an ephemeral
+  port, announced as ``LISTENING <port>`` on stdout for self-hosted
+  clients).  Connections are served one at a time, each with its own
+  fresh driver session; ``--max-conns N`` exits after N sessions (the
+  self-hosted lifetime).
+
+This is the hardware-in-the-loop shape: the parent's stream driver sees
+only the control-plane surface, while the device physics lives in this
+process — swap this server for a real instrument daemon and nothing on
+the control plane changes.
 
 In-situ jobs (``zo_refine`` / ``run_ic``) execute *here*, against the
 local device, with the same ``repro.hw.jobs`` code the in-process twin
 uses — so results are bit-identical across transports for equal seeds
 (same functions, same backend), which the conformance suite asserts.
+
+The v3 ``batch`` op executes an ordered sub-op list in one round-trip:
+each sub-op dispatches through exactly the same code as a standalone
+frame, so batched ≡ sequential bit-identically and every op is metered
+individually (one batch ≠ one PTC call).  A failing sub-op aborts the
+remainder; the error names its index.
 
 The ``unsafe/*`` ops back the parent's ``unsafe_twin()`` escape hatch;
 they exist because this peer happens to be a simulator.  A real-hardware
@@ -19,19 +35,23 @@ daemon would simply not implement them.
 
 from __future__ import annotations
 
+import argparse
+import socket as _socket
 import sys
 import traceback
 
 import jax.numpy as jnp
+import numpy as np
 
 from ..core.noise import NoiseModel
 from ..optim.zo import ZOConfig
 from .drift import DriftConfig
+from .driver import forward_coalesce_key, coalesce_spans, BATCHABLE_OPS
 from .protocol import (encode, decode, send, recv, ProtocolError,
                        PROTOCOL_VERSION)
 from .twin import make_twin
 
-__all__ = ["serve", "main"]
+__all__ = ["serve", "serve_socket", "main"]
 
 
 def _build_driver(kw: dict):
@@ -53,6 +73,47 @@ def _rng(kw: dict):
 
 
 def _dispatch(driver, op: str, kw: dict):
+    if op == "batch":
+        # ordered sub-op list, one round-trip; each sub-op goes through
+        # this same dispatcher (same results, same per-op metering),
+        # except that consecutive same-shape probe ``forward`` ops
+        # coalesce into ONE vmapped device call (bit-identical results,
+        # per-op charges — the probe-sweep fast path)
+        entries = kw.get("ops") or []
+        for entry in entries:
+            # the same whitelist PhotonicDriver.run_batch enforces
+            # in-process: session-control ops can't nest, and the
+            # unsafe/* twin hatch and meta stay out of reach of batch
+            # frames from untrusted wire peers
+            if entry.get("op") not in BATCHABLE_OPS:
+                raise ValueError(
+                    f"op {entry.get('op')!r} cannot appear inside a batch")
+        can_coalesce = hasattr(driver, "forward_many")
+        keys = [forward_coalesce_key(e.get("kw") or {})
+                if can_coalesce and e.get("op") == "forward" else None
+                for e in entries]
+        results = []
+        for i, j in coalesce_spans(keys):
+            sub = entries[i].get("op")
+            try:
+                if j - i > 1:
+                    kw_i = entries[i].get("kw") or {}
+                    ys = driver.forward_many(
+                        [(e.get("kw") or {})["x"] for e in entries[i:j]],
+                        category=kw_i.get("category", "probe"),
+                        block_range=_rng(kw_i))
+                    # the span travels as ONE stacked array (op axis
+                    # leading) — one codec pass instead of n; the client
+                    # splits it back into per-op results, bit-identical
+                    results.append(dict(coalesced=j - i, y=np.stack(ys)))
+                else:
+                    results.append(
+                        _dispatch(driver, sub, entries[i].get("kw") or {}))
+            except Exception as e:
+                raise RuntimeError(
+                    f"batch op {i} ({sub!r}) failed: {e}\n"
+                    f"(ops [0, {i}) were already applied)") from e
+        return results
     if op == "meta":
         m, n = driver.layer_shape
         return dict(k=driver.k, kind=driver.kind, n_blocks=driver.n_blocks,
@@ -126,15 +187,34 @@ def _dispatch(driver, op: str, kw: dict):
 
 
 def serve(fin, fout) -> None:
+    """One driver session over a newline-JSON stream pair.
+
+    Returns when the peer shuts down, disconnects, or desyncs the
+    framing (malformed/oversized frames are rejected with a best-effort
+    error frame, then the connection is dropped — after a framing
+    violation the stream position is untrustworthy)."""
     driver = None
     while True:
         try:
             req = recv(fin)
-        except ProtocolError:
-            return                      # parent went away: exit quietly
-        rid, op = req.get("id"), req.get("op")
-        kw = decode(req.get("kw") or {})
+        except ProtocolError as e:
+            if "closed" not in str(e):
+                # framing violation (not a clean disconnect): reject
+                # loudly before dropping the connection
+                try:
+                    send(fout, dict(id=None, ok=False,
+                                    error=f"protocol error: {e}"))
+                except Exception:
+                    pass
+            return
+        rid = None
         try:
+            # inside the try: a valid-JSON frame can still be a non-dict
+            # or carry a malformed __nd__ payload — that must draw an
+            # error frame, not escape serve() (and, for the socket
+            # daemon, kill the session loop for every future client)
+            rid, op = req.get("id"), req.get("op")
+            kw = decode(req.get("kw") or {})
             if op == "shutdown":
                 send(fout, dict(id=rid, ok=True, result=None))
                 return
@@ -145,13 +225,76 @@ def serve(fin, fout) -> None:
                 raise RuntimeError("first op must be 'init'")
             else:
                 result = _dispatch(driver, op, kw)
-            send(fout, dict(id=rid, ok=True, result=encode(result)))
+            try:
+                send(fout, dict(id=rid, ok=True, result=encode(result)))
+            except ProtocolError as e:
+                # result too large for one frame: send() refused BEFORE
+                # writing, so the stream is still framed — report a
+                # per-op error and keep the session (the op's state
+                # effects stand, exactly as a failed read would)
+                send(fout, dict(id=rid, ok=False,
+                                error=f"result not sendable: {e}"))
+        except ProtocolError:
+            return                      # response no longer sendable
+        except OSError:
+            return                      # transport died mid-response
         except Exception:
             send(fout, dict(id=rid, ok=False,
                             error=traceback.format_exc(limit=8)))
 
 
-def main() -> int:
+def serve_socket(host: str = "127.0.0.1", port: int = 0, *,
+                 max_conns: int | None = None, announce=None) -> None:
+    """Serve driver sessions over TCP, one connection at a time.
+
+    Each accepted connection is an independent session (own init, own
+    TwinDriver).  ``port=0`` binds an ephemeral port; the bound port is
+    announced as ``LISTENING <port>`` on ``announce`` (default stdout)
+    so self-hosting clients can discover it.  ``max_conns`` bounds the
+    number of sessions served (None = forever).
+    """
+    out = announce if announce is not None else sys.stdout
+    with _socket.create_server((host, port)) as srv:
+        print(f"LISTENING {srv.getsockname()[1]}", file=out, flush=True)
+        served = 0
+        while max_conns is None or served < max_conns:
+            conn, peer = srv.accept()
+            with conn:
+                conn.setsockopt(_socket.IPPROTO_TCP, _socket.TCP_NODELAY, 1)
+                fin = conn.makefile("r", encoding="utf-8", newline="\n",
+                                    buffering=1 << 20)
+                fout = conn.makefile("w", encoding="utf-8", newline="\n",
+                                     buffering=1 << 20)
+                try:
+                    serve(fin, fout)
+                except OSError as e:
+                    # one client dying mid-session (BrokenPipe on send,
+                    # RST on recv) must not take the daemon down with it
+                    print(f"session from {peer} aborted: {e}",
+                          file=sys.stderr, flush=True)
+                finally:
+                    try:
+                        fout.flush()
+                    except Exception:
+                        pass
+            served += 1
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="repro.hw twin server (op-stream driver protocol v3)")
+    ap.add_argument("--socket", metavar="HOST:PORT", default=None,
+                    help="serve over TCP instead of stdin/stdout "
+                         "(PORT=0 picks an ephemeral port)")
+    ap.add_argument("--max-conns", type=int, default=None,
+                    help="exit after N socket sessions (default: serve "
+                         "forever)")
+    args = ap.parse_args(argv)
+    if args.socket is not None:
+        host, _, port = args.socket.rpartition(":")
+        serve_socket(host or "127.0.0.1", int(port),
+                     max_conns=args.max_conns)
+        return 0
     # stdout is the wire: anything else (jax chatter) must go to stderr
     serve(sys.stdin, sys.stdout)
     return 0

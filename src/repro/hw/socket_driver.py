@@ -1,0 +1,123 @@
+"""`SocketDriver`: the op-stream driver protocol over a TCP socket.
+
+Same framing, same v3 surface, same bit-identical results as the pipe
+transport — but the twin server can live on *another host*: point the
+driver at an ``address=(host, port)`` where ``python -m repro.hw.server
+--socket HOST:PORT`` is listening, and the whole control plane (IC, PM,
+monitoring, recalibration, fleet serving) runs against the remote
+device unchanged.
+
+With ``address=None`` the driver self-hosts: it spawns a local server
+child bound to an ephemeral loopback port (``--socket 127.0.0.1:0
+--max-conns 1``), reads the announced port off the child's stdout, and
+connects — which is how the conformance suite and benchmarks exercise
+the TCP path hermetically.
+
+``TCP_NODELAY`` is set on the connection: the protocol is strictly
+request/response, so Nagle's algorithm would add a delayed-ACK stall to
+every small frame — fatal for a data plane whose whole point is
+round-trip amortization.
+"""
+
+from __future__ import annotations
+
+import os
+import socket
+import subprocess
+import sys
+import tempfile
+
+import jax
+
+from ..core.noise import NoiseModel
+from .drift import DriftConfig
+from .protocol import ProtocolError
+from .stream_driver import StreamDriver
+from .subprocess_driver import server_env, stderr_tail
+
+__all__ = ["SocketDriver"]
+
+
+class SocketDriver(StreamDriver):
+    """Control-plane client to a twin server over TCP."""
+
+    def __init__(self, key: jax.Array, n_blocks: int, k: int,
+                 model: NoiseModel, kind: str = "clements", *,
+                 m: int | None = None, n: int | None = None,
+                 drift: DriftConfig | None = None,
+                 address: tuple[str, int] | None = None,
+                 python: str | None = None, connect_timeout: float = 30.0):
+        self._proc = None
+        self._stderr = None
+        if address is None:
+            # self-hosted: spawn a loopback server child and learn its port
+            self._stderr = tempfile.NamedTemporaryFile(
+                mode="w+", prefix="repro-hw-server-", suffix=".err",
+                delete=False)
+            self._proc = subprocess.Popen(
+                [python or sys.executable, "-u", "-m", "repro.hw.server",
+                 "--socket", "127.0.0.1:0", "--max-conns", "1"],
+                stdin=subprocess.DEVNULL, stdout=subprocess.PIPE,
+                stderr=self._stderr, text=True, env=server_env())
+            line = self._proc.stdout.readline()
+            if not line.startswith("LISTENING "):
+                self.close()
+                raise ProtocolError(
+                    f"socket server failed to announce its port: {line!r}"
+                    + self._transport_diagnostics())
+            address = ("127.0.0.1", int(line.split()[1]))
+        self._sock = socket.create_connection(address,
+                                              timeout=connect_timeout)
+        self._sock.settimeout(None)
+        self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        # 1 MiB stream buffers (batched frames are ~100 KB; the default
+        # 8 KB would syscall a dozen times per frame)
+        self._fin = self._sock.makefile("r", encoding="utf-8", newline="\n",
+                                        buffering=1 << 20)
+        self._fout = self._sock.makefile("w", encoding="utf-8", newline="\n",
+                                         buffering=1 << 20)
+        self._handshake(key, n_blocks, k, model, kind, m, n, drift)
+
+    # -- transport hooks -----------------------------------------------------
+
+    def _transport_alive(self) -> bool:
+        return getattr(self, "_sock", None) is not None
+
+    def _transport_diagnostics(self) -> str:
+        return stderr_tail(self._stderr)
+
+    def close(self) -> None:
+        sock = getattr(self, "_sock", None)
+        if sock is not None:
+            self._shutdown_stream()
+            try:
+                self._fin.close()
+                self._fout.close()
+            except Exception:
+                pass
+            try:
+                sock.close()
+            except OSError:
+                pass
+            self._sock = None
+            self._fin = self._fout = None
+        if self._proc is not None:
+            try:
+                self._proc.wait(timeout=5)
+            except Exception:
+                self._proc.kill()
+                self._proc.wait(timeout=5)
+            self._proc = None
+        if self._stderr is not None:
+            try:
+                self._stderr.close()
+                os.unlink(self._stderr.name)
+            except OSError:
+                pass
+            self._stderr = None
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:
+            pass

@@ -1,4 +1,4 @@
-"""`SubprocessDriver`: JSON-over-pipe client to an out-of-process twin.
+"""`SubprocessDriver`: op-stream client to a child twin server over pipes.
 
 The hardware-in-the-loop transport: the device (a ``repro.hw.server``
 process hosting a TwinDriver) lives outside this interpreter, and the
@@ -6,12 +6,16 @@ control plane reaches it only through the wire protocol — the same
 topology a lab instrument server or a remote chip simulator would have.
 Results are bit-identical to :class:`TwinDriver` for equal construction
 seeds (the server runs the same physics and job code on the same
-backend; float32 arrays round-trip the pipe exactly).
+backend; float32 arrays round-trip the stream exactly).
+
+All protocol behavior (v3 batch frames, write pipelining, per-op
+encode/decode) lives in the shared
+:class:`~repro.hw.stream_driver.StreamDriver` base; this class only
+owns the child process and its stdin/stdout pipes.
 """
 
 from __future__ import annotations
 
-import dataclasses
 import os
 import subprocess
 import sys
@@ -19,23 +23,10 @@ import tempfile
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from ..core.noise import NoiseModel
-from ..optim.zo import ZOConfig
-from .device import DeviceRealization
 from .drift import DriftConfig
-from ..core.noise import PhaseNoise
-from .driver import (PhotonicDriver, DriverStats, ZORefineResult, ICJobResult,
-                     TwinUnavailable)
-from .protocol import (encode, decode, send, recv, ProtocolError,
-                       PROTOCOL_VERSION)
-
-
-def _rng_kw(block_range):
-    """Wire form of a block range (JSON list, or None for whole-chip)."""
-    return None if block_range is None else [int(i) for i in block_range]
+from .stream_driver import StreamDriver, RemoteTwinHandle  # noqa: F401
 
 __all__ = ["SubprocessDriver", "RemoteTwinHandle"]
 
@@ -45,42 +36,31 @@ def _src_root() -> str:
     return str(Path(__file__).resolve().parents[2])
 
 
-class RemoteTwinHandle:
-    """Remote twin readouts behind ``unsafe_twin()``.
-
-    Exists only because the peer happens to be a simulator exposing
-    ``unsafe/*`` debug ops; a real-hardware daemon would not, and the
-    driver would raise :class:`TwinUnavailable` instead.
-    """
-
-    def __init__(self, driver: "SubprocessDriver"):
-        self._d = driver
-
-    @property
-    def dev(self) -> DeviceRealization:
-        r = self._d._rpc("unsafe/dev")
-        return DeviceRealization(
-            noise_u=PhaseNoise(gamma=jnp.asarray(r["gamma_u"]),
-                               bias=jnp.asarray(r["bias_u"])),
-            noise_v=PhaseNoise(gamma=jnp.asarray(r["gamma_v"]),
-                               bias=jnp.asarray(r["bias_v"])),
-            d_u=jnp.asarray(r["d_u"]), d_v=jnp.asarray(r["d_v"]))
-
-    def realized_unitaries(self) -> tuple[jax.Array, jax.Array]:
-        r = self._d._rpc("unsafe/realized_unitaries")
-        return jnp.asarray(r["u"]), jnp.asarray(r["v"])
-
-    def true_mapping_distance(self, w_blocks: jax.Array,
-                              block_range=None) -> float:
-        r = self._d._rpc("unsafe/true_mapping_distance", w_blocks=w_blocks,
-                         block_range=_rng_kw(block_range))
-        return float(r["d"])
-
-    def bias_deviation(self) -> float:
-        return float(self._d._rpc("unsafe/bias_deviation")["d"])
+def server_env() -> dict:
+    """Environment for a spawned twin server: import path + matching
+    precision regime (or results stop being bit-identical across
+    transports)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = _src_root() + os.pathsep + env.get("PYTHONPATH", "")
+    env["JAX_ENABLE_X64"] = "1" if jax.config.jax_enable_x64 else "0"
+    return env
 
 
-class SubprocessDriver(PhotonicDriver):
+def stderr_tail(spool, n: int = 2000) -> str:
+    """Diagnostic tail of a spawned server's stderr spool file (shared
+    by every transport that hosts a server child)."""
+    if spool is None:
+        return ""
+    try:
+        spool.flush()
+        with open(spool.name) as f:
+            tail = f.read()[-n:]
+    except OSError:
+        return ""
+    return "\nserver stderr tail:\n" + tail
+
+
+class SubprocessDriver(StreamDriver):
     """Control-plane client to a ``repro.hw.server`` child process."""
 
     def __init__(self, key: jax.Array, n_blocks: int, k: int,
@@ -88,75 +68,46 @@ class SubprocessDriver(PhotonicDriver):
                  m: int | None = None, n: int | None = None,
                  drift: DriftConfig | None = None,
                  python: str | None = None):
-        env = dict(os.environ)
-        env["PYTHONPATH"] = _src_root() + os.pathsep + env.get("PYTHONPATH",
-                                                               "")
-        # the server must compute in the same precision regime as this
-        # process, or results stop being bit-identical across transports
-        env["JAX_ENABLE_X64"] = "1" if jax.config.jax_enable_x64 else "0"
         # server stderr (jax chatter, crash tracebacks) goes to a spool
         # file so a dead pipe can be diagnosed without polluting stdout
         self._stderr = tempfile.NamedTemporaryFile(
             mode="w+", prefix="repro-hw-server-", suffix=".err", delete=False)
+        # 1 MiB pipe buffers: a batched probe sweep's response frame is
+        # ~100 KB — default 8 KB buffering costs a dozen syscalls per
+        # frame on the hot path
         self._proc = subprocess.Popen(
             [python or sys.executable, "-u", "-m", "repro.hw.server"],
             stdin=subprocess.PIPE, stdout=subprocess.PIPE,
-            stderr=self._stderr, text=True, env=env)
-        self._rid = 0
-        meta = self._rpc(
-            "init", v=PROTOCOL_VERSION, key=np.asarray(key),
-            n_blocks=int(n_blocks), k=int(k),
-            kind=kind, m=m, n=n, model=dataclasses.asdict(model),
-            drift=drift._asdict() if drift is not None else None)
-        if int(meta.get("v", 1)) != PROTOCOL_VERSION:
-            self.close()
-            raise ProtocolError(
-                f"driver protocol mismatch: server speaks "
-                f"v{meta.get('v', 1)}, client speaks v{PROTOCOL_VERSION}")
-        self._meta = meta
+            stderr=self._stderr, text=True, env=server_env(),
+            bufsize=1 << 20)
+        self._fin = self._proc.stdout
+        self._fout = self._proc.stdin
+        self._handshake(key, n_blocks, k, model, kind, m, n, drift)
 
-    # -- transport -----------------------------------------------------------
+    # -- transport hooks -----------------------------------------------------
 
-    def _server_stderr_tail(self, n: int = 2000) -> str:
-        try:
-            self._stderr.flush()
-            with open(self._stderr.name) as f:
-                return f.read()[-n:]
-        except OSError:
+    def _transport_alive(self) -> bool:
+        return (getattr(self, "_proc", None) is not None
+                and self._proc.poll() is None)
+
+    def _transport_diagnostics(self) -> str:
+        if getattr(self, "_proc", None) is None:
             return ""
-
-    def _rpc(self, op: str, **kw):
-        if getattr(self, "_proc", None) is None or \
-                self._proc.poll() is not None:
-            raise ProtocolError(
-                "driver server process has exited (or driver was closed)"
-                + ("\nserver stderr tail:\n" + self._server_stderr_tail()
-                   if getattr(self, "_proc", None) is not None else ""))
-        self._rid += 1
-        try:
-            send(self._proc.stdin, dict(id=self._rid, op=op, kw=encode(kw)))
-            resp = recv(self._proc.stdout)
-        except (ProtocolError, OSError) as e:
-            raise ProtocolError(
-                f"driver pipe failed during op {op!r}: {e}\n"
-                f"server stderr tail:\n{self._server_stderr_tail()}") from e
-        if not resp.get("ok"):
-            raise RuntimeError(
-                f"remote driver op {op!r} failed:\n{resp.get('error')}")
-        return decode(resp.get("result"))
+        return stderr_tail(self._stderr)
 
     def close(self) -> None:
         if getattr(self, "_proc", None) is None:
             return
         try:
             if self._proc.poll() is None:
-                send(self._proc.stdin, dict(id=0, op="shutdown", kw={}))
+                self._shutdown_stream()
                 self._proc.wait(timeout=5)
         except Exception:
             self._proc.kill()
             self._proc.wait(timeout=5)
         finally:
             self._proc = None
+            self._fin = self._fout = None
             try:
                 self._stderr.close()
                 os.unlink(self._stderr.name)
@@ -168,111 +119,3 @@ class SubprocessDriver(PhotonicDriver):
             self.close()
         except Exception:
             pass
-
-    # -- geometry ------------------------------------------------------------
-
-    @property
-    def k(self) -> int:
-        return int(self._meta["k"])
-
-    @property
-    def kind(self) -> str:
-        return str(self._meta["kind"])
-
-    @property
-    def n_blocks(self) -> int:
-        return int(self._meta["n_blocks"])
-
-    @property
-    def layer_shape(self) -> tuple[int, int]:
-        return int(self._meta["m"]), int(self._meta["n"])
-
-    # -- commanded state -----------------------------------------------------
-
-    def write_phases(self, phi_u, phi_v, *, block_range=None) -> None:
-        self._rpc("write_phases", phi_u=phi_u, phi_v=phi_v,
-                  block_range=_rng_kw(block_range))
-
-    def write_sigma(self, sigma, *, block_range=None) -> None:
-        self._rpc("write_sigma", sigma=sigma,
-                  block_range=_rng_kw(block_range))
-
-    def write_signs(self, d_u, d_v, *, block_range=None) -> None:
-        self._rpc("write_signs", d_u=d_u, d_v=d_v,
-                  block_range=_rng_kw(block_range))
-
-    def read_phases(self) -> tuple[jax.Array, jax.Array]:
-        r = self._rpc("read_phases")
-        return jnp.asarray(r["phi_u"]), jnp.asarray(r["phi_v"])
-
-    def read_sigma(self) -> jax.Array:
-        return jnp.asarray(self._rpc("read_sigma")["sigma"])
-
-    # -- probes --------------------------------------------------------------
-
-    def forward(self, x, category: str = "probe", *,
-                block_range=None) -> jax.Array:
-        return jnp.asarray(self._rpc("forward", x=x, category=category,
-                                     block_range=_rng_kw(block_range))["y"])
-
-    def forward_layer(self, x, *, block_range=None,
-                      out_dim: int | None = None) -> jax.Array:
-        return jnp.asarray(self._rpc(
-            "forward_layer", x=x, block_range=_rng_kw(block_range),
-            out_dim=int(out_dim) if out_dim is not None else None)["y"])
-
-    def readback_bases(self, cols=None, *,
-                       block_range=None) -> tuple[jax.Array, jax.Array]:
-        if cols is not None:
-            cols = [int(c) for c in np.asarray(cols).tolist()]
-        r = self._rpc("readback_bases", cols=cols,
-                      block_range=_rng_kw(block_range))
-        return jnp.asarray(r["u"]), jnp.asarray(r["v"])
-
-    # -- in-situ jobs --------------------------------------------------------
-
-    def zo_refine(self, w_blocks, key, cfg: ZOConfig,
-                  method: str = "zcd", *, block_range=None) -> ZORefineResult:
-        r = self._rpc("zo_refine", w_blocks=w_blocks, key=np.asarray(key),
-                      cfg=cfg._asdict(), method=method,
-                      block_range=_rng_kw(block_range))
-        return ZORefineResult(phi=jnp.asarray(r["phi"]),
-                              loss=jnp.asarray(r["loss"]),
-                              history=jnp.asarray(r["history"]),
-                              steps=int(r["steps"]))
-
-    def run_ic(self, key, sigs, cfg: ZOConfig, *, restarts: int = 4,
-               method: str = "zcd") -> ICJobResult:
-        r = self._rpc("run_ic", key=np.asarray(key), sigs=sigs,
-                      cfg=cfg._asdict(), restarts=restarts, method=method)
-        return ICJobResult(phi=jnp.asarray(r["phi"]),
-                           u=jnp.asarray(r["u"]), v=jnp.asarray(r["v"]),
-                           loss=jnp.asarray(r["loss"]),
-                           history=jnp.asarray(r["history"]))
-
-    # -- time / accounting / escape hatch ------------------------------------
-
-    def advance(self, dt: float = 1.0) -> None:
-        self._rpc("advance", dt=float(dt))
-
-    @property
-    def stats(self) -> DriverStats:
-        s = self._rpc("stats")
-        return DriverStats(serve=s["serve"], probe=s["probe"],
-                           readback=s["readback"], search=s["search"])
-
-    def reset_stats(self) -> None:
-        self._rpc("reset_stats")
-
-    def charge(self, category: str, calls: float) -> None:
-        self._rpc("charge", category=category, calls=calls)
-
-    def unsafe_twin(self) -> RemoteTwinHandle:
-        # probe the peer's unsafe/* support once, then trust it
-        if not getattr(self, "_twin_verified", False):
-            try:
-                self._rpc("unsafe/bias_deviation")
-            except RuntimeError as e:
-                raise TwinUnavailable(str(e)) from e
-            self._twin_verified = True
-        return RemoteTwinHandle(self)

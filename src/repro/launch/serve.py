@@ -120,7 +120,7 @@ def main(argv=None):
                     help="mapped layers time-sharing each chip; decode "
                          "step i routes to tenant i %% T")
     ap.add_argument("--fleet-driver", default="twin",
-                    choices=["twin", "subprocess"],
+                    choices=["twin", "subprocess", "socket"],
                     help="photonic device transport behind the fleet")
     args = ap.parse_args(argv)
 

@@ -71,7 +71,8 @@ def zo_minimize(loss_fn: Callable[[jax.Array], jax.Array], x0: jax.Array,
         raise ValueError(f"unknown ZO method: {method!r}")
 
     f0 = loss_fn(x0)
-    carry0 = dict(x=x0, f=f0, best_x=x0, best_f=f0, delta=jnp.asarray(cfg.delta0),
+    carry0 = dict(x=x0, f=f0, best_x=x0, best_f=f0,
+                  delta=jnp.asarray(cfg.delta0),
                   m=jnp.zeros_like(x0), t=jnp.asarray(0))
 
     def body(carry, key_t):

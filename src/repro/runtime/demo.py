@@ -240,9 +240,10 @@ def main(argv=None) -> int:
                     help="mapped layers time-sharing each chip "
                          "(per-layer Σ banks + partial recalibration)")
     ap.add_argument("--driver", default="twin",
-                    choices=["twin", "subprocess"],
-                    help="device transport: in-process twin or "
-                         "JSON-over-pipe out-of-process twin (HIL shape)")
+                    choices=["twin", "subprocess", "socket"],
+                    help="device transport: in-process twin, "
+                         "JSON-over-pipe out-of-process twin (HIL "
+                         "shape), or the same protocol over TCP")
     ap.add_argument("--policy", default="drift_aware",
                     choices=["drift_aware", "least_served"],
                     help="dispatch ranking policy")

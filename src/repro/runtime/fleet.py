@@ -96,7 +96,7 @@ class RuntimeConfig:
     probe_every: int = 10        # ticks between health checks per chip
     recal_latency: int = 4       # ticks a recal job occupies the chip
     max_concurrent_recals: int = 1  # repair-slot bandwidth
-    driver_kind: str = "twin"    # "twin" | "subprocess" (hw.make_driver)
+    driver_kind: str = "twin"    # "twin"|"subprocess"|"socket" (make_driver)
     router_policy: str = "drift_aware"  # | "least_served"
 
 
@@ -337,7 +337,10 @@ class FleetRouter:
     def tick(self, dt: float = 1.0) -> None:
         """Advance virtual time: every chip's clock runs, due probes
         fire, alarms raise, out-of-band recalibration jobs schedule and
-        complete."""
+        complete.  ``driver.advance`` is result-less, so on stream
+        transports it pipelines client-side — a tick with no due probe
+        costs zero round-trips, and the queued advances land (in order)
+        inside the next probe's / serve's batch frame."""
         cfg = self.cfg
         self.tick_count += 1
         in_repair = sum(c.status == RECALIBRATING for c in self.chips)
@@ -371,7 +374,10 @@ class FleetRouter:
 
     def _probe(self, chip: Chip) -> None:
         """One shared probe stream, scored per tenant (B·n_probes PTC
-        calls total — same light as a whole-chip check)."""
+        calls total — same light as a whole-chip check).  On stream
+        transports this is ONE batched RPC per chip: the probe forward
+        flushes the pipelined clock advances queued by :meth:`tick` in
+        the same wire frame."""
         cfg = self.cfg
         ests = probe_tenant_distances(
             self._next_key(), chip.driver,

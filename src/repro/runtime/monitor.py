@@ -107,6 +107,13 @@ def probe_tenant_distances(key: jax.Array, driver,
     tenant's estimate is scored against its own targets over its own
     block slice, so a fleet health check costs the same as the old
     whole-chip probe while yielding per-tenant resolution.
+
+    Wire cost: ONE batched RPC per chip.  The single ``forward`` is the
+    probe stream's only observable op, and on the stream transports it
+    auto-flushes any pipelined clock advances / writes ahead of itself
+    in the same v3 ``batch`` frame — a fleet health sweep therefore
+    costs one round-trip per chip regardless of how many ticks elapsed
+    since the last probe.
     """
     k = driver.k
     x = jax.random.normal(key, (n_probes, k))

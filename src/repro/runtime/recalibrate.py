@@ -38,7 +38,12 @@ not the chip's.
 
 Every device interaction goes through the
 :class:`~repro.hw.driver.PhotonicDriver` boundary; the job's probe
-budget is the driver's metered PTC-call delta.
+budget is the driver's metered PTC-call delta.  The whole job is a
+*batched* interaction (protocol v3): the meter snapshot, warm ZO job,
+Σ read, and OSP basis readback ship as one ``driver.run_batch`` round
+trip, and the trailing Σ write rides the stream transports' write
+pipeline into the closing meter read — two RPCs end-to-end where the
+v2 loop paid seven, with bit-identical results by construction.
 """
 
 from __future__ import annotations
@@ -118,33 +123,42 @@ def recalibrate(key: jax.Array, driver, w_blocks: jax.Array,
     k = driver.k
     b = w_blocks.shape[0]
     t = un.mesh_spec(k, driver.kind).n_rot
-    calls0 = driver.stats.total
 
     # the monitor's estimate at alarm time doubles as dist_before — no
     # point paying a B·k readout just to restate what tripped the alarm
     if dist_hint is not None:
         dist_before = jnp.asarray(float(dist_hint), jnp.float32)
+        pre_ops = [("stats", {})]
     else:
+        calls0 = driver.stats.total
         dist_before = readout_mapping_distance(driver, w_blocks,
                                                block_range=block_range)
+        pre_ops = []
 
     steps = cfg.zo_steps
     if cfg.auto_budget:
         steps = autotune_zo_steps(float(dist_before), cfg, t)
 
     # Stage 1 — incremental ZO, warm-started from the current phases
-    # (an on-controller job: per-probe round trips would defeat in-situ).
+    # (an on-controller job: per-probe round trips would defeat in-situ),
+    # batched with the meter snapshot, Σ read, and the OSP basis readback
+    # into ONE driver round-trip (the hot-path RPC of the closed loop).
     zo_cfg = ZOConfig(steps=steps, inner=cfg.inner or 2 * t,
                       delta0=cfg.delta0, decay=cfg.decay)
     kz, ks = jax.random.split(key)
-    res = driver.zo_refine(w_blocks, kz, zo_cfg, method=cfg.method,
-                           block_range=block_range)
+    out = driver.run_batch(pre_ops + [
+        ("zo_refine", dict(w_blocks=w_blocks, key=kz, cfg=zo_cfg,
+                           method=cfg.method, block_range=block_range)),
+        ("read_sigma", {}),
+        ("readback_bases", dict(block_range=block_range)),
+    ])
+    if pre_ops:
+        calls0 = out[0].total
+    res, sigma, (u, v) = out[-3], out[-2], out[-1]
     phi_new = res.phi
 
-    sigma = driver.read_sigma()
     if block_range is not None:
         sigma = sigma[block_range[0]:block_range[1]]
-    u, v = driver.readback_bases(block_range=block_range)
     dist_after_zo = aggregate_distance((u * sigma[..., None, :]) @ v,
                                        w_blocks)
 

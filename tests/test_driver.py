@@ -1,15 +1,21 @@
 """PhotonicDriver conformance suite.
 
-Parametrized over the two shipped transports (in-process ``TwinDriver``
-and JSON-over-pipe ``SubprocessDriver``): a scripted control-plane
-session must produce *bit-identical* results on both — same physics,
-same seeds, same backend — and the PTC-call meter must charge exactly
-the Appendix-G costs.  The tenant-addressable session exercises every
+Parametrized over the three shipped transports (in-process
+``TwinDriver``, JSON-over-pipe ``SubprocessDriver``, and TCP
+``SocketDriver``): a scripted control-plane session must produce
+*bit-identical* results on all — same physics, same seeds, same
+backend — and the PTC-call meter must charge exactly the Appendix-G
+costs (including ops shipped inside a v3 ``batch`` frame, which are
+metered individually).  The tenant-addressable session exercises every
 ``block_range``-scoped op (v2 protocol surface) the same way, including
 scoped-write/whole-read consistency.  Plus the guard test: control-plane
 modules (``repro.runtime``, ``core.calibration``, ``core.mapping``)
 must never touch twin internals except through the audited
 ``unsafe_twin()`` escape hatch.
+
+(Protocol v3 framing — batch round-trips, pipelining flush order,
+malformed/oversized-frame rejection — is covered by
+``tests/test_protocol_v3.py``.)
 """
 
 import re
@@ -34,7 +40,8 @@ M = N = 6
 B = (M // K) * (N // K)          # 4 blocks
 MODEL = DEFAULT_NOISE.post_ic()
 DRIFT = DriftConfig(sigma_phase=0.03, theta=0.01)
-TRANSPORTS = ["twin", "subprocess"]
+TRANSPORTS = ["twin", "subprocess", "socket"]
+STREAM_TRANSPORTS = ["subprocess", "socket"]
 
 KEY = jax.random.PRNGKey(42)
 
@@ -210,16 +217,18 @@ def test_block_range_bounds_rejected(transport):
         driver.close()
 
 
-def test_protocol_version_handshake_rejects_mismatch():
-    """A v1 client (no / wrong version field) is refused by the v2
-    server — no silent fallback onto a surface it would misread."""
+@pytest.mark.parametrize("peer_version", [1, 2])
+def test_protocol_version_handshake_rejects_mismatch(peer_version):
+    """A v1 or v2 client is refused by the v3 server — no silent
+    fallback onto a surface it would misread (a v2 peer would treat a
+    ``batch`` frame as an unknown op mid-session)."""
     import io
     from repro.hw.protocol import encode, PROTOCOL_VERSION
     from repro.hw.server import serve
 
-    assert PROTOCOL_VERSION == 2
+    assert PROTOCOL_VERSION == 3
     req = {"id": 1, "op": "init", "kw": encode(dict(
-        v=1, key=np.zeros(2, np.uint32), n_blocks=B, k=K,
+        v=peer_version, key=np.zeros(2, np.uint32), n_blocks=B, k=K,
         model=dict(), drift=None))}
     import json as _json
     fin = io.StringIO(_json.dumps(req) + "\n")
@@ -228,6 +237,28 @@ def test_protocol_version_handshake_rejects_mismatch():
     resp = _json.loads(fout.getvalue().splitlines()[0])
     assert resp["ok"] is False
     assert "protocol mismatch" in resp["error"]
+
+
+@pytest.mark.parametrize("transport", TRANSPORTS)
+def test_batch_ops_metered_individually(transport):
+    """PTC-call metering counts every op INSIDE a batch frame at its
+    full Appendix-G charge — one batch ≠ one PTC call (regression: a
+    transport must not meter the frame instead of its ops)."""
+    driver = _mk(transport)
+    try:
+        driver.reset_stats()
+        x = jnp.ones((5, K))
+        _ = driver.run_batch([
+            ("forward", dict(x=x)),
+            ("forward", dict(x=x)),
+            ("forward", dict(x=x, block_range=(0, 3))),
+            ("readback_bases", {}),
+        ])
+        s = driver.stats
+        assert s.probe == 2 * B * 5 + 3 * 5       # each forward charged
+        assert s.readback == 2 * B * K
+    finally:
+        driver.close()
 
 
 @pytest.mark.parametrize("transport", TRANSPORTS)

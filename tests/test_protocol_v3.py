@@ -1,0 +1,473 @@
+"""Protocol v3 framing + batched data-plane tests.
+
+Covers the wire layer the conformance suite assumes: encode/decode
+round-trips, malformed- and oversized-frame rejection, the ``batch``
+frame's semantics (ordered execution, per-op results, index-named
+failures, no nested control ops), client-side write pipelining (flush
+order and round-trip counts), and batched ≡ sequential bit-identity on
+both stream transports.
+"""
+
+import io
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.noise import DEFAULT_NOISE
+from repro.hw import make_driver, make_twin
+from repro.hw.drift import DriftConfig
+from repro.hw.protocol import (encode, decode, send, recv, ProtocolError,
+                               PROTOCOL_VERSION, MAX_FRAME_BYTES)
+from repro.hw.server import serve
+from repro.optim.zo import ZOConfig
+
+K = 3
+M = N = 6
+B = (M // K) * (N // K)
+MODEL = DEFAULT_NOISE.post_ic()
+DRIFT = DriftConfig(sigma_phase=0.03, theta=0.01)
+KEY = jax.random.PRNGKey(42)
+STREAM_TRANSPORTS = ["subprocess", "socket"]
+
+
+def _mk(transport):
+    return make_driver(transport, KEY, B, K, MODEL, m=M, n=N, drift=DRIFT)
+
+
+# ---------------------------------------------------------------------------
+# framing
+# ---------------------------------------------------------------------------
+
+def test_encode_decode_roundtrip_bit_exact():
+    """Arrays of every dtype the drivers ship survive the wire exactly;
+    nested trees keep their structure."""
+    rng = np.random.default_rng(0)
+    tree = dict(
+        f32=rng.standard_normal((3, 4)).astype(np.float32),
+        f64=rng.standard_normal((2, 2)),
+        u32=np.arange(6, dtype=np.uint32).reshape(2, 3),
+        i64=np.asarray([-5, 9]),
+        scalars=[1, 2.5, True, None, "s"],
+        nested=dict(x=[np.float32(1.25) * np.ones((1, 1), np.float32)]),
+    )
+    out = decode(json.loads(json.dumps(encode(tree))))
+    for name in ("f32", "f64", "u32", "i64"):
+        assert out[name].dtype == tree[name].dtype
+        np.testing.assert_array_equal(out[name], tree[name])
+    assert out["scalars"] == [1, 2.5, True, None, "s"]
+    np.testing.assert_array_equal(out["nested"]["x"][0],
+                                  tree["nested"]["x"][0])
+
+
+def test_send_recv_roundtrip():
+    buf = io.StringIO()
+    msg = dict(id=3, op="forward", kw=encode(dict(x=np.eye(2, dtype=np.float32))))
+    send(buf, msg)
+    buf.seek(0)
+    got = recv(buf)
+    assert got["id"] == 3 and got["op"] == "forward"
+    np.testing.assert_array_equal(decode(got["kw"])["x"],
+                                  np.eye(2, dtype=np.float32))
+
+
+def test_recv_rejects_malformed_frame():
+    with pytest.raises(ProtocolError, match="malformed"):
+        recv(io.StringIO("this is not json\n"))
+
+
+def test_recv_rejects_oversized_frame_without_buffering_it():
+    line = json.dumps(dict(id=1, op="x", kw={"pad": "y" * 4096})) + "\n"
+    with pytest.raises(ProtocolError, match="oversized"):
+        recv(io.StringIO(line), max_bytes=1024)
+    # a frame exactly at the ceiling still parses
+    small = json.dumps(dict(id=1, op="x")) + "\n"
+    assert recv(io.StringIO(small), max_bytes=len(small))["op"] == "x"
+
+
+def test_send_refuses_oversized_frame():
+    big = np.zeros(MAX_FRAME_BYTES // 4 + 1024, np.float32)
+    with pytest.raises(ProtocolError, match="oversized"):
+        send(io.StringIO(), dict(id=1, op="write_sigma",
+                                 kw=encode(dict(sigma=big))))
+
+
+def test_server_answers_malformed_payloads_without_dying():
+    """Valid JSON that is not a valid request — a non-dict frame, or a
+    corrupt __nd__ payload — draws an error frame and the session keeps
+    serving (a socket daemon must survive one bad client frame)."""
+    bad_nd = dict(id=1, op="init", kw={"key": {"__nd__": "!!!",
+                                               "dtype": "float32",
+                                               "shape": [1]}})
+    resp = _serve_script(bad_nd, _init_msg(rid=2))
+    assert resp[0]["ok"] is False
+    assert resp[1]["ok"] is True                  # session survived
+
+    fin = io.StringIO("5\n" + json.dumps(_init_msg(rid=2)) + "\n")
+    fout = io.StringIO()
+    serve(fin, fout)
+    frames = [json.loads(l) for l in fout.getvalue().splitlines()]
+    assert frames[0]["ok"] is False
+    assert frames[1]["ok"] is True
+
+
+@pytest.mark.parametrize("transport", ["subprocess"])
+def test_charge_category_validated_at_call_site(transport):
+    """A typo'd meter category raises ValueError when charge() is
+    called, not as a server error at some later flush (or never, if the
+    driver closes first)."""
+    driver = _mk(transport)
+    try:
+        with pytest.raises(ValueError, match="category"):
+            driver.charge("prob", 64.0)
+        with pytest.raises(ValueError, match="category"):
+            driver.forward(jnp.ones((2, K)), category="bogus")
+        driver.charge("probe", 1.5)               # valid still queues
+        assert driver.stats.probe == 1.5
+    finally:
+        driver.close()
+
+
+def test_server_rejects_malformed_frame_and_drops_connection():
+    """A garbage line draws an explicit error frame, then the server
+    stops serving the (desynced) stream instead of guessing."""
+    fin = io.StringIO("not json at all\n"
+                      + json.dumps(dict(id=2, op="stats", kw={})) + "\n")
+    fout = io.StringIO()
+    serve(fin, fout)
+    frames = [json.loads(l) for l in fout.getvalue().splitlines()]
+    assert len(frames) == 1                      # second frame never served
+    assert frames[0]["ok"] is False
+    assert "protocol error" in frames[0]["error"]
+
+
+# ---------------------------------------------------------------------------
+# batch frame semantics (in-process server, no subprocess cost)
+# ---------------------------------------------------------------------------
+
+def _serve_script(*msgs):
+    fin = io.StringIO("".join(json.dumps(m) + "\n" for m in msgs))
+    fout = io.StringIO()
+    serve(fin, fout)
+    return [json.loads(l) for l in fout.getvalue().splitlines()]
+
+
+def _init_msg(rid=1):
+    import dataclasses
+    return dict(id=rid, op="init", kw=encode(dict(
+        v=PROTOCOL_VERSION, key=np.asarray(KEY), n_blocks=B, k=K,
+        m=M, n=N, model=dataclasses.asdict(MODEL), drift=None)))
+
+
+def test_batch_executes_in_order_and_returns_per_op_results():
+    x = np.ones((2, K), np.float32)
+    resp = _serve_script(
+        _init_msg(),
+        dict(id=2, op="batch", kw=encode(dict(ops=[
+            dict(op="advance", kw=dict(dt=1.0)),
+            dict(op="forward", kw=dict(x=x)),
+            dict(op="stats", kw={}),
+        ]))))
+    assert resp[1]["ok"] is True
+    results = decode(resp[1]["result"])
+    assert results[0] is None                    # advance: result-less
+    assert results[1]["y"].shape == (B, 2, K)
+    assert results[2]["probe"] == B * 2          # forward metered inside
+
+
+def test_batch_failure_names_index_and_keeps_prior_ops_applied():
+    x = np.ones((2, K), np.float32)
+    resp = _serve_script(
+        _init_msg(),
+        dict(id=2, op="batch", kw=encode(dict(ops=[
+            dict(op="forward", kw=dict(x=x)),
+            dict(op="forward", kw=dict(x=x, block_range=[0, B + 7])),
+        ]))),
+        dict(id=3, op="stats", kw={}))
+    assert resp[1]["ok"] is False
+    assert "batch op 1" in resp[1]["error"]
+    # op 0 executed (and was charged) before op 1 failed
+    assert decode(resp[2]["result"])["probe"] == B * 2
+
+
+@pytest.mark.parametrize("nested", ["init", "shutdown", "batch",
+                                    "unsafe/dev", "meta"])
+def test_control_ops_cannot_nest_inside_batch(nested):
+    resp = _serve_script(
+        _init_msg(),
+        dict(id=2, op="batch",
+             kw=encode(dict(ops=[dict(op=nested, kw={})]))))
+    assert resp[1]["ok"] is False
+    assert "cannot appear inside a batch" in resp[1]["error"]
+
+
+# ---------------------------------------------------------------------------
+# batched ≡ sequential bit-identity + pipelining, on real transports
+# ---------------------------------------------------------------------------
+
+def _sequential_session(driver):
+    """The reference encoding: every op its own round-trip shape."""
+    rng = np.random.default_rng(3)
+    t = driver.read_phases()[0].shape[-1]
+    pu = jnp.asarray(rng.uniform(0, 1, (B, t)), jnp.float32)
+    pv = jnp.asarray(rng.uniform(0, 1, (B, t)), jnp.float32)
+    sg = jnp.asarray(rng.uniform(0.5, 1.5, (B, K)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((4, K)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((B, K, K)) * 0.4, jnp.float32)
+    cfg = ZOConfig(steps=15, inner=6, delta0=0.1, decay=1.05)
+
+    out = {}
+    driver.write_phases(pu, pv)
+    driver.write_sigma(sg)
+    driver.advance(1.0)
+    driver.advance(1.0)
+    out["fwd"] = driver.forward(x)
+    res = driver.zo_refine(w, jax.random.PRNGKey(5), cfg)
+    out["zo_phi"], out["zo_loss"] = res.phi, res.loss
+    out["sigma"] = driver.read_sigma()
+    out["u"], out["v"] = driver.readback_bases()
+    out["stats"] = driver.stats.as_dict()
+    return out
+
+
+def _batched_session(driver):
+    """The same ops, same order, shipped as explicit batches."""
+    rng = np.random.default_rng(3)
+    t = driver.read_phases()[0].shape[-1]
+    pu = jnp.asarray(rng.uniform(0, 1, (B, t)), jnp.float32)
+    pv = jnp.asarray(rng.uniform(0, 1, (B, t)), jnp.float32)
+    sg = jnp.asarray(rng.uniform(0.5, 1.5, (B, K)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((4, K)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((B, K, K)) * 0.4, jnp.float32)
+    cfg = ZOConfig(steps=15, inner=6, delta0=0.1, decay=1.05)
+
+    out = {}
+    fwd, zo, sigma, (u, v), stats = driver.run_batch([
+        ("write_phases", dict(phi_u=pu, phi_v=pv)),
+        ("write_sigma", dict(sigma=sg)),
+        ("advance", dict(dt=1.0)),
+        ("advance", dict(dt=1.0)),
+        ("forward", dict(x=x)),
+        ("zo_refine", dict(w_blocks=w, key=jax.random.PRNGKey(5), cfg=cfg)),
+        ("read_sigma", {}),
+        ("readback_bases", {}),
+        ("stats", {}),
+    ])[4:]
+    out["fwd"] = fwd
+    out["zo_phi"], out["zo_loss"] = zo.phi, zo.loss
+    out["sigma"] = sigma
+    out["u"], out["v"] = u, v
+    out["stats"] = stats.as_dict()
+    return out
+
+
+@pytest.mark.parametrize("transport", STREAM_TRANSPORTS)
+def test_batched_equals_sequential_bit_identical(transport):
+    """One batch frame ≡ the op-per-frame encoding ≡ the in-process
+    twin, bit for bit, on both stream transports."""
+    ref = _sequential_session(make_twin(KEY, B, K, MODEL, m=M, n=N,
+                                        drift=DRIFT))
+    d_seq = _mk(transport)
+    try:
+        seq = _sequential_session(d_seq)
+    finally:
+        d_seq.close()
+    d_bat = _mk(transport)
+    try:
+        bat = _batched_session(d_bat)
+        n_frames = d_bat._rpc_count
+    finally:
+        d_bat.close()
+    for name in ("fwd", "zo_phi", "zo_loss", "sigma", "u", "v"):
+        np.testing.assert_array_equal(np.asarray(ref[name]),
+                                      np.asarray(seq[name]), err_msg=name)
+        np.testing.assert_array_equal(np.asarray(ref[name]),
+                                      np.asarray(bat[name]), err_msg=name)
+    assert ref["stats"] == seq["stats"] == bat["stats"]
+    # init + read_phases + ONE batch frame
+    assert n_frames == 3
+
+
+@pytest.mark.parametrize("transport", STREAM_TRANSPORTS)
+def test_write_pipelining_flushes_before_reads_in_one_frame(transport):
+    """Result-less ops queue client-side (zero round-trips) and land,
+    in issue order, inside the next observable op's frame."""
+    driver = _mk(transport)
+    try:
+        rng = np.random.default_rng(1)
+        t = driver.read_phases()[0].shape[-1]
+        frames0 = driver._rpc_count
+        pu = jnp.asarray(rng.uniform(0, 1, (B, t)), jnp.float32)
+        pv = jnp.asarray(rng.uniform(0, 1, (B, t)), jnp.float32)
+        driver.write_phases(pu, pv)
+        driver.advance(1.0)
+        driver.charge("probe", 2.5)
+        assert driver._rpc_count == frames0      # nothing sent yet
+        ru, rv = driver.read_phases()            # flush + read: one frame
+        assert driver._rpc_count == frames0 + 1
+        np.testing.assert_array_equal(np.asarray(ru), np.asarray(pu))
+        assert driver.stats.probe == 2.5         # charge landed before read
+    finally:
+        driver.close()
+
+
+@pytest.mark.parametrize("transport", STREAM_TRANSPORTS)
+def test_pipelined_write_validates_at_call_site(transport):
+    """Client-side geometry validation keeps ValueError at the call
+    site even though the write itself is deferred — for both the block
+    range and the written bank's size (a bad bank must not surface as a
+    server error at some later flush, or vanish in close())."""
+    driver = _mk(transport)
+    try:
+        with pytest.raises(ValueError):
+            driver.write_sigma(jnp.ones((2, K)), block_range=(0, B + 1))
+        with pytest.raises(ValueError, match="elements"):
+            driver.write_sigma(jnp.ones((B, K + 1)))
+        t = K * (K - 1) // 2
+        with pytest.raises(ValueError, match="elements"):
+            driver.write_phases(jnp.ones((B, t + 1)), jnp.ones((B, t + 1)))
+        # the session is still healthy after rejected writes
+        assert driver.read_sigma().shape == (B, K)
+    finally:
+        driver.close()
+
+
+def test_oversized_aggregate_frame_splits_transparently(monkeypatch):
+    """Ops that are individually legal must not fail because pipelining
+    packed them into one over-limit frame: the client halves the list
+    (send() refuses BEFORE writing, so no op ran twice)."""
+    from repro.hw import protocol
+
+    driver = _mk("subprocess")
+    try:
+        rng = np.random.default_rng(2)
+        t = driver.read_phases()[0].shape[-1]
+        pu = jnp.asarray(rng.uniform(0, 1, (B, t)), jnp.float32)
+        pv = jnp.asarray(rng.uniform(0, 1, (B, t)), jnp.float32)
+        # client-side limit only (the unpatched server still speaks
+        # 64 MiB): each write frame is a few hundred bytes, several
+        # together overflow 1200
+        monkeypatch.setattr(protocol, "MAX_FRAME_BYTES", 1200)
+        frames0 = driver._rpc_count
+        for _ in range(6):
+            driver.write_phases(pu, pv)
+        ru, _ = driver.read_phases()      # flush: must split, not fail
+        assert driver._rpc_count - frames0 > 1
+        np.testing.assert_array_equal(np.asarray(ru), np.asarray(pu))
+    finally:
+        monkeypatch.undo()
+        driver.close()
+
+
+def test_run_batch_error_notes_pipelined_head_offset():
+    """A server-side batch failure whose frame carried pipelined writes
+    tells the caller how to translate the reported index."""
+    driver = _mk("subprocess")
+    try:
+        cfg = ZOConfig(steps=5, inner=5, delta0=0.1, decay=1.05)
+        driver.advance(1.0)               # pipelined head of 1
+        with pytest.raises(RuntimeError, match="pipelined write"):
+            driver.run_batch([
+                ("forward", dict(x=jnp.ones((2, K)))),
+                ("zo_refine", dict(w_blocks=jnp.ones((B, K, K, 2)),
+                                   key=jax.random.PRNGKey(0), cfg=cfg)),
+            ])
+    finally:
+        driver.close()
+
+
+@pytest.mark.parametrize("transport", ["twin"] + STREAM_TRANSPORTS)
+@pytest.mark.parametrize("name", ["close", "unsafe_twin", "_slice", "nope"])
+def test_run_batch_rejects_non_batchable_ops_on_every_transport(transport,
+                                                                name):
+    """Lifecycle ops and private internals are rejected by run_batch on
+    EVERY transport — a list that works in-process must work over the
+    wire and vice versa (regression: getattr dispatch used to accept
+    anything in-process)."""
+    driver = _mk(transport)
+    try:
+        with pytest.raises(ValueError, match="batch"):
+            driver.run_batch([(name, {})])
+    finally:
+        driver.close()
+
+
+@pytest.mark.parametrize("transport", ["twin"] + STREAM_TRANSPORTS)
+def test_coalesced_probe_sweep_bit_identical_and_metered(transport):
+    """A batch of same-shape forwards (the probe-sweep shape) coalesces
+    into one vmapped device call — results must stay bit-identical to
+    sequential execution and every op must be charged individually."""
+    rng = np.random.default_rng(9)
+    xs = [jnp.asarray(rng.standard_normal((6, K)), jnp.float32)
+          for _ in range(10)]
+
+    d_seq = _mk(transport)
+    try:
+        d_seq.reset_stats()
+        seq = [np.asarray(d_seq.forward(x)) for x in xs]
+        seq_stats = d_seq.stats.as_dict()
+    finally:
+        d_seq.close()
+
+    d_bat = _mk(transport)
+    try:
+        d_bat.reset_stats()
+        bat = d_bat.run_batch([("forward", dict(x=x)) for x in xs])
+        bat_stats = d_bat.stats.as_dict()
+    finally:
+        d_bat.close()
+
+    for s, g in zip(seq, bat):
+        np.testing.assert_array_equal(s, np.asarray(g))
+    assert seq_stats == bat_stats
+    assert bat_stats["probe"] == 10 * 6 * B
+
+
+@pytest.mark.parametrize("transport", STREAM_TRANSPORTS)
+def test_unsafe_readout_flushes_pipelined_writes_first(transport):
+    """unsafe/* ops are not batchable, so a pending pipelined write
+    must flush in its own frame first — and still land BEFORE the
+    readout (regression: the whitelist briefly made unsafe_twin()
+    unusable while advances were queued)."""
+    twin = make_twin(KEY, B, K, MODEL, m=M, n=N, drift=DRIFT)
+    twin.advance(1.0)
+    ref = twin.unsafe_twin().bias_deviation()
+    driver = _mk(transport)
+    try:
+        driver.advance(1.0)               # queued client-side
+        got = driver.unsafe_twin().bias_deviation()
+    finally:
+        driver.close()
+    assert got == ref                     # advance landed first
+
+
+def test_socket_driver_explicit_address():
+    """A SocketDriver can attach to an already-running --socket server
+    (the remote-host topology), not just self-host one."""
+    import subprocess, sys, time
+    from repro.hw.socket_driver import SocketDriver
+    from repro.hw.subprocess_driver import server_env
+
+    proc = subprocess.Popen(
+        [sys.executable, "-u", "-m", "repro.hw.server",
+         "--socket", "127.0.0.1:0", "--max-conns", "1"],
+        stdout=subprocess.PIPE, stderr=subprocess.DEVNULL, text=True,
+        env=server_env())
+    try:
+        line = proc.stdout.readline()
+        assert line.startswith("LISTENING ")
+        port = int(line.split()[1])
+        d = SocketDriver(KEY, B, K, MODEL, m=M, n=N,
+                         address=("127.0.0.1", port))
+        try:
+            y = d.forward(jnp.ones((2, K)))
+            assert y.shape == (B, 2, K)
+        finally:
+            d.close()
+        proc.wait(timeout=10)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait(timeout=5)
