@@ -84,7 +84,8 @@ import numpy as np
 __all__ = ["DriverStats", "PhotonicDriver", "ZORefineResult", "ICJobResult",
            "TwinUnavailable", "probe_cost", "readback_cost",
            "readout_blocks", "resolve_block_range", "BATCHABLE_OPS",
-           "STAT_CATEGORIES", "forward_coalesce_key", "coalesce_spans"]
+           "STAT_CATEGORIES", "forward_coalesce_key", "coalesce_spans",
+           "validate_batch_ops"]
 
 # the PTC meter's categories (DriverStats fields a charge may land in)
 STAT_CATEGORIES = frozenset(["serve", "probe", "readback", "search"])
@@ -126,6 +127,22 @@ def coalesce_spans(keys: list) -> "list[tuple[int, int]]":
         spans.append((i, j + 1))
         i = j + 1
     return spans
+
+
+def validate_batch_ops(ops) -> None:
+    """Reject a batched op list BEFORE executing anything: the stream
+    transports validate at encode time (nothing ships), so the
+    in-process dispatchers must not apply earlier ops and then die
+    mid-list where the wire encoding would have refused up front."""
+    for name, kw in ops:
+        if name not in BATCHABLE_OPS:
+            raise ValueError(
+                f"op {name!r} cannot appear inside a batch")
+        if kw.get("category") is not None \
+                and kw["category"] not in STAT_CATEGORIES:
+            raise ValueError(
+                f"{name}: unknown PTC-meter category "
+                f"{kw['category']!r} (one of {sorted(STAT_CATEGORIES)})")
 
 
 class TwinUnavailable(RuntimeError):
@@ -200,6 +217,14 @@ class DriverStats:
                     total=self.total)
 
     def charge(self, category: str, calls: float) -> None:
+        # same call-site error the stream transports raise from their
+        # wire encoder — a bad category must not diverge by transport
+        # (ValueError here vs AttributeError there) or slip through as
+        # a new attribute on the stats object
+        if category not in STAT_CATEGORIES:
+            raise ValueError(
+                f"unknown PTC-meter category {category!r} "
+                f"(one of {sorted(STAT_CATEGORIES)})")
         setattr(self, category, getattr(self, category) + float(calls))
 
 
@@ -380,11 +405,9 @@ class PhotonicDriver(abc.ABC):
         metered individually, so results are bit-identical across
         encodings.
         """
+        validate_batch_ops(ops)
         out = []
         for name, kw in ops:
-            if name not in BATCHABLE_OPS:
-                raise ValueError(
-                    f"op {name!r} cannot appear inside a batch")
             if name == "stats":
                 s = self.stats
                 out.append(DriverStats(serve=s.serve, probe=s.probe,

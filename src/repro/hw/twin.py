@@ -31,7 +31,8 @@ from .drift import DriftConfig, DriftState, init_drift, advance, \
     bias_deviation
 from .driver import (PhotonicDriver, DriverStats, ZORefineResult, ICJobResult,
                      probe_cost, readback_cost, resolve_block_range,
-                     forward_coalesce_key, coalesce_spans)
+                     forward_coalesce_key, coalesce_spans,
+                     validate_batch_ops)
 
 __all__ = ["TwinDriver", "TwinHandle", "make_twin"]
 
@@ -333,6 +334,7 @@ class TwinDriver(PhotonicDriver):
         op happened to coalesce with its neighbors — matching the
         stream transports — so a result's type never depends on an
         invisible batching detail."""
+        validate_batch_ops(ops)
         keys = [forward_coalesce_key(kw) if name == "forward" else None
                 for name, kw in ops]
         out = []

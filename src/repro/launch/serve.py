@@ -15,14 +15,28 @@ mapped layers (per-layer Σ banks), and each decode step's PTC traffic
 is routed to a (chip, tenant) slot — step ``i`` exercises tenant
 ``i mod T``, the round-robin a T-layer model would drive — so a single
 drifted layer triggers *partial* recalibration of its own blocks only.
-The LM math itself stays on the digital twin; the fleet models the
-photonic boards' device state, health, and routing — every decode step
-is routed through one chip's *drifted* transfer function and accounted.
+In this mode the LM math itself stays on the digital twin; the fleet
+models the photonic boards' device state, health, and routing.
+
+``--hw-logits`` goes the rest of the way: the served model's own PTC
+layers deploy onto the fleet chips (one tenant per layer, via
+``core.mapping.parallel_map(block_range=)``), each decode step routes
+the *whole forward pass* to one chip, and every PTC matmul executes
+through ``driver.forward_layer`` against that chip's realized
+(drifted!) transfer — the logits ARE what the photonic hardware
+computes, so accuracy-vs-drift is measurable end to end
+(``benchmarks/e2e_accuracy.py``).  Sibling projections sharing one
+input (q/k/v, gate/up) ship as one v3 ``batch`` frame.  ``--hw-shadow``
+deploys identically but applies the deployment-time readback transfer
+digitally — the twin-path reference that is token-identical to
+``--hw-logits`` at σ_drift = 0 (a conformance gate across all three
+driver transports).
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -30,7 +44,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..data import lm_batch
-from ..models.lm import init_model, init_decode_cache, build_serve_step
+from ..models.lm import (ArchConfig, init_model, init_decode_cache,
+                         build_serve_step)
 from .steps import greedy_decode
 from .train import parse_arch
 
@@ -52,31 +67,100 @@ def _build_fleet(args):
     return FleetRouter(chips, cfg, seed=args.seed), dim, tenants
 
 
+def _hw_runtime_config(args):
+    """Fleet policy for the hw-logits plane: explicit override via
+    ``args.runtime_cfg`` (the accuracy benchmark tunes thresholds), else
+    the demo defaults at the CLI-selected drift/probe cadence."""
+    from ..runtime.demo import default_runtime_config
+
+    cfg = getattr(args, "runtime_cfg", None)
+    if cfg is None:
+        sigma = args.drift_sigma if args.drift else 0.0
+        cfg = default_runtime_config(k=args.fleet_k, sigma_drift=sigma,
+                                     probe_every=args.probe_every,
+                                     driver_kind=args.fleet_driver)
+    if getattr(args, "deploy_zo", False):
+        cfg = dataclasses.replace(cfg, deploy_zo=True)
+    return cfg
+
+
+def _build_hw_plane(args, cfg, params, serve_fn, extras, mode: str):
+    """Enumerate the model's decode-path PTC layers (one dry digital
+    step) and deploy them — one tenant per layer — onto a fresh fleet."""
+    from ..runtime.hw_serve import record_ptc_layers, HwServePlane
+
+    cache0 = init_decode_cache(cfg, args.batch, 2)
+    batch0 = {"token": jnp.zeros((args.batch, 1), jnp.int32),
+              "cache_len": jnp.asarray(0, jnp.int32), **extras}
+    layers = record_ptc_layers(serve_fn, params, cache0, batch0)
+    kf = jax.random.split(jax.random.PRNGKey(args.seed + 17))[1]
+    return HwServePlane(kf, layers, _hw_runtime_config(args), args.fleet,
+                        mode=mode, seed=args.seed,
+                        recal_enabled=not getattr(args, "no_recal", False))
+
+
 def run(args) -> dict:
     """Serve ``args.gen`` tokens (optionally through the fleet runtime)
-    and return the outcome: generated tokens plus the router's report —
-    the seeded-regression surface the e2e test locks down."""
-    cfg = parse_arch(args.arch)
-    key = jax.random.PRNGKey(args.seed)
-    params = init_model(key, cfg)
-    max_len = args.prompt_len + args.gen
-    cache = init_decode_cache(cfg, args.batch, max_len)
-    serve = jax.jit(build_serve_step(cfg))
+    and return the outcome: generated tokens, per-step argmax
+    predictions, plus the router's report — the seeded-regression
+    surface the e2e tests lock down."""
+    cfg = (args.arch if isinstance(args.arch, ArchConfig)
+           else parse_arch(args.arch))
+    hw_mode = None
+    if getattr(args, "hw_logits", False):
+        hw_mode = "route"
+    if getattr(args, "hw_shadow", False):
+        if hw_mode is not None:
+            raise ValueError("--hw-logits and --hw-shadow are exclusive")
+        hw_mode = "shadow"
+    if hw_mode is not None:
+        if args.fleet <= 0:
+            raise ValueError("--hw-logits/--hw-shadow need --fleet N chips")
+        if cfg.n_experts > 0:
+            # expert FFNs execute under jax.vmap, where the layer hook
+            # is structurally inert (tracer guard) — serving them would
+            # silently leave the dominant FFN compute digital while
+            # claiming hardware logits.  Refuse until stacked-factor
+            # tenants land (ROADMAP: hw-logits for MoE experts).
+            raise ValueError(
+                f"--hw-logits/--hw-shadow do not support MoE archs yet "
+                f"({cfg.name}: {cfg.n_experts} experts run under vmap, "
+                f"unreachable by the PTC execution hook)")
+        # the layer-execution hook needs concrete activations: run the
+        # decode body as an unjitted python loop over periods
+        cfg = dataclasses.replace(cfg, unroll=True, remat=False)
 
-    prompt = lm_batch(args.seed, 0, args.batch, args.prompt_len,
-                      cfg.vocab)["tokens"]
+    params = getattr(args, "params_override", None)
+    if params is None:
+        params = init_model(jax.random.PRNGKey(args.seed), cfg)
+
+    prompt = getattr(args, "prompt_tokens", None)
+    if prompt is None:
+        prompt = lm_batch(args.seed, 0, args.batch, args.prompt_len,
+                          cfg.vocab)["tokens"]
+    else:
+        prompt = np.asarray(prompt, np.int32)
+    prompt_len = int(prompt.shape[1])
+    max_len = prompt_len + args.gen
+    cache = init_decode_cache(cfg, args.batch, max_len)
+    serve_fn = build_serve_step(cfg)
+    serve = serve_fn if hw_mode is not None else jax.jit(serve_fn)
+
     extras = {}
     if cfg.family == "vlm":
         extras["img"] = 0.1 * jnp.ones(
             (args.batch, cfg.n_img_tokens, cfg.d_model), jnp.float32)
     if cfg.family == "encdec":
         extras["enc_out"] = 0.1 * jnp.ones(
-            (args.batch, args.prompt_len, cfg.d_model), jnp.float32)
+            (args.batch, prompt_len, cfg.d_model), jnp.float32)
 
     on_step = None
     router = None
+    plane = None
     report = None
-    if args.fleet > 0:
+    if hw_mode is not None:
+        plane = _build_hw_plane(args, cfg, params, serve_fn, extras, hw_mode)
+    elif args.fleet > 0:
         router, fleet_dim, tenants = _build_fleet(args)
         kx = jax.random.PRNGKey(args.seed + 23)
 
@@ -88,17 +172,31 @@ def run(args) -> dict:
             router.serve(x, tenant=i % tenants)
             router.tick()
 
+    preds: list = []
+    logits_trace: list | None = \
+        [] if getattr(args, "trace_logits", False) else None
     try:
         t0 = time.time()
         gen, cache = greedy_decode(serve, params, cache, prompt, args.gen,
-                                   extras=extras, on_step=on_step)
+                                   extras=extras, on_step=on_step,
+                                   layer_exec=plane, preds_out=preds,
+                                   logits_out=logits_trace)
         dt = time.time() - t0
-        if router is not None:
+        if plane is not None:
+            report = plane.report()
+        elif router is not None:
             report = router.report()
     finally:
+        if plane is not None:
+            plane.close()
         if router is not None:
             router.close()
-    return dict(gen=np.asarray(gen), wall_s=dt, report=report)
+    out = dict(gen=np.asarray(gen), wall_s=dt, report=report,
+               preds=np.stack(preds, axis=1) if preds else
+               np.zeros((args.batch, 0), np.int32))
+    if logits_trace is not None:
+        out["logits"] = np.stack(logits_trace, axis=0)
+    return out
 
 
 def main(argv=None):
@@ -118,10 +216,27 @@ def main(argv=None):
     ap.add_argument("--fleet-dim", type=int, default=18)
     ap.add_argument("--fleet-tenants", type=int, default=1,
                     help="mapped layers time-sharing each chip; decode "
-                         "step i routes to tenant i %% T")
+                         "step i routes to tenant i %% T (synthetic-"
+                         "traffic mode; --hw-logits derives tenants from "
+                         "the model instead)")
     ap.add_argument("--fleet-driver", default="twin",
                     choices=["twin", "subprocess", "socket"],
                     help="photonic device transport behind the fleet")
+    ap.add_argument("--hw-logits", action="store_true",
+                    help="deploy the model's PTC layers onto the fleet "
+                         "(one tenant per layer) and execute every "
+                         "decode-path matmul through the routed chip's "
+                         "realized transfer — logits come from the "
+                         "(drifting) hardware, not the digital twin")
+    ap.add_argument("--hw-shadow", action="store_true",
+                    help="deploy like --hw-logits but serve from the "
+                         "deployment-time readback transfer digitally "
+                         "(the σ=0 token-identity reference path)")
+    ap.add_argument("--deploy-zo", action="store_true",
+                    help="run PM's alternate-ZCD stage at deployment "
+                         "(lower mapping floor for accuracy studies)")
+    ap.add_argument("--no-recal", action="store_true",
+                    help="open loop: alarms fire, nothing recovers")
     args = ap.parse_args(argv)
 
     out = run(args)
@@ -134,15 +249,25 @@ def main(argv=None):
     if rep is not None:
         alarms = sum(c["alarms"] for c in rep["chips"])
         recals = sum(c["recals"] for c in rep["chips"])
-        print(f"fleet: {args.fleet} chips x {max(1, args.fleet_tenants)} "
+        n_tenants = len(rep["chips"][0]["tenants"])
+        print(f"fleet: {args.fleet} chips x {n_tenants} "
               f"tenant(s), {rep['ticks']} ticks, "
               f"{rep['dropped']} dropped, {alarms} alarms, "
               f"{recals} recals")
+        hw = rep.get("hw")
+        if hw is not None:
+            print(f"hw-logits [{hw['mode']}]: {len(hw['layers'])} PTC "
+                  f"layers as tenants, {hw['frames']} driver frames over "
+                  f"{hw['steps']} steps "
+                  f"({hw['frames_per_step']:.1f} frames/step), "
+                  f"{hw['hw_calls']} hw matmuls, "
+                  f"{hw['shadow_calls']} shadow matmuls, "
+                  f"{hw['dropped_passes']} dropped passes")
         for c in rep["chips"]:
             print(f"  chip {c['chip']}: {c['status']:<13} "
                   f"served={c['served']:4d} d̂={c['distance']:.4f} "
                   f"alarms={c['alarms']} recals={c['recals']}")
-            if args.fleet_tenants > 1:
+            if n_tenants > 1:
                 for t in c["tenants"]:
                     print(f"    tenant {t['tenant']} "
                           f"blocks{t['block_range']}: "

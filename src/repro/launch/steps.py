@@ -2,6 +2,7 @@
 
 from __future__ import annotations
 
+import contextlib
 from typing import Callable
 
 import jax.numpy as jnp
@@ -46,7 +47,10 @@ def build_update_step(cfg: ArchConfig, ocfg: AdamWConfig | SGDConfig,
 
 def greedy_decode(serve_step, params, cache, prompt, gen: int,
                   extras: dict | None = None,
-                  on_step: Callable[[int], None] | None = None):
+                  on_step: Callable[[int], None] | None = None,
+                  layer_exec=None,
+                  preds_out: list | None = None,
+                  logits_out: list | None = None):
     """One shared serve path: teacher-forced prefill through the decode
     cache, then greedy generation of ``gen`` tokens.
 
@@ -60,25 +64,51 @@ def greedy_decode(serve_step, params, cache, prompt, gen: int,
     drift/health clock here, so the CLI and the runtime fleet share one
     loop instead of each reimplementing it.
 
+    ``layer_exec`` plugs a layer-execution plane into the loop
+    (:class:`repro.runtime.hw_serve.HwServePlane`): its ``hook`` is
+    installed as the PTC executor for the whole decode and every step
+    body runs inside ``layer_exec.step(i)`` — the decode-path PTC
+    matmuls then run on routed photonic chips, with drift advanced and
+    repairs scheduled between steps.  Requires an *unjitted* serve step
+    built from an ``unroll=True`` config (under a trace the hook is
+    structurally inert and logits would silently stay digital).
+
+    ``preds_out`` / ``logits_out``: optional lists that collect the
+    per-step argmax predictions (B,) / raw logits (B, V) for EVERY
+    decode-path position, prefill included — the teacher-forced
+    accuracy metric and the transport bit-identity gates read these.
+
     Returns ``(generated, cache)`` with ``generated`` (B, gen) numpy.
     """
+    from ..models.layers import ptc_execution
+
     extras = extras or {}
     prompt_len = prompt.shape[1]
     max_len = prompt_len + gen
     tok = jnp.asarray(prompt[:, :1])
     out_tokens = []
-    for i in range(max_len - 1):
-        batch = {"token": tok, "cache_len": jnp.asarray(i, jnp.int32),
-                 **extras}
-        logits, cache = serve_step(params, cache, batch)
-        nxt = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-        if i + 1 < prompt_len:
-            tok = jnp.asarray(prompt[:, i + 1: i + 2])   # teacher-forced
-        else:
-            tok = nxt
-            out_tokens.append(np.asarray(nxt)[:, 0])
-        if on_step is not None:
-            on_step(i)
+    hook_ctx = (ptc_execution(layer_exec.hook) if layer_exec is not None
+                else contextlib.nullcontext())
+    with hook_ctx:
+        for i in range(max_len - 1):
+            batch = {"token": tok, "cache_len": jnp.asarray(i, jnp.int32),
+                     **extras}
+            step_ctx = (layer_exec.step(i) if layer_exec is not None
+                        else contextlib.nullcontext())
+            with step_ctx:
+                logits, cache = serve_step(params, cache, batch)
+            nxt = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            if preds_out is not None:
+                preds_out.append(np.asarray(nxt)[:, 0])
+            if logits_out is not None:
+                logits_out.append(np.asarray(logits))
+            if i + 1 < prompt_len:
+                tok = jnp.asarray(prompt[:, i + 1: i + 2])  # teacher-forced
+            else:
+                tok = nxt
+                out_tokens.append(np.asarray(nxt)[:, 0])
+            if on_step is not None:
+                on_step(i)
     if not out_tokens:        # gen=0: prefill-only run
         return np.zeros((prompt.shape[0], 0), np.int32), cache
     return np.stack(out_tokens, axis=1), cache

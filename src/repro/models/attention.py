@@ -64,11 +64,12 @@ def _project_qkv(p: Params, cfg: AttnCfg, lin: PTCLinearCfg, x, positions,
     """Project (and rope/norm) q from x, k/v from kv_x (defaults to x)."""
     b = x.shape[0]
     kv_x = x if kv_x is None else kv_x
-    q = apply_ptc_linear(p["wq"], x, lin, d_out=cfg.n_heads * cfg.head_dim)
+    q = apply_ptc_linear(p["wq"], x, lin, d_out=cfg.n_heads * cfg.head_dim,
+                         name="wq")
     k = apply_ptc_linear(p["wk"], kv_x, lin,
-                         d_out=cfg.n_kv_heads * cfg.head_dim)
+                         d_out=cfg.n_kv_heads * cfg.head_dim, name="wk")
     v = apply_ptc_linear(p["wv"], kv_x, lin,
-                         d_out=cfg.n_kv_heads * cfg.head_dim)
+                         d_out=cfg.n_kv_heads * cfg.head_dim, name="wv")
     q = q.reshape(b, x.shape[1], cfg.n_heads, cfg.head_dim)
     k = k.reshape(b, kv_x.shape[1], cfg.n_kv_heads, cfg.head_dim)
     v = v.reshape(b, kv_x.shape[1], cfg.n_kv_heads, cfg.head_dim)
@@ -166,7 +167,7 @@ def attention(p: Params, cfg: AttnCfg, lin: PTCLinearCfg, x, positions,
         o = _sdpa(q, k, v, cfg)
     b, s = x.shape[0], x.shape[1]
     o = o.reshape(b, s, cfg.n_heads * cfg.head_dim)
-    return apply_ptc_linear(p["wo"], o, lin, d_out=cfg.d_model)
+    return apply_ptc_linear(p["wo"], o, lin, d_out=cfg.d_model, name="wo")
 
 
 # -- decode (serve path) -----------------------------------------------------
@@ -205,5 +206,5 @@ def decode_attention(p: Params, cfg: AttnCfg, lin: PTCLinearCfg, x, cache,
     w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
     o = jnp.einsum("bhqk,bkhd->bqhd", w, vr)
     o = o.reshape(b, 1, cfg.n_heads * cfg.head_dim)
-    out = apply_ptc_linear(p["wo"], o, lin, d_out=cfg.d_model)
+    out = apply_ptc_linear(p["wo"], o, lin, d_out=cfg.d_model, name="wo")
     return out, {"k": k, "v": v}

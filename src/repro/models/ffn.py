@@ -53,10 +53,10 @@ def init_mlp(key: jax.Array, cfg: FFNCfg, lin: PTCLinearCfg) -> Params:
 
 
 def mlp(p: Params, cfg: FFNCfg, lin: PTCLinearCfg, x: jax.Array) -> jax.Array:
-    g = apply_ptc_linear(p["gate"], x, lin, d_out=cfg.d_ff)
-    u = apply_ptc_linear(p["up"], x, lin, d_out=cfg.d_ff)
+    g = apply_ptc_linear(p["gate"], x, lin, d_out=cfg.d_ff, name="gate")
+    u = apply_ptc_linear(p["up"], x, lin, d_out=cfg.d_ff, name="up")
     return apply_ptc_linear(p["down"], _act(cfg.act, g) * u, lin,
-                            d_out=cfg.d_model)
+                            d_out=cfg.d_model, name="down")
 
 
 # -- MoE ---------------------------------------------------------------------

@@ -9,8 +9,9 @@ compares against.  Embeddings, norms and routers are dense-trainable
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-from typing import Any
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -21,10 +22,70 @@ from ..core.subspace import ptc_linear, SubspaceMasks
 
 __all__ = [
     "PTCLinearCfg", "init_ptc_linear", "apply_ptc_linear", "is_ptc_leaf",
+    "ptc_execution", "ptc_scope", "ptc_scope_name",
     "init_rmsnorm", "rmsnorm", "layernorm_np", "init_layernorm", "layernorm",
     "rotary_cache", "apply_rotary", "softcap", "init_embedding", "embed",
     "trainable_mask", "maybe_constraint",
 ]
+
+
+# -- layer-execution hook ----------------------------------------------------
+#
+# Hardware-in-the-loop serving substitutes a PTC linear's digital matmul
+# with the *realized* transfer of a routed photonic chip
+# (``runtime/hw_serve.py``).  The substitution point is here: while a
+# hook is installed (``ptc_execution``), every *named* factored PTC
+# linear offers its call to the hook first — `hook(name, p, x, cfg,
+# d_out)` returns the layer output ``(..., m)`` computed elsewhere, or
+# ``None`` to fall back to the digital path.  Names are qualified by the
+# enclosing ``ptc_scope`` stack (the serve decode loop pushes
+# ``p{period}.s{sublayer}.attn`` etc.), so one model forward yields a
+# stable, enumerable layer naming that hw tenant placement keys on.
+#
+# The hook only ever fires on concrete (non-traced) inputs: under
+# jit/scan/vmap the call sees tracers and silently stays digital, so a
+# hooked serve loop must run unjitted + unrolled (launch/serve.py does).
+
+_PTC_EXEC_HOOK: Callable | None = None
+_PTC_SCOPE: list[str] = []
+
+
+@contextlib.contextmanager
+def ptc_execution(hook: Callable):
+    """Install ``hook(name, p, x, cfg, d_out) -> y | None`` as the active
+    PTC layer executor for the dynamic extent of the block."""
+    global _PTC_EXEC_HOOK
+    prev, _PTC_EXEC_HOOK = _PTC_EXEC_HOOK, hook
+    try:
+        yield
+    finally:
+        _PTC_EXEC_HOOK = prev
+
+
+@contextlib.contextmanager
+def ptc_scope(name: str):
+    """Push a qualifier onto the PTC layer-name scope stack."""
+    _PTC_SCOPE.append(name)
+    try:
+        yield
+    finally:
+        _PTC_SCOPE.pop()
+
+
+def ptc_scope_name(leaf: str) -> str:
+    """Qualified layer name for ``leaf`` under the current scope."""
+    return ".".join((*_PTC_SCOPE, leaf))
+
+
+def _hook_dispatch(p: Params, x: jax.Array, cfg: "PTCLinearCfg",
+                   d_out: int | None, name: str | None):
+    """Offer this call to the active execution hook; None = stay digital."""
+    if (_PTC_EXEC_HOOK is None or name is None or cfg.mode == "dense"
+            or "u" not in p or p["u"].ndim != 4):
+        return None
+    if isinstance(x, jax.core.Tracer):    # jit/vmap/scan context: digital
+        return None
+    return _PTC_EXEC_HOOK(ptc_scope_name(name), p, x, cfg, d_out)
 
 
 def maybe_constraint(x: jax.Array, *spec) -> jax.Array:
@@ -86,8 +147,18 @@ def is_ptc_leaf(path: tuple) -> bool:
 
 def apply_ptc_linear(p: Params, x: jax.Array, cfg: PTCLinearCfg,
                      masks: SubspaceMasks | None = None,
-                     d_out: int | None = None) -> jax.Array:
-    """y = x @ Wᵀ (+b).  Handles k-padding on both sides."""
+                     d_out: int | None = None,
+                     name: str | None = None) -> jax.Array:
+    """y = x @ Wᵀ (+b).  Handles k-padding on both sides.
+
+    ``name`` identifies the layer to an installed :func:`ptc_execution`
+    hook (hardware-in-the-loop serving); unnamed calls never leave the
+    digital path."""
+    y = _hook_dispatch(p, x, cfg, d_out, name)
+    if y is not None:
+        if "b" in p:
+            y = y + p["b"].astype(y.dtype)
+        return y
     if cfg.mode == "dense":
         w = p["w"]
         y = x.astype(w.dtype) @ w.T

@@ -26,7 +26,8 @@ import jax.numpy as jnp
 from ..core.sparsity import SparsityConfig, feedback_mask, column_mask
 from .layers import (PTCLinearCfg,                      init_rmsnorm, rmsnorm, init_layernorm, layernorm,
                      layernorm_np, init_embedding, embed, softcap,
-                     trainable_mask, partition, combine, maybe_constraint)
+                     trainable_mask, partition, combine, maybe_constraint,
+                     ptc_scope)
 from .attention import (AttnCfg, init_attention, attention, decode_attention,
                         init_kv_cache)
 from .ffn import FFNCfg, MoECfg, init_mlp, mlp, init_moe, moe
@@ -488,6 +489,11 @@ def build_serve_step(cfg: ArchConfig):
             cross_kv = batch["enc_out"].astype(x.dtype)
 
         def body(x, per):
+            # PTC layers are name-scoped (``p{period}.s{sublayer}.<module>``)
+            # so the hardware-in-the-loop executor (models.layers.
+            # ptc_execution) can key tenant placement on a stable layer id;
+            # under lax.scan the scopes only run at trace time and the hook
+            # stays inert (tracer guard), so naming costs nothing there.
             layer_params, layer_cache = per
             new_cache = {}
             for i, sub in enumerate(plan):
@@ -495,26 +501,30 @@ def build_serve_step(cfg: ArchConfig):
                 c = layer_cache[f"pos{i}"]
                 h = _apply_norm(cfg, p["ln1"], x)
                 if sub.kind == "attn":
-                    h, c = decode_attention(p["attn"],
-                                            cfg.attn_cfg(sub.window),
-                                            cfg.ptc, h, c, cache_len)
+                    with ptc_scope(f"s{i}.attn"):
+                        h, c = decode_attention(p["attn"],
+                                                cfg.attn_cfg(sub.window),
+                                                cfg.ptc, h, c, cache_len)
                 else:
-                    h, c = mamba_decode(p["mamba"], cfg.ssm_cfg(), cfg.ptc,
-                                        h, c)
+                    with ptc_scope(f"s{i}.mamba"):
+                        h, c = mamba_decode(p["mamba"], cfg.ssm_cfg(),
+                                            cfg.ptc, h, c)
                 if cfg.post_norm:
                     h = _apply_norm(cfg, p["pn1"], h)
                 x = x + h
                 if sub.cross:
                     h = _apply_norm(cfg, p["lnx"], x)
-                    h = attention(p["cross"], cfg.attn_cfg(causal=False),
-                                  cfg.ptc, h, None, kv_x=cross_kv)
+                    with ptc_scope(f"s{i}.cross"):
+                        h = attention(p["cross"], cfg.attn_cfg(causal=False),
+                                      cfg.ptc, h, None, kv_x=cross_kv)
                     x = x + h
                 if sub.ffn != "none":
                     h = _apply_norm(cfg, p["ln2"], x)
                     if sub.ffn == "moe":
                         h, _ = moe(p["moe"], cfg.moe_cfg(), cfg.ptc, h)
                     else:
-                        h = mlp(p["mlp"], cfg.ffn_cfg(), cfg.ptc, h)
+                        with ptc_scope(f"s{i}.mlp"):
+                            h = mlp(p["mlp"], cfg.ffn_cfg(), cfg.ptc, h)
                     if cfg.post_norm:
                         h = _apply_norm(cfg, p["pn2"], h)
                     x = x + h
@@ -527,7 +537,8 @@ def build_serve_step(cfg: ArchConfig):
             for pi in range(n_periods):
                 lp = jax.tree.map(lambda a: a[pi], layer_stack)
                 lc = jax.tree.map(lambda a: a[pi], cache)
-                x, c = body(x, (lp, lc))
+                with ptc_scope(f"p{pi}"):
+                    x, c = body(x, (lp, lc))
                 outs.append(c)
             new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
         else:

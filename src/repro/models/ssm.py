@@ -83,9 +83,11 @@ def _causal_depthwise_conv(x, w, b, init_state=None):
 def _ssm_params(p: Params, cfg: SSMCfg, lin: PTCLinearCfg, xc):
     """Input-dependent Δ, B, C from the conv'd activations xc (B,S,din)."""
     n, r = cfg.d_state, cfg.rank
-    proj = apply_ptc_linear(p["x_proj"], xc, lin, d_out=r + 2 * n)
+    proj = apply_ptc_linear(p["x_proj"], xc, lin, d_out=r + 2 * n,
+                            name="x_proj")
     dt, b_ssm, c_ssm = jnp.split(proj, [r, r + n], axis=-1)
-    dt = apply_ptc_linear(p["dt_proj"], dt, lin, d_out=cfg.d_inner)
+    dt = apply_ptc_linear(p["dt_proj"], dt, lin, d_out=cfg.d_inner,
+                          name="dt_proj")
     dt = jax.nn.softplus(dt.astype(jnp.float32))
     return dt, b_ssm.astype(jnp.float32), c_ssm.astype(jnp.float32)
 
@@ -95,7 +97,8 @@ def mamba(p: Params, cfg: SSMCfg, lin: PTCLinearCfg, x: jax.Array,
     """Training / prefill path: chunked associative selective scan."""
     bsz, s, _ = x.shape
     din, n = cfg.d_inner, cfg.d_state
-    xz = apply_ptc_linear(p["in_proj"], x, lin, d_out=2 * din)
+    xz = apply_ptc_linear(p["in_proj"], x, lin, d_out=2 * din,
+                          name="in_proj")
     x_in, z = jnp.split(xz, 2, axis=-1)
     # NOTE (§Perf pair 3): explicit d_inner sharding constraints here
     # (outer or per-chunk) were each measured to REGRESS the jamba
@@ -138,7 +141,8 @@ def mamba(p: Params, cfg: SSMCfg, lin: PTCLinearCfg, x: jax.Array,
     y = ys.swapaxes(0, 1).reshape(bsz, s, din)
     y = y + p["d"] * xc.astype(jnp.float32)
     y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
-    return apply_ptc_linear(p["out_proj"], y, lin, d_out=cfg.d_model)
+    return apply_ptc_linear(p["out_proj"], y, lin, d_out=cfg.d_model,
+                            name="out_proj")
 
 
 # -- decode ------------------------------------------------------------------
@@ -154,7 +158,8 @@ def mamba_decode(p: Params, cfg: SSMCfg, lin: PTCLinearCfg, x: jax.Array,
                  state: Params) -> tuple[jax.Array, Params]:
     """Single-token recurrence.  x: (B, 1, d) → (y, new_state)."""
     din, n = cfg.d_inner, cfg.d_state
-    xz = apply_ptc_linear(p["in_proj"], x, lin, d_out=2 * din)
+    xz = apply_ptc_linear(p["in_proj"], x, lin, d_out=2 * din,
+                          name="in_proj")
     x_in, z = jnp.split(xz, 2, axis=-1)
     xc, conv_new = _causal_depthwise_conv(x_in, p["conv_w"], p["conv_b"],
                                           init_state=state["conv"])
@@ -167,5 +172,6 @@ def mamba_decode(p: Params, cfg: SSMCfg, lin: PTCLinearCfg, x: jax.Array,
     y = jnp.einsum("bdn,bn->bd", h, c_ssm[:, 0])[:, None]
     y = y + p["d"] * xc.astype(jnp.float32)
     y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
-    out = apply_ptc_linear(p["out_proj"], y, lin, d_out=cfg.d_model)
+    out = apply_ptc_linear(p["out_proj"], y, lin, d_out=cfg.d_model,
+                           name="out_proj")
     return out, {"h": h, "conv": conv_new.astype(state["conv"].dtype)}

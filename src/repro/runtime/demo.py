@@ -61,7 +61,10 @@ def default_runtime_config(k: int = 6, sigma_drift: float = 0.015,
         noise=DEFAULT_NOISE.post_ic(),
         drift=DriftConfig(sigma_phase=sigma_drift, theta=0.01),
         monitor=monitor,
-        recal=RecalConfig(zo_steps=zo_steps, delta0=0.05,
+        # the historical 0.05/1.05 schedule, pinned: the demo/benchmark
+        # artifacts (BENCH_drift_recovery et al.) are seeded against it;
+        # RecalConfig's own default moved to the gentler 0.02/1.02
+        recal=RecalConfig(zo_steps=zo_steps, delta0=0.05, decay=1.05,
                           auto_budget=auto_budget,
                           auto_target=monitor.clear_threshold),
         probe_every=probe_every,

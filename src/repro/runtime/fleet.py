@@ -98,6 +98,16 @@ class RuntimeConfig:
     max_concurrent_recals: int = 1  # repair-slot bandwidth
     driver_kind: str = "twin"    # "twin"|"subprocess"|"socket" (make_driver)
     router_policy: str = "drift_aware"  # | "least_served"
+    deploy_zo: bool = False      # PM stage 2 (alternate ZCD) at deployment:
+    #                              lower mapping floor, dearer onboarding —
+    #                              the hw-logits accuracy benchmarks turn it
+    #                              on; health/routing studies don't need it
+    repair_batch: int = 1        # alarmed tenants re-tuned per repair
+    #                              outage (worst-first).  1 = the historical
+    #                              one-tenant-per-window policy; hw-logits
+    #                              serving raises it so one chip outage
+    #                              refreshes every drifted layer at once
+    #                              (a model's tenants drift together)
 
 
 @dataclasses.dataclass
@@ -222,7 +232,7 @@ def make_chip(key: jax.Array, chip_id: int, w, cfg: RuntimeConfig,
     for i, (wi, (m, n, rng)) in enumerate(zip(weights, layout)):
         kt = kpm if i == 0 else jax.random.fold_in(kpm, i)
         pm = parallel_map(kt, wi, cfg.k, cfg.noise, kind=cfg.kind,
-                          run_zo=False, driver=driver,
+                          run_zo=cfg.deploy_zo, driver=driver,
                           block_range=None if single else rng)
         b = rng[1] - rng[0]
         w_blocks = blockize(wi, cfg.k).reshape(b, cfg.k, cfg.k)
@@ -332,6 +342,47 @@ class FleetRouter:
         t.served += 1
         return y, chip.chip_id
 
+    def route_pass(self) -> Optional[Chip]:
+        """Pick ONE chip for a whole forward pass (every tenant slot of
+        the pass lands on the same board — the hardware-in-the-loop
+        serving shape, where tenant ``j`` is layer ``j`` of the served
+        model and activations flow chip-side layer by layer).  Ranking
+        mirrors :meth:`dispatch` but aggregates over all tenants: the
+        chip whose *worst* forecast tenant fidelity is best wins."""
+        for pool in (HEALTHY, DEGRADED):
+            cands = [c for c in self.chips if c.status == pool]
+            if not cands:
+                continue
+            if self.cfg.router_policy == "drift_aware":
+                return min(cands, key=lambda c: (
+                    max(predicted_distance(c, self.tick_count,
+                                           self.cfg.drift, t)
+                        for t in c.tenants),
+                    c.served, c.chip_id))
+            return min(cands, key=lambda c: (c.served, c.chip_id))
+        return None
+
+    def serve_pass(self, chip: Chip, items: "Sequence[tuple[int, jax.Array]]"
+                   ) -> list:
+        """Execute several tenants' layer matmuls on ``chip`` in ONE
+        driver round-trip: ``items`` is ``[(tenant_idx, x), ...]`` and
+        the whole list ships as a single v3 ``batch`` frame (any
+        pipelined clock advances from :meth:`tick` flush ahead of it in
+        the same frame), so a decode step costs O(1) RPCs per
+        (chip, layer-group) instead of one per op.  Results are
+        bit-identical to per-op ``forward_layer`` calls by the batch
+        frame's construction; serve counters update per tenant."""
+        ops = []
+        for idx, x in items:
+            t = chip.tenants[idx]
+            ops.append(("forward_layer", dict(x=x, block_range=t.block_range,
+                                              out_dim=t.m)))
+        ys = chip.driver.run_batch(ops)
+        for idx, _ in items:
+            chip.tenants[idx].served += 1
+        chip.served += len(items)   # chip total stays Σ tenant counters
+        return ys
+
     # -- the closed loop ----------------------------------------------------
 
     def tick(self, dt: float = 1.0) -> None:
@@ -400,29 +451,42 @@ class FleetRouter:
         """The out-of-band job lands: partial recalibration of the
         alarmed tenant's block range against the chip's current
         (post-latency) drifted state, then a scoped re-probe to clear.
-        Co-resident tenants' commanded state is untouched."""
+        Co-resident tenants' commanded state is untouched.
+
+        With ``cfg.repair_batch > 1`` the outage is amortized: up to
+        that many *currently alarmed* tenants (worst probe distance
+        first, the scheduled tenant always included) are re-tuned
+        before the chip returns to service — one chip outage refreshes
+        every drifted layer of a served model instead of cycling
+        through 14 separate repair windows while the rest keep
+        drifting."""
         cfg = self.cfg
-        ten = chip.tenants[chip.recal_tenant or 0]
-        res = recalibrate(self._next_key(), chip.driver, ten.w_blocks,
-                          cfg.recal, dist_hint=ten.health.distance,
-                          block_range=ten.block_range)
-        ten.recals += 1
-        chip.recals += 1
-        ten.recal_calls += res.ptc_calls
-        chip.recal_calls += res.ptc_calls
-        est = probe_mapping_distance(self._next_key(), chip.driver,
-                                     ten.w_blocks, cfg.monitor.n_probes,
-                                     block_range=ten.block_range)
-        ten.health = clear_health(ten.health, float(est), cfg.monitor)
-        ten.last_probe_tick = self.tick_count
+        first = chip.tenants[chip.recal_tenant or 0]
+        others = sorted((t for t in chip.tenants
+                         if t.health.alarmed and t is not first),
+                        key=lambda t: -t.health.distance)
+        for ten in (first, *others[:max(0, cfg.repair_batch - 1)]):
+            res = recalibrate(self._next_key(), chip.driver, ten.w_blocks,
+                              cfg.recal, dist_hint=ten.health.distance,
+                              block_range=ten.block_range)
+            ten.recals += 1
+            chip.recals += 1
+            ten.recal_calls += res.ptc_calls
+            chip.recal_calls += res.ptc_calls
+            est = probe_mapping_distance(self._next_key(), chip.driver,
+                                         ten.w_blocks, cfg.monitor.n_probes,
+                                         block_range=ten.block_range)
+            ten.health = clear_health(ten.health, float(est), cfg.monitor)
+            ten.last_probe_tick = self.tick_count
+            self.events.append(dict(
+                tick=self.tick_count, event="recal_done", chip=chip.chip_id,
+                tenant=ten.tenant_id,
+                dist_before=float(res.dist_before),
+                dist_after=float(res.dist_after), zo_steps=res.zo_steps,
+                status=RECALIBRATING))
         chip.status = HEALTHY if not chip.alarmed else DEGRADED
-        self.events.append(dict(
-            tick=self.tick_count, event="recal_done", chip=chip.chip_id,
-            tenant=ten.tenant_id,
-            dist_before=float(res.dist_before),
-            dist_after=float(res.dist_after), zo_steps=res.zo_steps,
-            status=chip.status))
         chip.recal_tenant = None
+        self.events[-1]["status"] = chip.status
 
     # -- reporting ----------------------------------------------------------
 

@@ -1,0 +1,278 @@
+"""Hardware-in-the-loop serving: LM logits through routed chips' realized transfer.
+
+Until now ``launch/serve.py --fleet`` used the photonic fleet for
+health/routing *accounting* only — decode steps drove synthetic probe
+traffic through a chip while the LM logits came from the pristine
+digital model.  This module closes the gap the paper actually cares
+about: the *served model's* PTC layers execute on the (drifting)
+photonic hardware, so task accuracy — not just mapping distance — is
+what the closed drift→alarm→recalibrate loop protects.
+
+Shape of the plane
+------------------
+* **One tenant per PTC layer.**  :func:`record_ptc_layers` runs one
+  digital decode step under a recording :func:`~repro.models.layers.
+  ptc_execution` hook and enumerates every named PTC linear of the
+  served model in call order (``p0.s0.attn.wq`` …), together with its
+  effective dense weight ``W = U·diag(Σ)·V*`` (cropped to the true
+  ``(m, n)``).  :class:`HwServePlane` then deploys that whole layer
+  list onto each fleet chip via ``core.mapping.parallel_map(
+  block_range=)`` — the existing multi-tenant machinery: layer *j* is
+  tenant *j*, owning a contiguous block range and its Σ bank, with its
+  own health/alarm state and *partial* recalibration.
+* **Whole-pass routing.**  Each decode step is routed as one unit:
+  ``FleetRouter.route_pass`` picks a single chip for all tenant slots
+  (ranked by the worst forecast tenant fidelity), drift advances
+  between steps, and health probes / repair jobs run out-of-band
+  exactly as before.  While a chip is mid-recalibration the pass fails
+  over to another chip; if *no* chip is routable the step falls back to
+  the deployment-time shadow transfer (counted, never silent).
+* **Batched execution.**  Sibling projections that consume the same
+  activations (``wq``/``wk``/``wv``; ``gate``/``up``) ship as ONE v3
+  ``batch`` frame via ``FleetRouter.serve_pass`` — with the pipelined
+  clock advances flushing ahead inside the same frame, a decode step
+  costs O(1) round-trips per (chip, layer-group) on every transport.
+* **Shadow twin.**  At deployment the plane reads back each tenant's
+  realized transfer through the observability-legal driver surface
+  (``readback_bases`` + commanded Σ) and keeps the assembled dense
+  ``Ŵ_j``.  ``mode="shadow"`` serves from these digitally — the
+  "digital twin of the deployed chip" reference path: at σ_drift = 0
+  the routed and shadow paths apply the *same* realized transfer (the
+  device never moves), so greedy decode is token-identical — the
+  conformance gate ``tests/test_hw_serve.py`` locks across all three
+  transports (whose routed logits are mutually bit-identical).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.ptc import PTCParams, compose_weight, unblockize
+from .fleet import FleetRouter, RuntimeConfig, make_fleet
+
+__all__ = ["PTCLayerSpec", "record_ptc_layers", "HwServePlane"]
+
+
+@dataclasses.dataclass
+class PTCLayerSpec:
+    """One PTC linear of the served model = one fleet tenant."""
+
+    index: int                 # tenant index (call order within a step)
+    name: str                  # qualified scope name, e.g. "p0.s0.attn.wq"
+    m: int                     # output dim the call site consumes
+    n: int                     # input dim the call site supplies
+    w: np.ndarray              # effective dense weight (m, n), float32
+    group: Optional[str] = None   # sibling group sharing one input
+
+
+def _effective_weight(p: dict, x, d_out: int | None) -> tuple[int, int, np.ndarray]:
+    """(m, n, W) for a factored PTC param dict at one call site.
+
+    ``W`` is exactly the matrix the digital path applies: the composed
+    ``U·diag(Σ)·V*`` blocks (Σ cast to the bases' dtype, as
+    ``apply_ptc_linear`` does), cropped to the call's true output dim
+    and the un-padded input dim — the zero-padded rows/cols the block
+    grid carries never touch data."""
+    params = PTCParams(u=p["u"], s=p["s"].astype(p["u"].dtype), v=p["v"])
+    w_full = unblockize(compose_weight(params))
+    n = int(x.shape[-1])
+    m = int(d_out) if d_out is not None else int(w_full.shape[0])
+    return m, n, np.asarray(w_full[:m, :n], np.float32)
+
+
+def _sibling_group(name: str) -> Optional[str]:
+    """Sibling-group id for layers that consume the same activations.
+
+    Self-attention's q/k/v projections all read the same normed hidden
+    state, as do the MLP gate/up pair — those execute as one batched
+    driver frame.  Cross-attention is the exception: ``wq`` reads the
+    decoder state while ``wk``/``wv`` read the encoder/vision stream,
+    so only the k/v pair groups there."""
+    scope, _, leaf = name.rpartition(".")
+    cross = scope.endswith(".cross")
+    if leaf in ("wq", "wk", "wv") and not cross:
+        return f"{scope}.qkv"
+    if leaf in ("wk", "wv") and cross:
+        return f"{scope}.kv"
+    if leaf in ("gate", "up"):
+        return f"{scope}.gateup"
+    return None
+
+
+def record_ptc_layers(serve_step, params, cache, batch) -> list[PTCLayerSpec]:
+    """Enumerate the decode path's PTC layers by running ONE digital
+    step under a recording hook.  Call order is deterministic (the
+    decode body is a static python loop when unrolled), so the returned
+    indices double as tenant indices."""
+    from ..models.layers import ptc_execution
+
+    recorded: list[PTCLayerSpec] = []
+    seen: dict[str, int] = {}
+
+    def recorder(name, p, x, cfg, d_out):
+        if name in seen:               # decode calls each layer once/step
+            raise RuntimeError(
+                f"PTC layer {name!r} executed twice in one decode step — "
+                f"layer names must be unique for tenant placement")
+        seen[name] = len(recorded)
+        m, n, w = _effective_weight(p, x, d_out)
+        recorded.append(PTCLayerSpec(index=len(recorded), name=name,
+                                     m=m, n=n, w=w,
+                                     group=_sibling_group(name)))
+        return None                    # stay digital: this is a dry pass
+
+    with ptc_execution(recorder):
+        serve_step(params, cache, batch)
+    if not recorded:
+        raise ValueError(
+            "served model exposes no named PTC layers on its decode path "
+            "(dense mode, or an un-scoped architecture)")
+    return recorded
+
+
+class HwServePlane:
+    """The serving-side execution plane: model PTC layers on fleet chips.
+
+    Install :attr:`hook` with ``models.layers.ptc_execution`` around the
+    decode loop and wrap each step in :meth:`step` (``launch/steps.
+    greedy_decode(layer_exec=...)`` does both).  ``mode``:
+
+    * ``"route"``  — layer matmuls execute on the routed chip's realized
+      (drifted) transfer via ``driver.forward_layer``;
+    * ``"shadow"`` — same deployment, but matmuls apply the deployment-
+      time readback ``Ŵ_j`` digitally: the twin-path reference the
+      σ_drift = 0 token-identity gate compares against.
+    """
+
+    def __init__(self, key: jax.Array, layers: Sequence[PTCLayerSpec],
+                 cfg: RuntimeConfig, n_chips: int, *, mode: str = "route",
+                 seed: int = 0, recal_enabled: bool = True):
+        if mode not in ("route", "shadow"):
+            raise ValueError(f"unknown hw serve mode: {mode!r}")
+        self.mode = mode
+        self.layers = list(layers)
+        self._by_name = {s.name: s for s in self.layers}
+        self._groups: dict[str, list[PTCLayerSpec]] = {}
+        for s in self.layers:
+            if s.group is not None:
+                self._groups.setdefault(s.group, []).append(s)
+        chips = make_fleet(key, n_chips, [s.w for s in self.layers], cfg)
+        self.router = FleetRouter(chips, cfg, seed=seed,
+                                  recal_enabled=recal_enabled)
+        # deployment-time shadow: the realized transfer of the reference
+        # chip, read back through the observability-legal surface — one
+        # commanded-Σ read plus ONE batch frame of per-tenant basis
+        # readbacks (not 2 round-trips per layer)
+        sigma = np.asarray(chips[0].driver.read_sigma())
+        bases = chips[0].driver.run_batch(
+            [("readback_bases", dict(block_range=t.block_range))
+             for t in chips[0].tenants])
+        self._shadow = [
+            self._assemble_transfer(spec, u, v,
+                                    sigma[t.block_range[0]:t.block_range[1]],
+                                    chips[0].driver.k)
+            for spec, t, (u, v) in zip(self.layers, chips[0].tenants, bases)]
+        # per-step state
+        self._chip = None
+        self._group_cache: dict[tuple[str, str], tuple[np.ndarray, jax.Array]] = {}
+        self.steps = 0
+        self.frames = 0            # driver round-trips spent on layer math
+        self.hw_calls = 0          # layer matmuls served by a chip
+        self.shadow_calls = 0      # layer matmuls served by the shadow
+        self.dropped_passes = 0    # steps with no routable chip
+
+    @staticmethod
+    def _assemble_transfer(spec: PTCLayerSpec, u, v, sigma: np.ndarray,
+                           k: int) -> np.ndarray:
+        """Dense realized ``Ŵ`` of one tenant: reciprocal basis readback
+        × commanded Σ, assembled and cropped like the digital weight."""
+        wb = (np.asarray(u) * sigma[:, None, :]) @ np.asarray(v)   # (b, k, k)
+        p = -(-spec.m // k)
+        q = wb.shape[0] // p
+        grid = wb.reshape(p, q, k, k)
+        dense = grid.transpose(0, 2, 1, 3).reshape(p * k, q * k)
+        return np.asarray(dense[:spec.m, :spec.n], np.float32)
+
+    # -- decode-loop surface -------------------------------------------------
+
+    @contextlib.contextmanager
+    def step(self, i: int):
+        """One decode step: route the whole pass to one chip, serve it,
+        then let virtual time pass (drift advances, probes/repairs run
+        out-of-band).  With no routable chip the step's layers fall
+        back to the shadow transfer and the pass counts as dropped."""
+        self._group_cache.clear()
+        self._chip = None
+        if self.mode == "route":
+            self._chip = self.router.route_pass()
+            if self._chip is None:
+                self.dropped_passes += 1
+        try:
+            yield
+        finally:
+            self._group_cache.clear()
+            self._chip = None
+            self.router.tick()
+            self.steps += 1
+
+    def hook(self, name: str, p, x, cfg, d_out):
+        """``models.layers.ptc_execution`` hook: execute one PTC layer
+        on the plane.  Unknown names stay digital (return None)."""
+        spec = self._by_name.get(name)
+        if spec is None:
+            return None
+        if self._chip is None:         # shadow mode, or no routable chip
+            self.shadow_calls += 1
+            w = jnp.asarray(self._shadow[spec.index])
+            return (x.astype(jnp.float32) @ w.T).astype(x.dtype)
+        if spec.group is not None:
+            hit = self._group_cache.pop((spec.group, name), None)
+            if hit is not None:
+                x_ref, y = hit
+                if np.array_equal(x_ref, np.asarray(x)):
+                    return y
+                # speculative sibling result computed on different
+                # activations: drop the whole group, execute singly
+                for s in self._groups[spec.group]:
+                    self._group_cache.pop((spec.group, s.name), None)
+        members = [spec]
+        if spec.group is not None and not any(
+                (spec.group, s.name) in self._group_cache
+                for s in self._groups[spec.group]):
+            members = self._groups[spec.group]
+        ys = self.router.serve_pass(self._chip,
+                                    [(s.index, x) for s in members])
+        self.frames += 1
+        self.hw_calls += len(members)
+        x_np = np.asarray(x)
+        out = None
+        for s, y in zip(members, ys):
+            y = jnp.asarray(y).astype(x.dtype)
+            if s.name == name:
+                out = y
+            else:
+                self._group_cache[(spec.group, s.name)] = (x_np, y)
+        return out
+
+    # -- reporting / lifecycle -----------------------------------------------
+
+    def report(self) -> dict:
+        rep = self.router.report()
+        rep["hw"] = dict(
+            mode=self.mode,
+            layers=[dict(tenant=s.index, name=s.name, m=s.m, n=s.n,
+                         group=s.group) for s in self.layers],
+            steps=self.steps, frames=self.frames,
+            frames_per_step=self.frames / max(1, self.steps),
+            hw_calls=self.hw_calls, shadow_calls=self.shadow_calls,
+            dropped_passes=self.dropped_passes)
+        return rep
+
+    def close(self) -> None:
+        self.router.close()

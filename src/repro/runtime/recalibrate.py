@@ -65,8 +65,12 @@ __all__ = ["RecalConfig", "RecalResult", "recalibrate", "autotune_zo_steps"]
 class RecalConfig(NamedTuple):
     zo_steps: int = 400          # warm-start ZCD probe steps per block (max)
     inner: int | None = None     # decay period (default 2T)
-    delta0: float = 0.05         # small initial step — we are near-optimal
-    decay: float = 1.05
+    # gentle schedule: drift biases are ~0.01-0.03 rad, so a 0.05-rad
+    # first step overshoots and the fast decay then freezes the search
+    # above the deployment floor (measured: 0.05/1.05 plateaus at
+    # d≈0.0075 where 0.02/1.02 reaches d≈0.003 from the same warm start)
+    delta0: float = 0.02
+    decay: float = 1.02
     method: str = "zcd"
     sl_steps: int = 0            # optional in-situ Σ fine-tune steps
     sl_lr: float = 0.2
@@ -75,7 +79,13 @@ class RecalConfig(NamedTuple):
     auto_budget: bool = False    # derive the step budget from d̂ at alarm
     auto_target: float = 0.02    # the recovery target (clear threshold)
     auto_min: int = 80           # floor: warm starts need a minimum sweep
-    auto_coeff: float = 6.0      # knee slope, in units of 2T per log₂ excess
+    auto_coeff: float = 6.0     # knee slope, in units of 2T per log₂ excess
+    auto_quantum: int = 64       # round autotuned budgets UP to a multiple
+    #                              of this: the hw jobs layer compiles one
+    #                              solver per (geometry, ZO budget)
+    #                              signature, so a continuum of step counts
+    #                              would defeat the compiled-twin cache —
+    #                              quantized budgets keep it to a handful
 
 
 class RecalResult(NamedTuple):
@@ -101,6 +111,8 @@ def autotune_zo_steps(dist: float, cfg: RecalConfig, n_rot: int) -> int:
     if ratio <= 1.0:
         return int(cfg.auto_min)
     steps = int(round(cfg.auto_coeff * 2 * n_rot * math.log2(1.0 + ratio)))
+    q = max(1, int(cfg.auto_quantum))
+    steps = -(-steps // q) * q           # quantize up: bounded compile count
     return int(min(max(steps, cfg.auto_min), cfg.zo_steps))
 
 

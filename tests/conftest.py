@@ -1,6 +1,17 @@
 """Shared pytest config.  NOTE: no XLA_FLAGS here — smoke tests and
 benches must see 1 device; only launch/dryrun.py forces 512."""
 
+import jax
+
+# Pin the x64 mode the full suite has ALWAYS effectively run under:
+# tests/test_unitary.py enables jax_enable_x64 at import, which pytest's
+# collection used to apply to every test in the process — so a file run
+# in isolation (e.g. `pytest tests/test_calibration.py`) saw different
+# numerics than the same file inside the full suite and
+# test_ic_converges_k9 flipped between pass and fail on collection
+# order.  Pinning it here makes every invocation shape identical; the
+# CI `test-isolation` leg runs that file alone to prove it stays fixed.
+jax.config.update("jax_enable_x64", True)
 
 
 def pytest_configure(config):

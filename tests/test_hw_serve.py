@@ -1,0 +1,166 @@
+"""Hardware-in-the-loop serving: conformance + regression gates.
+
+The ``--hw-logits`` serve path executes the served model's PTC layers
+on routed photonic chips (one fleet tenant per layer) instead of the
+digital twin.  These tests lock the contracts the benchmark and the
+paper story rest on:
+
+* at σ_drift = 0 the hardware-routed decode is **token-identical** to
+  the shadow twin path (same deployment, digital execution of the
+  deployment-time readback transfer) — the realized transfer and its
+  digital twin are the same operator when the device never moves;
+* the routed path's **logits are bit-identical across all three driver
+  transports** (in-process twin, subprocess pipe, TCP socket) — the
+  stream transports reproduce the twin exactly for equal seeds;
+* the whole stack is seeded: a rerun reproduces tokens and fleet
+  accounting bit-for-bit;
+* every decode-path PTC layer is placed as a tenant, sibling
+  projections batch into one driver frame, and the serve accounting
+  adds up.
+"""
+
+import argparse
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import serve as serve_mod
+from repro.models.layers import PTCLinearCfg
+from repro.models.lm import ArchConfig
+
+# one period (attn + mlp), 7 PTC layers — small enough that the three
+# transport runs stay CI-cheap, big enough to exercise grouping and
+# heterogeneous tenant geometries (32x32, 16x32, 48x32, 32x48)
+ARCH = ArchConfig(name="hwtest", family="dense", n_layers=1, d_model=32,
+                  n_heads=2, n_kv_heads=1, d_ff=48, vocab=64, head_dim=16,
+                  remat=False,
+                  ptc=PTCLinearCfg(k=8, base_dtype=jnp.float32))
+
+EXPECTED_LAYERS = [
+    "p0.s0.attn.wq", "p0.s0.attn.wk", "p0.s0.attn.wv", "p0.s0.attn.wo",
+    "p0.s0.mlp.gate", "p0.s0.mlp.up", "p0.s0.mlp.down",
+]
+
+
+def _args(**over):
+    base = dict(arch=ARCH, batch=2, prompt_len=3, gen=3, seed=5,
+                fleet=1, drift=False, drift_sigma=0.0, probe_every=4,
+                fleet_k=8, fleet_dim=8, fleet_tenants=1,
+                fleet_driver="twin", hw_logits=False, hw_shadow=False,
+                deploy_zo=False, no_recal=False, trace_logits=True)
+    base.update(over)
+    return argparse.Namespace(**base)
+
+
+def test_hw_logits_token_identical_to_shadow_at_sigma0():
+    """σ=0: routed hardware execution ≡ shadow twin execution, token for
+    token — the conformance gate the drift benchmark is anchored to."""
+    route = serve_mod.run(_args(hw_logits=True))
+    shadow = serve_mod.run(_args(hw_shadow=True))
+
+    np.testing.assert_array_equal(route["gen"], shadow["gen"])
+    np.testing.assert_array_equal(route["preds"], shadow["preds"])
+    # ... and the two modes really took different execution paths
+    hw_r, hw_s = route["report"]["hw"], shadow["report"]["hw"]
+    assert hw_r["mode"] == "route" and hw_s["mode"] == "shadow"
+    assert hw_r["shadow_calls"] == 0 and hw_r["hw_calls"] > 0
+    assert hw_s["hw_calls"] == 0 and hw_s["shadow_calls"] > 0
+    # route ≈ shadow numerically but NOT bit-identically (different
+    # contraction order): the token identity above is the meaningful gate
+    assert np.abs(route["logits"] - shadow["logits"]).max() < 1e-4
+
+
+def test_hw_logits_bit_identical_across_transports():
+    """The routed path's logits are bit-identical on twin, subprocess,
+    and socket transports — the v3 data plane reproduces the in-process
+    twin exactly, layer math included."""
+    outs = {}
+    for driver in ("twin", "subprocess", "socket"):
+        outs[driver] = serve_mod.run(_args(hw_logits=True,
+                                           fleet_driver=driver))
+    ref = outs["twin"]
+    for driver in ("subprocess", "socket"):
+        np.testing.assert_array_equal(ref["logits"], outs[driver]["logits"])
+        np.testing.assert_array_equal(ref["gen"], outs[driver]["gen"])
+        # metering is transport-invariant too
+        ref_chips = ref["report"]["chips"]
+        cur_chips = outs[driver]["report"]["chips"]
+        for c1, c2 in zip(ref_chips, cur_chips):
+            assert c1["ptc_calls"] == c2["ptc_calls"]
+
+
+def test_hw_logits_deterministic_and_accounted():
+    """Same seed → bit-identical rerun; tenant placement covers every
+    decode-path PTC layer; sibling grouping keeps the per-step frame
+    count at the group count, not the layer count."""
+    out1 = serve_mod.run(_args(hw_logits=True))
+    out2 = serve_mod.run(_args(hw_logits=True))
+    np.testing.assert_array_equal(out1["gen"], out2["gen"])
+    np.testing.assert_array_equal(out1["logits"], out2["logits"])
+
+    rep = out1["report"]
+    hw = rep["hw"]
+    assert [l["name"] for l in hw["layers"]] == EXPECTED_LAYERS
+    n_steps = 3 + 3 - 1
+    assert rep["ticks"] == n_steps == hw["steps"]
+    # qkv + wo + gate/up + down = 4 frames per step for this arch
+    assert hw["frames"] == 4 * n_steps
+    assert hw["hw_calls"] == len(EXPECTED_LAYERS) * n_steps
+    assert hw["shadow_calls"] == 0 and hw["dropped_passes"] == 0
+    # chip serve counters aggregate the tenant counters
+    chip = rep["chips"][0]
+    assert chip["served"] == sum(t["served"] for t in chip["tenants"])
+    assert all(t["served"] == n_steps for t in chip["tenants"])
+
+
+def test_hw_logits_under_drift_closed_loop_runs():
+    """Drifted serving still closes: alarms fire, batch partial recals
+    land while traffic fails over, and every layer call is accounted
+    either to hardware or to the shadow fallback."""
+    from repro.runtime.fleet import RuntimeConfig
+    from repro.runtime.monitor import MonitorConfig
+    from repro.runtime.recalibrate import RecalConfig
+    from repro.hw.drift import DriftConfig
+    from repro.core.noise import DEFAULT_NOISE
+
+    mon = MonitorConfig(n_probes=6, alarm_threshold=0.02,
+                        clear_threshold=0.01, consecutive=1)
+    rcfg = RuntimeConfig(
+        k=8, noise=DEFAULT_NOISE.post_ic(),
+        drift=DriftConfig(sigma_phase=0.05, theta=0.01), monitor=mon,
+        recal=RecalConfig(zo_steps=100, delta0=0.05),
+        probe_every=2, recal_latency=1, max_concurrent_recals=1,
+        driver_kind="twin", repair_batch=8)
+    out = serve_mod.run(_args(hw_logits=True, fleet=2, drift=True,
+                              drift_sigma=0.05, gen=8,
+                              runtime_cfg=rcfg))
+    rep = out["report"]
+    hw = rep["hw"]
+    n_steps = 3 + 8 - 1
+    assert sum(c["alarms"] for c in rep["chips"]) > 0
+    assert sum(c["recals"] for c in rep["chips"]) > 0
+    assert hw["hw_calls"] + hw["shadow_calls"] \
+        == len(EXPECTED_LAYERS) * n_steps
+    # batch repair re-tunes several alarmed tenants in one outage
+    done = [ev for ev in rep["events"] if ev["event"] == "recal_done"]
+    ticks = [ev["tick"] for ev in done]
+    assert len(done) > len(set(ticks))
+
+
+def test_hw_flags_require_fleet_and_exclusive():
+    import pytest
+    with pytest.raises(ValueError):
+        serve_mod.run(_args(hw_logits=True, fleet=0))
+    with pytest.raises(ValueError):
+        serve_mod.run(_args(hw_logits=True, hw_shadow=True))
+
+
+def test_legacy_fleet_path_unchanged_surface():
+    """The pre-existing synthetic-traffic fleet path still serves and
+    reports without the hw section."""
+    out = serve_mod.run(_args(arch=dataclasses.replace(ARCH),
+                              fleet=1, hw_logits=False))
+    assert out["report"] is not None
+    assert "hw" not in out["report"]
+    assert out["gen"].shape == (2, 3)
