@@ -95,6 +95,26 @@ SPECS = {
                "gates.open_loop_monotone",
                "gates.closed_loop_recovers"],
     ),
+    "BENCH_serving_gateway.json": dict(
+        metrics={
+            # gateway vs sequential tokens/s-per-chip on the SAME fleet,
+            # host, and workload: the continuous-batching dividend.  Both
+            # sides ride one process, so the ratio is host-invariant the
+            # same way the driver-overhead amortization is.
+            "tokens_per_chip_speedup":
+                lambda d: d["tokens_per_chip_speedup"],
+            # p99 request latency in VIRTUAL STEPS at the reference
+            # offered load — a pure function of the (seeded) schedule,
+            # bit-deterministic across hosts.  Inverted: higher is
+            # better, so a latency blow-up trips the drop gate.
+            "inv_p99_latency_steps":
+                lambda d: 1.0 / d["ref_rate"]["p99_latency_steps"],
+        },
+        gates=["gates.speedup_ge_2x",
+               "gates.sigma0_token_identical_twin",
+               "gates.sigma0_token_identical_socket",
+               "gates.drift_closed_loop_completes"],
+    ),
 }
 
 
@@ -176,6 +196,12 @@ def _degrade(src_dir: str, dst_dir: str) -> None:
         if fname == "BENCH_e2e_accuracy.json":
             d["baseline"]["accuracy"] *= 0.5
             d["gates"]["closed_loop_recovers"] = False
+        if fname == "BENCH_serving_gateway.json":
+            # a lost-coalescing regression: the gateway degenerates to
+            # sequential throughput and tail latency blows up
+            d["tokens_per_chip_speedup"] *= 0.4
+            d["ref_rate"]["p99_latency_steps"] *= 3.0
+            d["gates"]["sigma0_token_identical_twin"] = False
         with open(os.path.join(dst_dir, fname), "w") as f:
             json.dump(d, f)
 

@@ -60,7 +60,8 @@ def main() -> None:
 
     from . import (ic_convergence, blocksize_tables, mapping_osp,
                    grad_fidelity, sampling_table2, scalability,
-                   drift_recovery, driver_overhead, e2e_accuracy)
+                   drift_recovery, driver_overhead, e2e_accuracy,
+                   serving_gateway)
     benches = [
         ("fig4_ic_convergence", ic_convergence.main),
         ("tables345_blocksize", blocksize_tables.main),
@@ -72,6 +73,7 @@ def main() -> None:
         ("runtime_multi_tenant", drift_recovery.multi_tenant),
         ("hw_driver_overhead", driver_overhead.main),
         ("runtime_e2e_accuracy", e2e_accuracy.main),
+        ("serving_gateway", serving_gateway.main),
     ]
     for name, fn in benches:
         if args.only and args.only not in name:

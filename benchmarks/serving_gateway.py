@@ -1,0 +1,227 @@
+"""Serving-gateway benchmark: continuous batching vs sequential serving.
+
+The gateway's claim (``src/repro/serving/``) is that cross-request PTC
+frame coalescing turns N concurrent users into ONE chip round-trip per
+layer group per step — so a photonic fleet serves strictly more tokens
+per second per chip than the sequential batch-1 ``serve --hw-logits``
+loop PR 5 shipped.  This benchmark measures that claim and locks the
+correctness gates around it:
+
+1. **Throughput** — the same open-loop workload (seeded Poisson
+   arrivals) served two ways on an identical 2-chip fleet: one
+   sequential batch-1 ``launch.serve --hw-logits`` run per request, vs
+   one continuous-batching gateway run.  Both paths are warmed first
+   (the jit/driver caches are process-wide, so cold compiles would
+   bill whichever path runs first), then timed.  Gate:
+   ``tokens/s-per-chip`` speedup ≥ 2×.
+2. **Token identity** — the gateway's per-request outputs are
+   token-identical to the sequential runs (twin transport, σ = 0), and
+   the socket transport's gateway outputs match the twin's.  Paging,
+   batching, and transport must all be invisible to the user.
+3. **Latency vs offered load** — a digital-gateway sweep over arrival
+   rates: p50/p99 request latency and admission wait in *virtual
+   steps* (host-invariant), occupancy, busy fraction.
+4. **Drift point** — one closed-loop hw run (σ > 0, recal on) proving
+   the gateway completes under live drift/repair traffic.
+
+Artifacts: ``serving_gateway.csv`` (load sweep) and
+``BENCH_serving_gateway.json`` with the gates + host-invariant metrics
+``check_regression.py`` gates in CI (speedup ratio, 1/p99 latency).
+
+    PYTHONPATH=src python -m benchmarks.serving_gateway [--budget quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+from .common import ART, emit
+
+ARCH = "smoke:qwen3-4b"
+SEED = 5
+FLEET = 2
+FLEET_K = 8
+SLOTS = 4
+PAGE = dict(page_size=8, pages=32, max_pages_per_slot=4)
+
+
+def _fresh(reqs):
+    """Requests are mutated by a run (lifecycle stamps, out_tokens) —
+    every serving leg gets its own copies."""
+    return [dataclasses.replace(r, out_tokens=[]) for r in reqs]
+
+
+def _seq_args(params, req, *, driver="twin", sigma=0.0, recal=False):
+    return argparse.Namespace(
+        arch=ARCH, batch=1, prompt_len=req.prompt_len, gen=req.max_new,
+        seed=SEED, fleet=FLEET, drift=sigma > 0, drift_sigma=sigma,
+        probe_every=10, fleet_k=FLEET_K, fleet_dim=8, fleet_tenants=1,
+        fleet_driver=driver, hw_logits=True, hw_shadow=False,
+        deploy_zo=False, no_recal=not recal,
+        prompt_tokens=req.prompt[None], params_override=params)
+
+
+def _gw_args(params, reqs, *, hw=True, driver="twin", sigma=0.0,
+             recal=False, slots=SLOTS):
+    return argparse.Namespace(
+        arch=ARCH, seed=SEED, slots=slots, requests=len(reqs), rate=1.0,
+        max_new=(4, 12), eos_id=None, **PAGE,
+        fleet=FLEET if hw else 0, drift=sigma > 0, drift_sigma=sigma,
+        probe_every=10, fleet_k=FLEET_K, fleet_driver=driver,
+        hw_logits=hw, hw_shadow=False, deploy_zo=False,
+        no_recal=not recal, params_override=params,
+        requests_override=_fresh(reqs))
+
+
+def _seq_sweep(params, reqs, **kw):
+    """One sequential batch-1 hw-logits run per request; returns
+    (Σ wall_s of the decode loops, Σ tokens, per-request token lists)."""
+    from repro.launch import serve as serve_mod
+
+    wall, tokens, outs = 0.0, 0, []
+    for r in reqs:
+        out = serve_mod.run(_seq_args(params, r, **kw))
+        wall += out["wall_s"]
+        tokens += out["gen"].size
+        outs.append([int(t) for t in out["gen"][0]])
+    return wall, tokens, outs
+
+
+def main(budget: str = "quick") -> None:
+    import jax
+    from repro.launch.train import parse_arch
+    from repro.models.lm import init_model
+    from repro.serving.gateway import run as gw_run
+    from repro.serving.scheduler import poisson_workload
+
+    if budget == "quick":
+        n_req, max_new = 8, (12, 16)
+        sweep_rates = [0.5, 1.0, 2.0, 4.0]
+        sweep_req = 16
+        sock_req, sock_new = 3, (4, 6)
+    else:
+        n_req, max_new = 12, (16, 24)
+        sweep_rates = [0.25, 0.5, 1.0, 2.0, 4.0, 8.0]
+        sweep_req = 32
+        sock_req, sock_new = 4, (6, 8)
+
+    cfg = parse_arch(ARCH)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    reqs = poisson_workload(SEED, n_req, 2.0, cfg.vocab,
+                            prompt_len=(4, 8), max_new=max_new)
+    expected_tokens = sum(r.max_new for r in reqs)
+
+    # -- throughput: sequential vs gateway on one fleet ----------------------
+    # warm both paths first: jit caches (model step, twin layer kernels,
+    # paged gather/scatter) are process-wide, so the first path to run
+    # would otherwise be billed everyone's compiles
+    _seq_sweep(params, reqs[:1])
+    gw_run(_gw_args(params, reqs[:2]))
+
+    seq_wall, seq_tokens, seq_outs = _seq_sweep(params, reqs)
+    gw_rep = gw_run(_gw_args(params, reqs))
+    gw_outs = [r["tokens"] for r in gw_rep["requests"]]
+    seq_tps = seq_tokens / seq_wall / FLEET
+    gw_tps = gw_rep["tokens_out"] / gw_rep["wall_s"] / FLEET
+    speedup = gw_tps / seq_tps
+    twin_identical = gw_outs == seq_outs
+    frames = gw_rep["fleet"]["hw"]
+    print(f"sequential: {seq_tokens} tok in {seq_wall:.2f}s "
+          f"→ {seq_tps:.2f} tok/s/chip", flush=True)
+    print(f"gateway:    {gw_rep['tokens_out']} tok in "
+          f"{gw_rep['wall_s']:.2f}s → {gw_tps:.2f} tok/s/chip "
+          f"({gw_rep['steps']} steps, occupancy "
+          f"{gw_rep['occupancy']:.2f}/{SLOTS}, "
+          f"{frames['frames_per_step']:.1f} coalesced frames/step)",
+          flush=True)
+    print(f"speedup {speedup:.2f}× | twin token-identity: "
+          f"{twin_identical}", flush=True)
+
+    # -- socket transport identity -------------------------------------------
+    sreqs = poisson_workload(SEED + 1, sock_req, 2.0, cfg.vocab,
+                             prompt_len=(3, 6), max_new=sock_new)
+    _, _, sock_seq = _seq_sweep(params, sreqs, driver="socket")
+    sock_rep = gw_run(_gw_args(params, sreqs, driver="socket"))
+    sock_outs = [r["tokens"] for r in sock_rep["requests"]]
+    socket_identical = sock_outs == sock_seq
+    print(f"socket token-identity (gateway ≡ sequential): "
+          f"{socket_identical}", flush=True)
+
+    # -- latency vs offered load (digital gateway, virtual steps) ------------
+    sweep = []
+    for rate in sweep_rates:
+        wl = poisson_workload(SEED + 2, sweep_req, rate, cfg.vocab,
+                              prompt_len=(4, 8), max_new=(8, 12))
+        rep = gw_run(_gw_args(params, wl, hw=False))
+        lat, wait = rep["latency_steps"], rep["admission_wait_steps"]
+        sweep.append(dict(
+            rate=rate, steps=rep["steps"], busy_steps=rep["busy_steps"],
+            occupancy=rep["occupancy"],
+            p50_latency_steps=lat["p50"], p99_latency_steps=lat["p99"],
+            p50_wait_steps=wait["p50"], p99_wait_steps=wait["p99"]))
+        print(f"rate {rate:4.2f}: latency p50 {lat['p50']:5.1f} "
+              f"p99 {lat['p99']:6.1f} steps | wait p99 "
+              f"{wait['p99']:5.1f} | occupancy {rep['occupancy']:.2f}",
+              flush=True)
+    ref = next(s for s in sweep if s["rate"] == 2.0)
+
+    # -- closed-loop drift point ---------------------------------------------
+    drift_rep = gw_run(_gw_args(params, reqs, sigma=0.008, recal=True))
+    drift_chips = drift_rep["fleet"]["chips"]
+    drift_complete = drift_rep["tokens_out"] == expected_tokens
+    print(f"drift σ=0.008 closed loop: {drift_rep['tokens_out']} tok, "
+          f"{sum(c['alarms'] for c in drift_chips)} alarms, "
+          f"{sum(c['recals'] for c in drift_chips)} recals, "
+          f"complete={drift_complete}", flush=True)
+
+    gates = dict(
+        speedup_ge_2x=bool(speedup >= 2.0),
+        sigma0_token_identical_twin=bool(twin_identical),
+        sigma0_token_identical_socket=bool(socket_identical),
+        drift_closed_loop_completes=bool(drift_complete))
+
+    emit("serving_gateway",
+         ["rate", "steps", "occupancy", "p50_latency_steps",
+          "p99_latency_steps", "p99_wait_steps"],
+         [[s["rate"], s["steps"], f"{s['occupancy']:.3f}",
+           f"{s['p50_latency_steps']:.1f}", f"{s['p99_latency_steps']:.1f}",
+           f"{s['p99_wait_steps']:.1f}"] for s in sweep])
+
+    summary = dict(
+        budget=budget, arch=ARCH, seed=SEED, fleet=FLEET, slots=SLOTS,
+        page=PAGE, n_requests=n_req,
+        sequential=dict(wall_s=seq_wall, tokens=seq_tokens,
+                        tokens_per_s_per_chip=seq_tps),
+        gateway=dict(wall_s=gw_rep["wall_s"], tokens=gw_rep["tokens_out"],
+                     tokens_per_s_per_chip=gw_tps,
+                     steps=gw_rep["steps"], occupancy=gw_rep["occupancy"],
+                     frames_per_step=frames["frames_per_step"],
+                     latency_steps=gw_rep["latency_steps"]),
+        tokens_per_chip_speedup=speedup,
+        load_sweep=sweep,
+        ref_rate=dict(rate=ref["rate"],
+                      p50_latency_steps=ref["p50_latency_steps"],
+                      p99_latency_steps=ref["p99_latency_steps"]),
+        drift=dict(sigma=0.008, tokens_out=drift_rep["tokens_out"],
+                   alarms=sum(c["alarms"] for c in drift_chips),
+                   recals=sum(c["recals"] for c in drift_chips)),
+        gates=gates)
+    os.makedirs(ART, exist_ok=True)
+    path = os.path.join(ART, "BENCH_serving_gateway.json")
+    with open(path, "w") as f:
+        json.dump(summary, f, indent=2)
+    print(f"--- serving_gateway summary ({path}) ---")
+    print(json.dumps(dict(gates=gates, speedup=speedup,
+                          p99_latency_steps=ref["p99_latency_steps"]),
+                     indent=2))
+    for name, ok in gates.items():
+        assert ok, f"serving gateway gate failed: {name}"
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", default="quick", choices=["quick", "normal"])
+    main(ap.parse_args().budget)

@@ -7,12 +7,15 @@
 * ``feedback_matmul``  — block-masked feedback pass (structured sparsity
   → predicated MXU blocks);
 * ``sigma_grad``       — fused in-situ Σ-gradient (Eq. 5): both reciprocal
-  projections + Hadamard-accumulate without the (T,P,Q,k) intermediate.
+  projections + Hadamard-accumulate without the (T,P,Q,k) intermediate;
+* ``paged_gather`` / ``paged_scatter`` — paged-KV page assembly and
+  token insertion for the continuous-batching serving gateway
+  (scalar-prefetched page tables → per-page DMA block copies).
 
 ``ops`` is the jit'd dispatch layer; ``ref`` holds the pure-jnp oracles
 each kernel is allclose-tested against (interpret=True on CPU).
 """
 
 from .ops import (ptc_block_matmul, mesh_apply, feedback_matmul,  # noqa: F401
-                  sigma_grad)
+                  sigma_grad, paged_gather, paged_scatter)
 from . import ref  # noqa: F401

@@ -17,9 +17,11 @@ from .ptc_block_matmul import ptc_block_matmul as _ptc_block_matmul
 from .mesh_apply import mesh_apply_butterfly as _mesh_apply_butterfly
 from .feedback_matmul import feedback_matmul as _feedback_matmul
 from .sigma_grad import sigma_grad as _sigma_grad
+from .paged_kv import (paged_gather as _paged_gather,
+                       paged_scatter as _paged_scatter)
 
 __all__ = ["default_interpret", "ptc_block_matmul", "mesh_apply",
-           "feedback_matmul", "sigma_grad"]
+           "feedback_matmul", "sigma_grad", "paged_gather", "paged_scatter"]
 
 
 def default_interpret() -> bool:
@@ -82,3 +84,17 @@ def sigma_grad(dy, x, u, v, *, interpret: bool | None = None):
         interpret = default_interpret()
     return _sigma_grad(dy, x, u, v, t_tile=_pick_t_tile(dy.shape[0]),
                        interpret=interpret)
+
+
+def paged_gather(table, pages, *, interpret: bool | None = None):
+    """Paged-KV page assembly (serving gateway) via the Pallas kernel."""
+    if interpret is None:
+        interpret = default_interpret()
+    return _paged_gather(table, pages, interpret=interpret)
+
+
+def paged_scatter(idx, new, pages, *, interpret: bool | None = None):
+    """Paged-KV token insertion (serving gateway) via the Pallas kernel."""
+    if interpret is None:
+        interpret = default_interpret()
+    return _paged_scatter(idx, new, pages, interpret=interpret)

@@ -1,0 +1,101 @@
+"""Pallas TPU kernels: paged KV-cache page assembly (gather/scatter).
+
+The serving gateway (``repro.serving``) stores every in-flight request's
+KV history in fixed-size pages of one shared pool; per-request *page
+tables* map logical token blocks to physical pages.  Decode needs two
+data movements per step:
+
+* **gather** — assemble each request slot's pages into a contiguous
+  (S_max, d) view the attention kernel can consume.  On TPU the page
+  table rides in as a scalar-prefetch operand
+  (``PrefetchScalarGridSpec``), so the index map can address the page
+  dimension *before* the kernel body runs and each (slot, page) grid
+  step is ONE VMEM-resident block copy — the standard paged-attention
+  DMA idiom.  No compute, pure layout: the copy is exact, so the
+  assembled view is bit-identical to the pool contents.
+* **scatter** — write each slot's freshly projected k/v row into its
+  current (page, offset) write position, in place (the pool is aliased
+  into the output, ``input_output_aliases``), one dynamic-slice store
+  per slot.
+
+``interpret=True`` (the default off-TPU, via ``kernels.ops``) runs the
+exact same kernel bodies on this CPU container; on a TPU backend the
+same calls compile to Mosaic.  Pool/table shapes are static — only the
+table *contents* change per step — so both calls jit cleanly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["paged_gather", "paged_scatter"]
+
+
+def _gather_kernel(tbl_ref, pages_ref, out_ref):
+    # grid (slot b, page j): the in_spec already DMA'd page tbl[b, j]
+    # into pages_ref; emit it as the j-th block of slot b's view.
+    out_ref[0, 0] = pages_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_gather(table: jax.Array, pages: jax.Array, *,
+                 interpret: bool = True) -> jax.Array:
+    """Assemble per-slot contiguous KV views from a paged pool.
+
+    table: (B, J) int32 physical page ids (unallocated entries must
+    hold a valid id — 0 by convention; attention masks them by length).
+    pages: (n_pages, page_size, d).  Returns (B, J·page_size, d).
+    """
+    b, j = table.shape
+    _, ps, d = pages.shape
+    out = pl.pallas_call(
+        _gather_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, j),
+            in_specs=[pl.BlockSpec((1, ps, d),
+                                   lambda bb, jj, t: (t[bb, jj], 0, 0))],
+            out_specs=pl.BlockSpec((1, 1, ps, d),
+                                   lambda bb, jj, t: (bb, jj, 0, 0))),
+        out_shape=jax.ShapeDtypeStruct((b, j, ps, d), pages.dtype),
+        interpret=interpret,
+    )(table, pages)
+    return out.reshape(b, j * ps, d)
+
+
+def _scatter_kernel(idx_ref, new_ref, pages_ref, out_ref):
+    del pages_ref                     # aliased into out_ref
+    b = pl.program_id(0)
+    pid = idx_ref[b, 0]
+    off = idx_ref[b, 1]
+    out_ref[pid, pl.ds(off, 1), :] = new_ref[0][None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_scatter(idx: jax.Array, new: jax.Array, pages: jax.Array, *,
+                  interpret: bool = True) -> jax.Array:
+    """Write one new KV row per slot into its page-table position.
+
+    idx: (B, 2) int32 — per slot ``(page_id, offset)`` write position
+    (idle slots must point somewhere harmless, e.g. a scratch page).
+    new: (B, d) rows; pages: (n_pages, page_size, d), updated in place
+    via output aliasing.  Returns the updated pool.
+    """
+    b = new.shape[0]
+    d = new.shape[-1]
+    return pl.pallas_call(
+        _scatter_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b,),
+            in_specs=[pl.BlockSpec((1, d), lambda bb, t: (bb, 0)),
+                      pl.BlockSpec(pages.shape, lambda bb, t: (0, 0, 0))],
+            out_specs=pl.BlockSpec(pages.shape, lambda bb, t: (0, 0, 0))),
+        out_shape=jax.ShapeDtypeStruct(pages.shape, pages.dtype),
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(idx, new, pages)

@@ -103,7 +103,15 @@ def run(args) -> dict:
     """Serve ``args.gen`` tokens (optionally through the fleet runtime)
     and return the outcome: generated tokens, per-step argmax
     predictions, plus the router's report — the seeded-regression
-    surface the e2e tests lock down."""
+    surface the e2e tests lock down.
+
+    With ``--gateway`` the whole run is delegated to the continuous-
+    batching gateway (``repro.serving``): the workload becomes an
+    open-loop request stream instead of one lockstep batch, and the
+    returned dict is the gateway report."""
+    if getattr(args, "gateway", False):
+        from ..serving.gateway import run as run_gateway
+        return run_gateway(args)
     cfg = (args.arch if isinstance(args.arch, ArchConfig)
            else parse_arch(args.arch))
     hw_mode = None
@@ -237,7 +245,24 @@ def main(argv=None):
                          "(lower mapping floor for accuracy studies)")
     ap.add_argument("--no-recal", action="store_true",
                     help="open loop: alarms fire, nothing recovers")
+    ap.add_argument("--gateway", action="store_true",
+                    help="serve an open-loop request stream through the "
+                         "continuous-batching gateway (repro.serving) "
+                         "instead of one lockstep batch; --gw-* flags "
+                         "configure it")
+    from ..serving.gateway import add_gateway_args
+    add_gateway_args(ap)
     args = ap.parse_args(argv)
+
+    if args.gateway:
+        rep = run(args)
+        c = rep["config"]
+        lat = rep["latency_steps"]
+        print(f"gateway [{c['hw_mode']}] {c['arch']}: {c['n_requests']} "
+              f"requests, {rep['tokens_out']} tokens in "
+              f"{rep['wall_s']:.1f}s ({rep['tokens_per_s']:.1f} tok/s), "
+              f"latency p50={lat['p50']:.0f} p99={lat['p99']:.0f} steps")
+        return 0
 
     out = run(args)
     gen = out["gen"]

@@ -50,7 +50,8 @@ def greedy_decode(serve_step, params, cache, prompt, gen: int,
                   on_step: Callable[[int], None] | None = None,
                   layer_exec=None,
                   preds_out: list | None = None,
-                  logits_out: list | None = None):
+                  logits_out: list | None = None,
+                  eos_id: int | None = None):
     """One shared serve path: teacher-forced prefill through the decode
     cache, then greedy generation of ``gen`` tokens.
 
@@ -78,6 +79,17 @@ def greedy_decode(serve_step, params, cache, prompt, gen: int,
     decode-path position, prefill included — the teacher-forced
     accuracy metric and the transport bit-identity gates read these.
 
+    ``eos_id`` enables per-sequence early termination: once a sequence
+    *emits* the stop token (generation region only — teacher-forced
+    prefill predictions never terminate), it is finished and every
+    later column of its row is frozen to ``eos_id`` (and fed back
+    frozen, so live sequences decode exactly as they would alone).
+    When every sequence has finished the loop exits early — trailing
+    hardware passes are never issued.  ``preds_out``/``logits_out``
+    keep collecting the *raw* per-step argmax/logits for steps that
+    run (the accuracy + bit-identity consumers want the model's
+    predictions, not the frozen padding).
+
     Returns ``(generated, cache)`` with ``generated`` (B, gen) numpy.
     """
     from ..models.layers import ptc_execution
@@ -87,6 +99,7 @@ def greedy_decode(serve_step, params, cache, prompt, gen: int,
     max_len = prompt_len + gen
     tok = jnp.asarray(prompt[:, :1])
     out_tokens = []
+    finished = np.zeros((prompt.shape[0],), bool)
     hook_ctx = (ptc_execution(layer_exec.hook) if layer_exec is not None
                 else contextlib.nullcontext())
     with hook_ctx:
@@ -105,13 +118,25 @@ def greedy_decode(serve_step, params, cache, prompt, gen: int,
             if i + 1 < prompt_len:
                 tok = jnp.asarray(prompt[:, i + 1: i + 2])  # teacher-forced
             else:
+                emitted = np.asarray(nxt)[:, 0]
+                if eos_id is not None:
+                    emitted = np.where(finished, np.int32(eos_id), emitted)
+                    finished |= emitted == eos_id
+                    nxt = jnp.asarray(emitted)[:, None]
                 tok = nxt
-                out_tokens.append(np.asarray(nxt)[:, 0])
+                out_tokens.append(emitted)
             if on_step is not None:
                 on_step(i)
+            if eos_id is not None and finished.all():
+                break
     if not out_tokens:        # gen=0: prefill-only run
         return np.zeros((prompt.shape[0], 0), np.int32), cache
-    return np.stack(out_tokens, axis=1), cache
+    gen_out = np.stack(out_tokens, axis=1)
+    if eos_id is not None and gen_out.shape[1] < gen:
+        pad = np.full((gen_out.shape[0], gen - gen_out.shape[1]),
+                      eos_id, np.int32)
+        gen_out = np.concatenate([gen_out, pad], axis=1)
+    return gen_out, cache
 
 
 def build_prefill_step(cfg: ArchConfig):

@@ -21,7 +21,7 @@ from .layers import (PTCLinearCfg, init_ptc_linear, apply_ptc_linear,
                      softcap)
 
 __all__ = ["AttnCfg", "init_attention", "attention", "decode_attention",
-           "init_kv_cache"]
+           "decode_attention_paged", "init_kv_cache"]
 
 Params = dict[str, Any]
 NEG_INF = -2.0 ** 30
@@ -208,3 +208,46 @@ def decode_attention(p: Params, cfg: AttnCfg, lin: PTCLinearCfg, x, cache,
     o = o.reshape(b, 1, cfg.n_heads * cfg.head_dim)
     out = apply_ptc_linear(p["wo"], o, lin, d_out=cfg.d_model, name="wo")
     return out, {"k": k, "v": v}
+
+
+def decode_attention_paged(p: Params, cfg: AttnCfg, lin: PTCLinearCfg, x,
+                           k_view, v_view, lens):
+    """One-token decode against page-assembled per-slot KV views with
+    *per-sequence* cache lengths (the continuous-batching gateway path).
+
+    x: (B, 1, d); k_view/v_view: (B, S_max, Hkv, Dh) contiguous views
+    gathered from the page pool (position ``lens[b]`` is within slot
+    b's reservation); lens: (B,) int32 valid lengths — heterogeneous
+    across the batch, unlike :func:`decode_attention`'s shared scalar.
+
+    Returns ``(out, k_new, v_new)``: the caller persists the new
+    (B, 1, Hkv, Dh) rows into the page pool (``kernels.paged_scatter``);
+    the assembled views are step-scratch and never written back.
+    """
+    b = x.shape[0]
+    lens = lens.astype(jnp.int32)
+    positions = lens[:, None]
+    q, k_new, v_new = _project_qkv(p, cfg, lin, x, positions)
+    # splice each slot's new row in at its own write position
+    ins = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(
+        c, n, i, axis=0))
+    k = ins(k_view, k_new.astype(k_view.dtype), lens)
+    v = ins(v_view, v_new.astype(v_view.dtype), lens)
+    sk = k.shape[1]
+    rep = cfg.n_heads // cfg.n_kv_heads
+    kr = jnp.repeat(k, rep, axis=2)
+    vr = jnp.repeat(v, rep, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kr).astype(jnp.float32)
+    logits = logits * (cfg.head_dim ** -0.5)
+    logits = softcap(logits, cfg.attn_softcap)
+    ki = jnp.arange(sk)[None, None, None, :]
+    ln = lens[:, None, None, None]
+    ok = ki <= ln
+    if cfg.window is not None:
+        ok = ok & (ki > ln - cfg.window)
+    logits = jnp.where(ok, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bhqk,bkhd->bqhd", w, vr)
+    o = o.reshape(b, 1, cfg.n_heads * cfg.head_dim)
+    out = apply_ptc_linear(p["wo"], o, lin, d_out=cfg.d_model, name="wo")
+    return out, k_new, v_new

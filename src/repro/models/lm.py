@@ -29,13 +29,13 @@ from .layers import (PTCLinearCfg,                      init_rmsnorm, rmsnorm, i
                      trainable_mask, partition, combine, maybe_constraint,
                      ptc_scope)
 from .attention import (AttnCfg, init_attention, attention, decode_attention,
-                        init_kv_cache)
+                        decode_attention_paged, init_kv_cache)
 from .ffn import FFNCfg, MoECfg, init_mlp, mlp, init_moe, moe
 from .ssm import SSMCfg, init_mamba, mamba, mamba_decode, init_ssm_state
 
 __all__ = ["ArchConfig", "SubLayerPlan", "init_model", "forward",
-           "build_train_step", "build_serve_step", "init_decode_cache",
-           "model_trainable_mask", "inject_masks"]
+           "build_train_step", "build_serve_step", "build_gateway_step",
+           "init_decode_cache", "model_trainable_mask", "inject_masks"]
 
 Params = dict[str, Any]
 
@@ -551,3 +551,89 @@ def build_serve_step(cfg: ArchConfig):
         return softcap(logits, cfg.final_softcap)[:, 0], new_cache
 
     return serve_step
+
+
+def build_gateway_step(cfg: ArchConfig):
+    """Returns gateway_step(params, views, batch) → (logits, new_kv):
+    the continuous-batching decode step over *page-assembled* KV views
+    with per-sequence cache lengths (``repro.serving.engine``).
+
+    ``batch``: {"token": (B, 1) int32, "lens": (B,) int32} — B is the
+    gateway's slot count, each slot at its own decode position.
+    ``views`` mirrors :func:`init_decode_cache`'s tree: per sub-layer
+    position either ``{"k","v"}`` views (n_periods, B, S_max, Hkv, Dh)
+    gathered from the page pool, or an SSM state.  Unlike the dense
+    serve step the views are step-scratch: the returned ``new_kv``
+    holds only each attention layer's NEW (n_periods, B, 1, Hkv, Dh)
+    rows (the engine scatters them into the pool) plus full replacement
+    SSM states.
+
+    PTC scope names are identical to :func:`build_serve_step`'s
+    (``p{period}.s{sub}.attn.wq`` …), so a hardware-in-the-loop
+    deployment recorded off the solo serve path routes the gateway's
+    coalesced frames onto the same tenants."""
+    plan, n_periods = period_plan(cfg)
+    if cfg.family in ("vlm", "encdec"):
+        raise ValueError(
+            f"gateway decode does not support {cfg.family} archs "
+            f"(per-request cross-attention streams are not paged yet)")
+    if cfg.n_experts > 0:
+        raise ValueError("gateway decode does not support MoE archs yet")
+
+    def gateway_step(params, views, batch):
+        tok = batch["token"]
+        lens = batch["lens"]
+        x = embed(params["embed"], tok)
+        if cfg.family != "ssm":
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+        def body(x, per):
+            layer_params, layer_views = per
+            new = {}
+            for i, sub in enumerate(plan):
+                p = layer_params[f"pos{i}"]
+                c = layer_views[f"pos{i}"]
+                h = _apply_norm(cfg, p["ln1"], x)
+                if sub.kind == "attn":
+                    with ptc_scope(f"s{i}.attn"):
+                        h, k_new, v_new = decode_attention_paged(
+                            p["attn"], cfg.attn_cfg(sub.window), cfg.ptc,
+                            h, c["k"], c["v"], lens)
+                    new[f"pos{i}"] = {"k": k_new, "v": v_new}
+                else:
+                    with ptc_scope(f"s{i}.mamba"):
+                        h, st = mamba_decode(p["mamba"], cfg.ssm_cfg(),
+                                             cfg.ptc, h, c)
+                    new[f"pos{i}"] = st
+                if cfg.post_norm:
+                    h = _apply_norm(cfg, p["pn1"], h)
+                x = x + h
+                if sub.ffn != "none":
+                    h = _apply_norm(cfg, p["ln2"], x)
+                    with ptc_scope(f"s{i}.mlp"):
+                        h = mlp(p["mlp"], cfg.ffn_cfg(), cfg.ptc, h)
+                    if cfg.post_norm:
+                        h = _apply_norm(cfg, p["pn2"], h)
+                    x = x + h
+            return x, new
+
+        layer_stack = {f"pos{i}": params[f"pos{i}"] for i in range(len(plan))}
+        if cfg.unroll:
+            outs = []
+            for pi in range(n_periods):
+                lp = jax.tree.map(lambda a: a[pi], layer_stack)
+                lv = jax.tree.map(lambda a: a[pi], views)
+                with ptc_scope(f"p{pi}"):
+                    x, nk = body(x, (lp, lv))
+                outs.append(nk)
+            new_kv = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        else:
+            x, new_kv = jax.lax.scan(body, x, (layer_stack, views))
+        x = _apply_norm(cfg, params["final_norm"], x)
+        if cfg.tie_embed:
+            logits = x @ params["embed"]["e"].T
+        else:
+            logits = x @ params["unembed"]["w"].T
+        return softcap(logits, cfg.final_softcap)[:, 0], new_kv
+
+    return gateway_step

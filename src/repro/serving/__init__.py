@@ -1,0 +1,45 @@
+"""Continuous-batching serving gateway over the photonic fleet.
+
+The request-level layer between real traffic and the hardware-in-the-
+loop runtime (``repro.runtime``): a FIFO admission scheduler
+(``scheduler``) continuously batches many concurrent decode streams
+into one model forward per step, a paged KV cache (``kv_pages`` +
+``kernels.paged_kv``) replaces the dense per-request cache so slots
+admit/evict without reshaping state, and every PTC layer's matmul for
+*all* in-flight requests ships to the routed chip as ONE coalesced
+driver frame (``engine``) — the chip round-trip that used to serve one
+user's layer now serves every user's.
+
+    python -m repro.serving.gateway --arch smoke:qwen3-4b --slots 4 \
+        --requests 8 --rate 1.0 --fleet 2 --fleet-k 8 --hw-logits
+
+DESIGN
+------
+* **Lockstep continuous batching.**  One virtual step = one batched
+  single-token forward over every active slot.  A request admitted into
+  a slot streams its prompt token-by-token through the same decode path
+  generation uses (prefill-then-decode slotting: the KV cache fills
+  along the serving path, as ``launch/steps.greedy_decode`` does), so a
+  gateway-served request is *token-identical* to a solo ``serve`` run
+  at σ_drift = 0 — the conformance gate ``tests/test_serving_gateway.py``
+  and ``benchmarks/serving_gateway.py`` lock on twin and socket
+  transports.
+* **Reserve-at-admission paging.**  A request is admitted only when a
+  slot AND enough free pages for its whole lifetime
+  (``ceil((prompt+max_new)/page_size)``) are available — admission is
+  strict FIFO (no bypass, hence starvation-free) and a running request
+  can never hit pool exhaustion mid-flight, so no preemption machinery
+  is needed.  Eviction returns pages to the free list for reuse.
+* **Cross-request PTC frame coalescing.**  The gateway's step function
+  carries the full slot batch through every PTC layer, so the
+  ``HwServePlane`` hook sees ONE (slots, 1, n) activation per layer and
+  ships ONE ``forward_layer`` op per layer group per step — B users'
+  matmuls per chip round-trip instead of one.
+"""
+
+from .kv_pages import PageConfig, PagedKVPool
+from .scheduler import Request, Scheduler, poisson_workload
+from .engine import GatewayConfig, ServingGateway
+
+__all__ = ["PageConfig", "PagedKVPool", "Request", "Scheduler",
+           "poisson_workload", "GatewayConfig", "ServingGateway"]

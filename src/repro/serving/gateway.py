@@ -1,0 +1,160 @@
+"""Serving-gateway CLI: continuous batching over an open-loop workload.
+
+Runnable on this CPU container::
+
+    PYTHONPATH=src python -m repro.serving.gateway --arch smoke:qwen3-4b \
+        --slots 4 --requests 12 --rate 0.5
+
+Add ``--fleet N --hw-logits`` to serve every request's PTC matmuls
+through routed photonic chips — one *coalesced* driver frame per layer
+group per step carries ALL in-flight requests' activations (vs one
+frame per request in sequential ``launch.serve``).  ``launch.serve
+--gateway`` forwards here, so both entry points share this driver.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from ..models.lm import ArchConfig, init_model
+from .engine import GatewayConfig, ServingGateway, build_gateway_hw_plane
+from .kv_pages import PageConfig
+from .scheduler import poisson_workload
+
+__all__ = ["run", "main", "add_gateway_args"]
+
+
+def add_gateway_args(ap: argparse.ArgumentParser) -> None:
+    """Gateway knobs, shared by this CLI and ``launch.serve --gateway``."""
+    ap.add_argument("--slots", "--gw-slots", dest="slots", type=int,
+                    default=4, help="concurrent decode streams")
+    ap.add_argument("--requests", "--gw-requests", dest="requests",
+                    type=int, default=8, help="workload size")
+    ap.add_argument("--rate", "--gw-rate", dest="rate", type=float,
+                    default=0.5, help="Poisson arrival rate (req/step)")
+    ap.add_argument("--page-size", "--gw-page-size", dest="page_size",
+                    type=int, default=8, help="tokens per KV page")
+    ap.add_argument("--pages", "--gw-pages", dest="pages", type=int,
+                    default=64, help="physical pages in the shared pool")
+    ap.add_argument("--max-pages-per-slot", "--gw-max-pages-per-slot",
+                    dest="max_pages_per_slot", type=int, default=8,
+                    help="page-table length per slot")
+    ap.add_argument("--max-new", "--gw-max-new", dest="max_new", type=int,
+                    nargs=2, default=(4, 12), metavar=("LO", "HI"),
+                    help="uniform decode-budget range per request")
+    ap.add_argument("--eos-id", "--gw-eos-id", dest="eos_id", type=int,
+                    default=None, help="stop token (early termination)")
+
+
+def run(args) -> dict:
+    """Build the gateway for ``args`` and drive the workload to
+    completion; returns the engine report (plus the resolved config).
+
+    Test/benchmark hooks mirror ``launch.serve.run``:
+    ``args.params_override`` serves given params instead of seeded
+    random init; ``args.requests_override`` replaces the Poisson
+    workload with an explicit request list; ``args.runtime_cfg``
+    overrides the fleet policy."""
+    from ..launch.serve import _hw_runtime_config
+    from ..launch.train import parse_arch
+
+    cfg = (args.arch if isinstance(args.arch, ArchConfig)
+           else parse_arch(args.arch))
+    hw_mode = None
+    if getattr(args, "hw_logits", False):
+        hw_mode = "route"
+    if getattr(args, "hw_shadow", False):
+        if hw_mode is not None:
+            raise ValueError("--hw-logits and --hw-shadow are exclusive")
+        hw_mode = "shadow"
+    if hw_mode is not None:
+        if getattr(args, "fleet", 0) <= 0:
+            raise ValueError("--hw-logits/--hw-shadow need --fleet N chips")
+        # concrete activations for the PTC hook: python loop over periods
+        cfg = dataclasses.replace(cfg, unroll=True, remat=False)
+
+    params = getattr(args, "params_override", None)
+    if params is None:
+        params = init_model(jax.random.PRNGKey(args.seed), cfg)
+
+    reqs = getattr(args, "requests_override", None)
+    if reqs is None:
+        pl = getattr(args, "prompt_len_range", (4, 12))
+        reqs = poisson_workload(args.seed, args.requests, args.rate,
+                                cfg.vocab, prompt_len=tuple(pl),
+                                max_new=tuple(args.max_new),
+                                eos_id=args.eos_id)
+
+    gcfg = GatewayConfig(
+        slots=args.slots,
+        pages=PageConfig(page_size=args.page_size, n_pages=args.pages,
+                         max_pages_per_slot=args.max_pages_per_slot))
+    plane = None
+    if hw_mode is not None:
+        kf = jax.random.split(jax.random.PRNGKey(args.seed + 17))[1]
+        plane = build_gateway_hw_plane(
+            kf, cfg, params, _hw_runtime_config(args), args.fleet,
+            slots=args.slots, mode=hw_mode, seed=args.seed,
+            recal_enabled=not getattr(args, "no_recal", False))
+    gw = ServingGateway(cfg, params, gcfg, hw_plane=plane)
+    try:
+        rep = gw.run(reqs)
+    finally:
+        gw.close()
+    rep["config"] = dict(arch=cfg.name, slots=args.slots,
+                         page_size=args.page_size, pages=args.pages,
+                         hw_mode=hw_mode or "digital",
+                         n_requests=len(reqs))
+    return rep
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--seed", type=int, default=0)
+    add_gateway_args(ap)
+    ap.add_argument("--fleet", type=int, default=0,
+                    help="photonic chips backing --hw-logits/--hw-shadow")
+    ap.add_argument("--drift", action="store_true")
+    ap.add_argument("--drift-sigma", type=float, default=0.015)
+    ap.add_argument("--probe-every", type=int, default=10)
+    ap.add_argument("--fleet-k", type=int, default=6)
+    ap.add_argument("--fleet-driver", default="twin",
+                    choices=["twin", "subprocess", "socket"])
+    ap.add_argument("--hw-logits", action="store_true",
+                    help="serve every request's PTC matmuls through the "
+                         "routed chips (coalesced frames)")
+    ap.add_argument("--hw-shadow", action="store_true")
+    ap.add_argument("--deploy-zo", action="store_true")
+    ap.add_argument("--no-recal", action="store_true")
+    args = ap.parse_args(argv)
+
+    rep = run(args)
+    c = rep["config"]
+    lat, wait = rep["latency_steps"], rep["admission_wait_steps"]
+    print(f"gateway [{c['hw_mode']}] {c['arch']}: {c['n_requests']} "
+          f"requests over {rep['steps']} steps "
+          f"({rep['busy_steps']} busy, occupancy "
+          f"{rep['occupancy']:.2f}/{c['slots']})")
+    print(f"  {rep['tokens_out']} tokens in {rep['wall_s']:.1f}s "
+          f"({rep['tokens_per_s']:.1f} tok/s) | latency steps "
+          f"p50={lat['p50']:.0f} p99={lat['p99']:.0f} | admission wait "
+          f"p50={wait['p50']:.0f} p99={wait['p99']:.0f}")
+    fleet = rep.get("fleet")
+    if fleet is not None:
+        hw = fleet.get("hw") or {}
+        alarms = sum(ch["alarms"] for ch in fleet["chips"])
+        recals = sum(ch["recals"] for ch in fleet["chips"])
+        print(f"  fleet: {len(fleet['chips'])} chips, "
+              f"{hw.get('frames', 0)} coalesced frames "
+              f"({hw.get('frames_per_step', 0.0):.1f}/step), "
+              f"{hw.get('hw_calls', 0)} hw matmuls, "
+              f"{alarms} alarms, {recals} recals")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
