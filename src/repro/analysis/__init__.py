@@ -1,0 +1,42 @@
+"""`repro-lint`: repo-specific static analysis for the repro stack.
+
+The stack's correctness rests on invariants no general-purpose linter
+knows about, and that are otherwise enforced only by tribal knowledge:
+
+* **Twin boundary (RPL1xx)** — the paper's premise (§3.2) is that
+  in-situ learning sees only observable chip state.  Twin-internal
+  ground truth (`hw.twin` / `hw.device` / `hw.drift` internals) must
+  stay quarantined behind ``driver.unsafe_twin()``, whose call sites
+  are themselves restricted to an explicit diagnostic allowlist.
+* **Wire protocol (RPL2xx)** — the v3 op-stream protocol is defined in
+  three places that must agree: ``BATCHABLE_OPS`` (the whitelist),
+  ``hw/server.py:_dispatch`` (the server), and the ``StreamDriver``
+  client emitters, including the payload keywords each side
+  encodes/reads.  A new op must ship fully wired or not at all.
+* **Tracer safety (RPL3xx)** — host-side effects inside functions
+  handed to ``jax.jit`` / ``lax.scan`` / ``jax.vmap`` or used as Pallas
+  kernel bodies silently bake trace-time constants (or, for the
+  ``ptc_execution`` hook, silently turn hardware-in-the-loop serving
+  into a digital simulation).
+* **Pallas call sites (RPL4xx)** — kernel arity vs in/out/scratch
+  specs, ``index_map`` arity vs grid rank (+ scalar prefetch), and
+  ``input_output_aliases`` index validity.
+* **Determinism (RPL5xx)** — seeds derive from configuration, never
+  wall-clock; set iteration never feeds wire-frame construction.
+
+Run it::
+
+    python -m repro.analysis.lint src benchmarks        # lint
+    python -m repro.analysis.lint --explain RPL201      # rule docs
+    python -m repro.analysis.lint --self-test           # prove rules fire
+
+Findings are suppressed per line with ``# repro: noqa[CODE]`` or
+grandfathered in the committed ``repro-lint-baseline.json``.  The
+package is pure stdlib (``ast``) — it never imports jax and is safe to
+run in any environment.
+"""
+
+from .findings import Finding  # noqa: F401
+from .engine import run_lint, all_rules, LintResult  # noqa: F401
+
+__all__ = ["Finding", "run_lint", "all_rules", "LintResult"]

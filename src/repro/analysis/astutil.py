@@ -1,0 +1,102 @@
+"""Shared AST helpers for the repro-lint analyzers (stdlib only)."""
+
+from __future__ import annotations
+
+import ast
+
+__all__ = ["SourceFile", "dotted", "const_str", "line_at", "call_name",
+           "resolve_local", "lambda_arity", "func_arity"]
+
+
+class SourceFile:
+    """One parsed python file plus its classification inside the repo.
+
+    ``module`` is the best-effort dotted module path: files under a
+    ``repro`` package directory become ``repro.x.y``; files under a
+    top-level ``tests`` / ``benchmarks`` / ``examples`` directory keep
+    that prefix (``tests.test_x``).  Classification is purely
+    path-based so the analyzers work identically on the real tree and
+    on fixture trees in tests.
+    """
+
+    def __init__(self, path: str, rel: str, text: str):
+        self.path = path
+        self.rel = rel.replace("\\", "/")
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree = ast.parse(text, filename=path)
+        self.module = self._module_name()
+
+    def _module_name(self) -> str:
+        parts = self.rel.split("/")
+        stem = [p[:-3] if p.endswith(".py") else p for p in parts]
+        for anchor in ("repro", "tests", "benchmarks", "examples"):
+            if anchor in stem:
+                mod = stem[stem.index(anchor):]
+                if mod[-1] == "__init__":
+                    mod = mod[:-1]
+                return ".".join(mod)
+        return ".".join(stem)
+
+    def line_text(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1]
+        return ""
+
+    def in_package(self, prefix: str) -> bool:
+        return self.module == prefix or self.module.startswith(prefix + ".")
+
+
+def dotted(node: ast.AST) -> str | None:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(node: ast.Call) -> str | None:
+    """Dotted name of a call's callee, else None."""
+    return dotted(node.func)
+
+
+def const_str(node: ast.AST) -> str | None:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None
+
+
+def line_at(sf: SourceFile, node: ast.AST) -> str:
+    return sf.line_text(getattr(node, "lineno", 0)).strip()
+
+
+def resolve_local(scope: ast.AST, name: str) -> ast.AST | None:
+    """Last plain ``name = <expr>`` assignment in ``scope`` (a module or
+    function body), for resolving e.g. ``grid = (a, b)`` before a
+    ``pallas_call(grid=grid)``.  Shallow on purpose: only direct body
+    statements, no dataflow."""
+    found = None
+    for stmt in ast.walk(scope):
+        if isinstance(stmt, ast.Assign):
+            for tgt in stmt.targets:
+                if isinstance(tgt, ast.Name) and tgt.id == name:
+                    found = stmt.value
+    return found
+
+
+def lambda_arity(node: ast.Lambda) -> int | None:
+    a = node.args
+    if a.vararg is not None or a.kwarg is not None:
+        return None
+    return len(a.posonlyargs) + len(a.args)
+
+
+def func_arity(node: ast.FunctionDef) -> int | None:
+    a = node.args
+    if a.vararg is not None or a.kwarg is not None:
+        return None
+    return len(a.posonlyargs) + len(a.args)

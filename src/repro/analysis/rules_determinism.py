@@ -1,0 +1,141 @@
+"""RPL5xx — determinism analyzers.
+
+The repo's strongest invariant is *bit-identity across transports and
+reruns*: the conformance suite, the serving-gateway token-identity
+gates, and the benchmark regression gate all assert that equal seeds
+give equal bits.  Two things statically destroy that:
+
+* **wall-clock seeds** — a PRNG seeded from ``time.time()`` /
+  ``os.urandom`` makes every run its own baseline, so the bit-identity
+  gates stop gating anything;
+* **set iteration feeding wire frames** — python set order depends on
+  insertion history and hash randomization; a batch frame built by
+  iterating a set ships ops in a different order per process, which
+  executes *different physics* (ops are stateful) on one transport and
+  breaks batched ≡ sequential identity.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from .astutil import SourceFile, call_name, line_at
+from .findings import Finding, Rule
+
+__all__ = ["RULES"]
+
+# callees that consume a seed / construct a generator
+_SEEDERS = frozenset(["PRNGKey", "key", "default_rng", "seed", "RandomState",
+                      "Generator"])
+# entropy sources that must never feed a seed
+_ENTROPY = ("time.time", "time.time_ns", "perf_counter", "monotonic",
+            "datetime.now", "datetime.utcnow", "os.urandom", "os.getpid",
+            "uuid.uuid4")
+
+# packages whose functions assemble wire frames / op lists: set-order
+# nondeterminism here changes the op stream itself
+_WIRE_PACKAGES = ("repro.hw", "repro.serving")
+
+
+def _entropy_inside(node: ast.AST) -> str | None:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            name = call_name(sub)
+            if name is not None and any(
+                    name == e or name.endswith("." + e) for e in _ENTROPY):
+                return name
+    return None
+
+
+def check_wallclock_seeds(corpus) -> Iterator[Finding]:
+    for sf in corpus:
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node)
+            if name is None or name.rsplit(".", 1)[-1] not in _SEEDERS:
+                continue
+            for arg in (*node.args, *(kw.value for kw in node.keywords)):
+                src = _entropy_inside(arg)
+                if src is not None:
+                    yield Finding(
+                        "RPL501", sf.rel, node.lineno, node.col_offset,
+                        f"seed derived from {src}() — wall-clock/entropy "
+                        f"seeds defeat every bit-identity gate; derive "
+                        f"seeds from configuration (jax.random.split / "
+                        f"fold_in of a configured root key)",
+                        line_at(sf, node))
+
+
+def _is_set_expr(node: ast.AST) -> bool:
+    if isinstance(node, ast.Set):
+        return True
+    if isinstance(node, ast.Call):
+        name = call_name(node)
+        if name is not None and name.rsplit(".", 1)[-1] in ("set",
+                                                            "frozenset"):
+            return True
+    if isinstance(node, ast.BinOp) and isinstance(node.op, (ast.BitAnd,
+                                                            ast.BitOr,
+                                                            ast.Sub)):
+        # set algebra: `pending & batchable`, `a - b` of sets — only
+        # flagged when one side is syntactically a set
+        return _is_set_expr(node.left) or _is_set_expr(node.right)
+    return False
+
+
+def check_set_iteration(corpus) -> Iterator[Finding]:
+    for sf in corpus:
+        if not any(sf.in_package(p) for p in _WIRE_PACKAGES):
+            continue
+        iters = []
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.For):
+                iters.append((node.iter, node))
+            elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                                   ast.GeneratorExp)):
+                for gen in node.generators:
+                    iters.append((gen.iter, node))
+        for it, at in iters:
+            if _is_set_expr(it):
+                yield Finding(
+                    "RPL502", sf.rel, at.lineno, at.col_offset,
+                    "iteration over a set in wire-frame-constructing "
+                    "code (repro.hw / repro.serving) — set order is "
+                    "per-process, so the op stream (and therefore the "
+                    "device physics it executes) would differ between "
+                    "runs; iterate a list/tuple or wrap in sorted()",
+                    line_at(sf, at))
+
+
+RULES = [
+    Rule(
+        "RPL501", "seeds derive from configuration", check_wallclock_seeds,
+        "PRNG constructors (jax.random.PRNGKey/key, "
+        "np.random.default_rng/seed/RandomState) must not be fed from "
+        "wall-clock or entropy sources (time.time, datetime.now, "
+        "os.urandom, os.getpid, uuid4).\n\n"
+        "Why: every correctness gate in this repo — transport "
+        "bit-identity, token-identity at sigma=0, the benchmark "
+        "regression gate — compares seeded reruns.  One wall-clock "
+        "seed anywhere upstream and those gates compare noise to "
+        "noise, i.e. they stop gating.\n\n"
+        "Fix: accept a seed in the config/CLI (as every benchmark and "
+        "the gateway's Poisson workload already do) and derive "
+        "per-component keys with jax.random.split / fold_in."),
+    Rule(
+        "RPL502", "no set iteration into wire frames", check_set_iteration,
+        "Inside repro.hw and repro.serving (the packages that build "
+        "wire frames and op lists), iterating a set / frozenset / set "
+        "algebra expression is forbidden — wrap in sorted() or use an "
+        "ordered container.\n\n"
+        "Why: set iteration order varies with insertion history and "
+        "per-process hash state.  Driver ops are *stateful* (writes, "
+        "drift advances, metered probes), so an op list whose order "
+        "comes from a set executes different physics per process — "
+        "breaking batched ≡ sequential bit-identity on exactly the "
+        "transport that batched it, the hardest bug class to bisect.\n\n"
+        "Fix: `for op in sorted(ops):` or keep the collection a list; "
+        "membership tests on sets remain fine."),
+]

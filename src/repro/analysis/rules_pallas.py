@@ -1,0 +1,267 @@
+"""RPL4xx — Pallas call-site analyzers.
+
+``pl.pallas_call`` wires a kernel body to its operands positionally:
+the kernel receives ``num_scalar_prefetch`` scalar refs, then one ref
+per ``in_specs`` entry, then one ref per output, then one ref per
+``scratch_shapes`` entry.  Every ``BlockSpec`` index map receives the
+grid indices (plus, under ``PrefetchScalarGridSpec``, the scalar-
+prefetch refs).  ``input_output_aliases`` maps *call-operand* indices
+(scalar-prefetch operands included) to output indices.
+
+None of this is checked until the kernel actually runs — and
+``interpret=True`` (the default off-TPU here) reports arity mismatches
+with notoriously indirect errors, while on a real TPU backend Mosaic
+fails at compile time inside a jit trace.  These analyzers validate the
+counts statically at the call site, where the fix is obvious.
+
+Checked call sites in-tree: ``kernels/paged_kv.py``,
+``kernels/ptc_block_matmul.py``, ``kernels/mesh_apply.py``,
+``kernels/sigma_grad.py``, ``kernels/feedback_matmul.py`` — and any
+future ``pallas_call`` anywhere in the linted paths.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from .astutil import (SourceFile, call_name, func_arity, lambda_arity,
+                      line_at, resolve_local)
+from .findings import Finding, Rule
+
+__all__ = ["RULES"]
+
+
+def _kwarg(call: ast.Call, name: str):
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _enclosing_scopes(sf: SourceFile, target: ast.AST):
+    """Module + function scopes lexically containing ``target``."""
+    scopes = [sf.tree]
+
+    def visit(node):
+        for child in ast.iter_child_nodes(node):
+            if child is target or any(n is target for n in ast.walk(child)):
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    scopes.append(child)
+                visit(child)
+                return
+    visit(sf.tree)
+    return scopes
+
+
+def _resolve(sf: SourceFile, site: ast.Call, node: ast.AST):
+    """Follow one level of `name = <expr>` indirection near the site."""
+    if isinstance(node, ast.Name):
+        for scope in reversed(_enclosing_scopes(sf, site)):
+            hit = resolve_local(scope, node.id)
+            if hit is not None:
+                return hit
+    return node
+
+
+def _seq_len(node: ast.AST) -> int | None:
+    if isinstance(node, (ast.List, ast.Tuple)):
+        return len(node.elts)
+    return None
+
+
+class CallSite:
+    """Statically-extracted facts about one pallas_call site."""
+
+    def __init__(self, sf: SourceFile, call: ast.Call):
+        self.sf, self.call = sf, call
+        grid_src = call
+        self.prefetch = 0
+        spec = _kwarg(call, "grid_spec")
+        if isinstance(spec, ast.Call):
+            grid_src = spec
+            name = call_name(spec) or ""
+            if name.rsplit(".", 1)[-1] == "PrefetchScalarGridSpec":
+                n = _kwarg(spec, "num_scalar_prefetch")
+                if isinstance(n, ast.Constant) and isinstance(n.value, int):
+                    self.prefetch = n.value
+        self.grid = _resolve(sf, call, _kwarg(grid_src, "grid"))
+        self.grid_rank = _seq_len(self.grid) if self.grid is not None else None
+        if self.grid is not None and self.grid_rank is None \
+                and not isinstance(self.grid, ast.Name):
+            self.grid_rank = 1 if not isinstance(
+                self.grid, (ast.List, ast.Tuple)) else None
+        ins = _resolve(sf, call, _kwarg(grid_src, "in_specs"))
+        self.in_specs = ins.elts if isinstance(ins, (ast.List, ast.Tuple)) \
+            else None
+        outs = _kwarg(grid_src, "out_specs")
+        if isinstance(outs, (ast.List, ast.Tuple)):
+            self.out_specs = list(outs.elts)
+        elif outs is not None:
+            self.out_specs = [outs]
+        else:
+            # fall back to out_shape arity (single struct = one output)
+            osh = _kwarg(call, "out_shape")
+            self.out_specs = (list(osh.elts)
+                              if isinstance(osh, (ast.List, ast.Tuple))
+                              else [osh] if osh is not None else None)
+        scr = _resolve(sf, call, _kwarg(grid_src, "scratch_shapes"))
+        self.n_scratch = _seq_len(scr) if scr is not None else 0
+        self.aliases = _kwarg(call, "input_output_aliases")
+        # kernel: first positional arg, possibly through functools.partial
+        self.kernel = call.args[0] if call.args else None
+        self.bound = 0
+        if isinstance(self.kernel, ast.Call):
+            kname = call_name(self.kernel) or ""
+            if kname.rsplit(".", 1)[-1] == "partial":
+                self.bound = len(self.kernel.args) - 1
+                self.kernel = self.kernel.args[0] if self.kernel.args else None
+
+    def kernel_def(self):
+        if not isinstance(self.kernel, ast.Name):
+            return None
+        hit = None
+        for node in ast.walk(self.sf.tree):
+            if isinstance(node, ast.FunctionDef) \
+                    and node.name == self.kernel.id:
+                hit = node
+        return hit
+
+
+def _sites(corpus) -> Iterator[CallSite]:
+    for sf in corpus:
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Call):
+                name = call_name(node)
+                if name is not None \
+                        and name.rsplit(".", 1)[-1] == "pallas_call":
+                    yield CallSite(sf, node)
+
+
+def check_kernel_arity(corpus) -> Iterator[Finding]:
+    for site in _sites(corpus):
+        kdef = site.kernel_def()
+        if kdef is None or site.in_specs is None or site.out_specs is None:
+            continue
+        arity = func_arity(kdef)
+        if arity is None:
+            continue
+        want = (site.prefetch + len(site.in_specs) + len(site.out_specs)
+                + (site.n_scratch or 0))
+        have = arity + site.bound
+        if have != want:
+            yield Finding(
+                "RPL401", site.sf.rel, site.call.lineno,
+                site.call.col_offset,
+                f"kernel {kdef.name!r} takes {arity} ref(s)"
+                + (f" (+{site.bound} partial-bound)" if site.bound else "")
+                + f" but the call wires {want}: {site.prefetch} scalar-"
+                f"prefetch + {len(site.in_specs)} in_specs + "
+                f"{len(site.out_specs)} output(s) + "
+                f"{site.n_scratch or 0} scratch",
+                line_at(site.sf, site.call))
+
+
+def check_index_map_arity(corpus) -> Iterator[Finding]:
+    for site in _sites(corpus):
+        if site.grid_rank is None:
+            continue
+        want = site.grid_rank + site.prefetch
+        specs = list(site.in_specs or [])
+        if site.out_specs:
+            specs += [s for s in site.out_specs
+                      if isinstance(s, ast.Call)]
+        for spec in specs:
+            if not isinstance(spec, ast.Call):
+                continue
+            sname = call_name(spec) or ""
+            if sname.rsplit(".", 1)[-1] != "BlockSpec":
+                continue
+            imap = _kwarg(spec, "index_map")
+            if imap is None and len(spec.args) >= 2:
+                imap = spec.args[1]
+            if not isinstance(imap, ast.Lambda):
+                continue
+            arity = lambda_arity(imap)
+            if arity is not None and arity != want:
+                yield Finding(
+                    "RPL402", site.sf.rel, imap.lineno, imap.col_offset,
+                    f"index_map takes {arity} arg(s) but the grid has "
+                    f"rank {site.grid_rank}"
+                    + (f" plus {site.prefetch} scalar-prefetch ref(s)"
+                       if site.prefetch else "")
+                    + f" = {want} expected",
+                    line_at(site.sf, imap))
+
+
+def check_io_aliases(corpus) -> Iterator[Finding]:
+    for site in _sites(corpus):
+        if not isinstance(site.aliases, ast.Dict):
+            continue
+        n_in = (site.prefetch + len(site.in_specs)
+                if site.in_specs is not None else None)
+        n_out = len(site.out_specs) if site.out_specs is not None else None
+        for k, v in zip(site.aliases.keys, site.aliases.values):
+            ki = k.value if isinstance(k, ast.Constant) \
+                and isinstance(k.value, int) else None
+            vi = v.value if isinstance(v, ast.Constant) \
+                and isinstance(v.value, int) else None
+            if ki is not None and n_in is not None \
+                    and not (0 <= ki < n_in):
+                yield Finding(
+                    "RPL403", site.sf.rel, site.aliases.lineno,
+                    site.aliases.col_offset,
+                    f"input_output_aliases input index {ki} out of range "
+                    f"for {n_in} call operand(s) (scalar-prefetch "
+                    f"operands count)",
+                    line_at(site.sf, site.aliases))
+            if vi is not None and n_out is not None \
+                    and not (0 <= vi < n_out):
+                yield Finding(
+                    "RPL403", site.sf.rel, site.aliases.lineno,
+                    site.aliases.col_offset,
+                    f"input_output_aliases output index {vi} out of "
+                    f"range for {n_out} output(s)",
+                    line_at(site.sf, site.aliases))
+
+
+RULES = [
+    Rule(
+        "RPL401", "pallas kernel arity", check_kernel_arity,
+        "A pallas kernel's parameter count must equal "
+        "num_scalar_prefetch + len(in_specs) + number of outputs + "
+        "len(scratch_shapes) (minus any functools.partial-bound "
+        "leading args).\n\n"
+        "Why: the wiring is positional and unchecked until runtime; "
+        "interpret=True (the off-TPU default in kernels/ops.py) "
+        "surfaces a mismatch as an opaque shape error deep inside the "
+        "interpreter, and Mosaic fails at jit-trace time on TPU.  The "
+        "static count makes the mistake a one-line lint message at the "
+        "call site.\n\n"
+        "Fix: add/remove the kernel ref parameter, or fix the spec "
+        "lists."),
+    Rule(
+        "RPL402", "index_map arity vs grid rank", check_index_map_arity,
+        "Every BlockSpec index_map lambda must take exactly "
+        "len(grid) arguments — plus num_scalar_prefetch trailing "
+        "scalar-ref arguments under PrefetchScalarGridSpec (e.g. "
+        "`lambda bb, jj, t` for grid rank 2 + 1 prefetched table).\n\n"
+        "Why: a wrong-arity index map is a TypeError at trace time on "
+        "TPU, but in interpret mode some arities *run* with silently "
+        "shifted block indexing — the kernel reads the wrong tiles and "
+        "produces plausible garbage.\n\n"
+        "Fix: match the lambda to the grid (and prefetch count) at the "
+        "call site."),
+    Rule(
+        "RPL403", "input_output_aliases validity", check_io_aliases,
+        "input_output_aliases keys index the pallas_call's positional "
+        "operands (scalar-prefetch operands INCLUDED, e.g. pages is "
+        "operand 2 in paged_scatter(idx, new, pages)); values index "
+        "its outputs.  Both must be in range.\n\n"
+        "Why: an out-of-range or off-by-one alias either fails deep in "
+        "jax's donation machinery or aliases the WRONG buffer — an "
+        "in-place scatter into a live input is silent data corruption "
+        "of the shared KV pool.\n\n"
+        "Fix: count operands including the prefetched scalars; alias "
+        "the intended buffer only."),
+]

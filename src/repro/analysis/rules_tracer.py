@@ -1,0 +1,230 @@
+"""RPL3xx — tracer-safety analyzers.
+
+jax traces a function once and replays the recorded graph; anything
+that is not a jax op executes at *trace time only* and its result is
+baked into the graph as a constant.  A ``time.time()`` or global
+``np.random.*`` draw inside a jitted function therefore "works" while
+silently freezing one sample forever; ``.item()`` / ``float()`` on a
+traced array raises a ConcretizationTypeError at best.
+
+The sharpest instance in this repo is the ``ptc_execution`` hook
+(``models/layers.py``): the hook dispatch is tracer-guarded, so a
+hooked model called under jit/scan/vmap *silently stays digital* — the
+exact failure mode that would turn "hardware-in-the-loop" serving into
+a digital simulation while reporting success.  Installing the hook
+inside traced code is therefore always a bug.
+
+These rules are lexical: they look at functions that are *somewhere in
+this module* passed to ``jax.jit`` / ``lax.scan`` / ``jax.vmap`` /
+``pl.pallas_call`` etc. (or decorated with jit), and flag host-side
+effects inside their bodies.  Like all of repro-lint they are
+best-effort static checks, not a dynamic proof — which is exactly why
+the runtime guard in ``_hook_dispatch`` also exists.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from .astutil import SourceFile, call_name, dotted, line_at
+from .findings import Finding, Rule
+
+__all__ = ["RULES"]
+
+# callee leaf names that trace their function argument(s); value = the
+# positional indices of the traced callables
+TRACING_CALLS = {
+    "jit": (0,), "pjit": (0,), "vmap": (0,), "pmap": (0,),
+    "grad": (0,), "value_and_grad": (0,), "checkpoint": (0,),
+    "remat": (0,), "custom_jvp": (0,), "custom_vjp": (0,),
+    "scan": (0,), "while_loop": (0, 1), "fori_loop": (2,),
+    "cond": (1, 2), "switch": None,     # switch: every arg after 0
+    "pallas_call": (0,),
+}
+
+# decorator spellings that mark a def as traced
+_JIT_DECOS = frozenset(["jit", "pjit"])
+
+# host-side effect callees (dotted suffixes) that must not run under
+# trace — wall clock, global RNG state, entropy
+HOST_EFFECTS = (
+    "time.time", "time.time_ns", "time.perf_counter",
+    "time.perf_counter_ns", "time.monotonic", "time.sleep",
+    "datetime.now", "datetime.utcnow", "os.urandom",
+)
+# module-global RNG state (jax.random is keyed and fine; stdlib
+# `random` is excluded to avoid colliding with `from jax import random`)
+HOST_EFFECT_PREFIXES = ("np.random.", "numpy.random.")
+
+
+def _is_jit_decorated(fn: ast.FunctionDef) -> bool:
+    for deco in fn.decorator_list:
+        if isinstance(deco, ast.Call):
+            name = call_name(deco)
+            # functools.partial(jax.jit, ...) — first arg is the jit
+            if name is not None and name.rsplit(".", 1)[-1] == "partial" \
+                    and deco.args:
+                iname = dotted(deco.args[0])
+                if iname is not None \
+                        and iname.rsplit(".", 1)[-1] in _JIT_DECOS:
+                    return True
+        else:
+            name = dotted(deco)
+        if name is not None and name.rsplit(".", 1)[-1] in _JIT_DECOS:
+            return True
+    return False
+
+
+def _traced_callables(sf: SourceFile):
+    """(node, reason) for every FunctionDef/Lambda in the module that is
+    traced: jit-decorated, or passed by name/position to a tracing
+    transform anywhere in the module."""
+    defs_by_name: dict[str, list[ast.AST]] = {}
+    for node in ast.walk(sf.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs_by_name.setdefault(node.name, []).append(node)
+
+    traced: dict[ast.AST, str] = {}
+    for node in ast.walk(sf.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and _is_jit_decorated(node):
+            traced.setdefault(node, "decorated with jax.jit")
+        if not isinstance(node, ast.Call):
+            continue
+        fn = call_name(node)
+        if fn is None:
+            continue
+        leaf = fn.rsplit(".", 1)[-1]
+        if leaf not in TRACING_CALLS:
+            continue
+        idxs = TRACING_CALLS[leaf]
+        if idxs is None:                       # lax.switch: branches 1..n
+            idxs = tuple(range(1, len(node.args)))
+        for i in idxs:
+            if i >= len(node.args):
+                continue
+            arg = node.args[i]
+            reason = f"passed to {fn}"
+            if isinstance(arg, ast.Lambda):
+                traced.setdefault(arg, reason)
+            elif isinstance(arg, ast.Name):
+                for d in defs_by_name.get(arg.id, []):
+                    traced.setdefault(d, reason)
+    return traced
+
+
+def _body_params(fn: ast.AST) -> set:
+    a = fn.args
+    return {p.arg for p in (*a.posonlyargs, *a.args, *a.kwonlyargs)}
+
+
+def _host_effect(fn_name: str) -> bool:
+    if any(fn_name == s or fn_name.endswith("." + s) for s in HOST_EFFECTS):
+        return True
+    return any(fn_name.startswith(p) for p in HOST_EFFECT_PREFIXES)
+
+
+def check_host_effects(corpus) -> Iterator[Finding]:
+    for sf in corpus:
+        for fn, reason in _traced_callables(sf).items():
+            params = _body_params(fn)
+            body = fn.body if isinstance(fn.body, list) else [fn.body]
+            for stmt in body:
+                for node in ast.walk(stmt):
+                    if not isinstance(node, ast.Call):
+                        continue
+                    name = call_name(node)
+                    if name is not None and _host_effect(name):
+                        yield Finding(
+                            "RPL301", sf.rel, node.lineno, node.col_offset,
+                            f"host-side effect {name}() inside a traced "
+                            f"function ({reason}) — executes at trace "
+                            f"time only and bakes a constant into the "
+                            f"compiled graph",
+                            line_at(sf, node))
+                    elif (isinstance(node.func, ast.Attribute)
+                          and node.func.attr == "item"
+                          and not node.args):
+                        yield Finding(
+                            "RPL301", sf.rel, node.lineno, node.col_offset,
+                            f".item() inside a traced function ({reason}) "
+                            f"— concretizes a tracer "
+                            f"(ConcretizationTypeError at best, a baked "
+                            f"constant at worst)",
+                            line_at(sf, node))
+                    elif (isinstance(node.func, ast.Name)
+                          and node.func.id == "float" and node.args
+                          and _param_derived(node.args[0], params)):
+                        yield Finding(
+                            "RPL301", sf.rel, node.lineno, node.col_offset,
+                            f"float() on a traced argument inside a "
+                            f"traced function ({reason}) — concretizes "
+                            f"the tracer",
+                            line_at(sf, node))
+
+
+def _param_derived(node: ast.AST, params: set) -> bool:
+    """The expression is rooted at a function parameter (so, under
+    trace, almost certainly a tracer)."""
+    while isinstance(node, (ast.Subscript, ast.Attribute)):
+        node = node.value
+    return isinstance(node, ast.Name) and node.id in params
+
+
+def check_hook_install(corpus) -> Iterator[Finding]:
+    for sf in corpus:
+        traced = _traced_callables(sf)
+        for fn, reason in traced.items():
+            body = fn.body if isinstance(fn.body, list) else [fn.body]
+            for stmt in body:
+                for node in ast.walk(stmt):
+                    if (isinstance(node, ast.Call)
+                            and (name := call_name(node)) is not None
+                            and name.rsplit(".", 1)[-1] == "ptc_execution"):
+                        yield Finding(
+                            "RPL302", sf.rel, node.lineno, node.col_offset,
+                            f"ptc_execution(...) hook installed inside a "
+                            f"traced function ({reason}) — the hook only "
+                            f"fires on concrete inputs, so under "
+                            f"jit/scan/vmap every PTC call silently "
+                            f"stays digital and 'hardware-in-the-loop' "
+                            f"becomes a simulation",
+                            line_at(sf, node))
+
+
+RULES = [
+    Rule(
+        "RPL301", "no host effects under trace", check_host_effects,
+        "Functions passed to jax.jit / lax.scan / jax.vmap / "
+        "lax.fori_loop / pl.pallas_call (or decorated with jit) must "
+        "not call wall-clock (`time.time`), global-state RNG "
+        "(`np.random.*`, stdlib `random.*`), entropy (`os.urandom`), "
+        "or concretize tracers (`.item()`, `float()` on a parameter-"
+        "derived value).\n\n"
+        "Why: jax traces once and replays the graph — host effects run "
+        "at trace time only, freezing one sample/timestamp into the "
+        "compiled computation.  A drift step that drew `np.random` "
+        "inside a scanned body would replay the identical 'random' walk "
+        "every step while looking correct in eager tests.\n\n"
+        "Fix: thread `jax.random` keys (split per step), take "
+        "timestamps outside the traced region, and keep concretization "
+        "(`float`, `.item`) on already-materialized outputs."),
+    Rule(
+        "RPL302", "no ptc_execution install under trace",
+        check_hook_install,
+        "`ptc_execution(...)` (models/layers.py) must never be "
+        "installed inside a function that jax traces.\n\n"
+        "Why: the hook dispatch is tracer-guarded — under jit/scan/vmap "
+        "a hooked PTC linear sees tracers and silently falls back to "
+        "the digital matmul.  Installing the hook under trace therefore "
+        "*succeeds* while every layer quietly bypasses the routed "
+        "chip: serving reports hardware-in-the-loop results that never "
+        "touched the (simulated) hardware.  This is the failure mode "
+        "in-situ protocols are warned about (power-aware sparse-ZO, "
+        "Gu et al.) — the measurement path degrading to the model "
+        "path without an error.\n\n"
+        "Fix: install the hook around an *unjitted, unrolled* decode "
+        "loop (launch/serve.py does), never inside jit/scan/vmap "
+        "bodies; runtime/hw_serve.py documents the legal pattern."),
+]

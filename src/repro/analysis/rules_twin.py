@@ -1,0 +1,194 @@
+"""RPL1xx — twin-boundary analyzers.
+
+The paper's whole premise (§3.2) is that on-chip learning sees only the
+*observable* chip state: the end-to-end UΣV* response, the commanded
+(not realized) settings, and metered probe results.  The digital twin's
+ground truth — realized unitaries, drift state, exact mapping
+distances — exists in this repo only for diagnostics, quarantined
+behind ``driver.unsafe_twin()``.  Code that reaches around that hatch
+is not "cheating a simulation detail": it is silently converting the
+in-situ protocol into the idealized-model training the paper exists to
+avoid, and it would break outright on real hardware (where the twin
+modules simply do not exist).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from .astutil import SourceFile, line_at
+from .findings import Finding, Rule
+
+__all__ = ["RULES"]
+
+# modules of repro.hw that are device-side internals: the twin physics,
+# the realization sampler, the OU drift walk, the in-situ search jobs,
+# and the wire server that hosts them.  Only repro.hw itself may import
+# these; everything else routes through the `repro.hw` package surface
+# (re-exported configs/factories) or `driver.unsafe_twin()`.
+INTERNAL_MODULES = frozenset(["twin", "device", "drift", "jobs", "server"])
+
+# symbols that only exist device-side; control-plane code naming them
+# (outside an unsafe_twin() chain) has crossed the boundary
+INTERNAL_SYMBOLS = frozenset([
+    "DeviceRealization", "sample_device", "realized_unitaries",
+    "realized_blocks", "DriftState", "init_drift", "TwinHandle",
+    "chip_forward",
+])
+# legal only through the hatch: `driver.unsafe_twin().<attr>`
+HATCH_ONLY_ATTRS = frozenset(["true_mapping_distance", "bias_deviation"])
+
+# where unsafe_twin() may be *called*: tests, benchmarks, examples, the
+# hw package itself (TwinDriver defines it; the server's unsafe/* ops
+# and the stream client's remote handle back it), and the fleet
+# registry's true_*distances diagnostics
+UNSAFE_TWIN_ALLOWLIST = (
+    "tests", "benchmarks", "examples", "repro.hw", "repro.analysis",
+    "repro.runtime.fleet",
+)
+
+
+def _is_exempt(sf: SourceFile, prefixes) -> bool:
+    return any(sf.in_package(p) for p in prefixes)
+
+
+def _import_targets(node: ast.AST) -> Iterator[tuple[str, ast.AST]]:
+    """(dotted module, node) for every module an import statement touches."""
+    if isinstance(node, ast.Import):
+        for alias in node.names:
+            yield alias.name, node
+    elif isinstance(node, ast.ImportFrom):
+        mod = "." * node.level + (node.module or "")
+        yield mod, node
+
+
+def _targets_internal(mod: str) -> str | None:
+    """The internal hw module a dotted import path reaches, if any.
+
+    Matches absolute (``repro.hw.twin``), relative (``..hw.drift``,
+    ``.twin`` from inside hw) and bare (``hw.device``) spellings.
+    """
+    parts = [p for p in mod.lstrip(".").split(".") if p]
+    for i, p in enumerate(parts):
+        if p == "hw" and i + 1 < len(parts) and parts[i + 1] in INTERNAL_MODULES:
+            return parts[i + 1]
+    return None
+
+
+def check_twin_imports(corpus) -> Iterator[Finding]:
+    for sf in corpus:
+        if _is_exempt(sf, ("repro.hw", "repro.analysis",
+                           "tests", "benchmarks", "examples")):
+            continue
+        for node in ast.walk(sf.tree):
+            for mod, at in _import_targets(node):
+                hit = _targets_internal(mod)
+                if hit is not None:
+                    yield Finding(
+                        "RPL101", sf.rel, at.lineno, at.col_offset,
+                        f"import of twin-internal module 'hw.{hit}' outside "
+                        f"repro.hw — route through the repro.hw package "
+                        f"surface or driver.unsafe_twin()",
+                        line_at(sf, at))
+
+
+def check_unsafe_twin_callsites(corpus) -> Iterator[Finding]:
+    for sf in corpus:
+        if _is_exempt(sf, UNSAFE_TWIN_ALLOWLIST):
+            continue
+        for node in ast.walk(sf.tree):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "unsafe_twin"):
+                yield Finding(
+                    "RPL102", sf.rel, node.lineno, node.col_offset,
+                    "unsafe_twin() call outside the diagnostic allowlist "
+                    "(tests, benchmarks, repro.hw, runtime/fleet.py) — "
+                    "control-plane code must stay on the observable surface",
+                    line_at(sf, node))
+
+
+def _via_hatch(node: ast.Attribute) -> bool:
+    """True when the attribute hangs off an ``unsafe_twin()`` chain."""
+    for sub in ast.walk(node.value):
+        if (isinstance(sub, ast.Call)
+                and isinstance(sub.func, ast.Attribute)
+                and sub.func.attr == "unsafe_twin"):
+            return True
+        if isinstance(sub, ast.Name) and "unsafe" in sub.id:
+            # a handle variable like `h = driver.unsafe_twin()` — covered
+            # by the RPL102 allowlist at the call site
+            return True
+    return False
+
+
+def check_twin_symbols(corpus) -> Iterator[Finding]:
+    for sf in corpus:
+        if _is_exempt(sf, ("repro.hw", "repro.analysis",
+                           "tests", "benchmarks", "examples")):
+            continue
+        for node in ast.walk(sf.tree):
+            name = None
+            if isinstance(node, ast.Name) and node.id in INTERNAL_SYMBOLS:
+                name = node.id
+            elif isinstance(node, ast.Attribute):
+                if node.attr in INTERNAL_SYMBOLS:
+                    name = node.attr
+                elif node.attr in HATCH_ONLY_ATTRS and not _via_hatch(node):
+                    name = node.attr
+            if name is not None:
+                yield Finding(
+                    "RPL103", sf.rel, node.lineno, node.col_offset,
+                    f"twin-internal symbol {name!r} referenced in "
+                    f"control-plane code — only reachable through "
+                    f"driver.unsafe_twin() in allowlisted diagnostics",
+                    line_at(sf, node))
+
+
+RULES = [
+    Rule(
+        "RPL101", "twin-internal import boundary", check_twin_imports,
+        "Only modules inside `repro.hw` may import the device-side "
+        "internals `hw.twin`, `hw.device`, `hw.drift`, `hw.jobs`, or "
+        "`hw.server` (any spelling: absolute, relative, or bare).\n\n"
+        "Why: those modules hold the simulated ground truth (realized "
+        "unitaries, OU drift state) that does not exist on real "
+        "hardware.  Control-plane code that imports them compiles "
+        "against a fiction — it would train on information the chip "
+        "cannot give it (the idealized-model failure mode L2ight §3.2 "
+        "exists to avoid) and crash on a real instrument driver.\n\n"
+        "Fix: import the re-exported configuration/factory surface from "
+        "`repro.hw` (e.g. `from ..hw import DriftConfig, make_twin`), "
+        "or route twin readouts through `driver.unsafe_twin()` from an "
+        "allowlisted diagnostic context."),
+    Rule(
+        "RPL102", "unsafe_twin() call-site allowlist",
+        check_unsafe_twin_callsites,
+        "`driver.unsafe_twin()` is the single audited escape hatch to "
+        "twin ground truth, and its call sites are restricted to: "
+        "tests, benchmarks, examples, `repro.hw` itself, and "
+        "`repro.runtime.fleet`'s true_*distances diagnostics.\n\n"
+        "Why: every call site is a place the stack depends on "
+        "information a real chip cannot provide.  Keeping the list "
+        "explicit (and small) is what makes the hardware-in-the-loop "
+        "claim auditable: on real hardware the hatch raises "
+        "TwinUnavailable, so anything outside diagnostics would break.\n\n"
+        "Fix: compute the quantity from observable probes "
+        "(driver.forward / readback_bases), or move the diagnostic into "
+        "tests/benchmarks.  Extending the allowlist is an explicit, "
+        "reviewed edit to repro/analysis/rules_twin.py."),
+    Rule(
+        "RPL103", "twin-internal symbol quarantine", check_twin_symbols,
+        "Control-plane code (src/repro outside repro.hw) may not "
+        "reference device-side symbols (DeviceRealization, "
+        "sample_device, realized_unitaries, DriftState, init_drift, "
+        "TwinHandle, chip_forward, ...), and may reach "
+        "`true_mapping_distance` / `bias_deviation` only through an "
+        "`unsafe_twin()` chain.\n\n"
+        "Why: this is the AST-accurate version of the old regex guard "
+        "in tests/test_driver.py — naming these symbols at all means "
+        "the code's logic depends on unobservable state.\n\n"
+        "Fix: as RPL101/RPL102 — use the observable driver surface, or "
+        "move the code into a diagnostic context."),
+]

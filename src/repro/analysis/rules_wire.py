@@ -1,0 +1,351 @@
+"""RPL2xx — wire-protocol consistency analyzers.
+
+The v3 driver protocol is defined in three places that nothing (until
+now) forced to agree:
+
+* ``repro/hw/driver.py`` — ``BATCHABLE_OPS``, the op whitelist every
+  transport enforces symmetrically;
+* ``repro/hw/server.py:_dispatch`` — the server's ``op == "..."``
+  branches and the payload keys each branch reads (``kw["x"]`` /
+  ``kw.get("x")`` / ``_rng(kw)``);
+* ``repro/hw/stream_driver.py`` — the client emitters
+  (``self._exec(op, ...)`` / ``self._queue(op, ...)``) and the payload
+  keys they encode (``self._wire_kw(op, dict(...))``).
+
+A new op added to one side but not the others ships *half-wired*: it
+either round-trips to an "unknown op" error, silently drops payload
+keys the server never reads, or dies inside a batch frame on exactly
+one transport.  These analyzers cross-check all three definitions
+statically, so the failure is a lint error at commit time instead of a
+runtime surprise on the transport the author didn't test.
+
+The analyzers locate the three files *within the linted corpus* by
+module name (``repro.hw.driver`` etc.), so they run unchanged against
+the real tree, a test fixture tree, or a deliberately broken copy.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from .astutil import SourceFile, call_name, const_str, line_at
+from .findings import Finding, Rule
+
+__all__ = ["RULES", "WireModel", "extract_wire_model"]
+
+# ops that are session control, not data plane: dispatched outside the
+# whitelist on purpose
+CONTROL_OPS = frozenset(["init", "shutdown", "batch", "meta"])
+
+
+class WireModel:
+    """Everything the three protocol files statically declare."""
+
+    def __init__(self):
+        self.batchable: set[str] = set()
+        self.batchable_node = None          # (sf, node) anchor
+        self.pipelined: set[str] = set()
+        self.server_ops: dict[str, tuple] = {}       # op -> (sf, node)
+        self.server_reads: dict[str, dict] = {}      # op -> {key: "hard"|"soft"}
+        self.client_ops: dict[str, tuple] = {}       # op -> (sf, node)
+        self.client_keys: dict[str, dict] = {}       # op -> {key: (sf, node)}
+        self.found = set()                  # which of the three files exist
+
+
+def _collect_str_elts(node: ast.AST) -> list[str]:
+    """String constants inside frozenset([...]) / {...} / [...] / (...)."""
+    if isinstance(node, ast.Call) and node.args:
+        return _collect_str_elts(node.args[0])
+    if isinstance(node, (ast.List, ast.Tuple, ast.Set)):
+        return [s for e in node.elts if (s := const_str(e)) is not None]
+    return []
+
+
+def _scan_driver(model: WireModel, sf: SourceFile) -> None:
+    model.found.add("driver")
+    for node in sf.tree.body:
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name) and tgt.id == "BATCHABLE_OPS":
+                    model.batchable = set(_collect_str_elts(node.value))
+                    model.batchable_node = (sf, node)
+
+
+def _kw_reads(body_nodes, reads: dict) -> None:
+    """Collect ``kw["k"]`` (hard), ``kw.get("k")`` / ``_rng(kw)`` /
+    ``_build_driver(kw)`` (soft / delegated) reads from a branch body."""
+    for stmt in body_nodes:
+        for node in ast.walk(stmt):
+            if (isinstance(node, ast.Subscript)
+                    and isinstance(node.value, ast.Name)
+                    and node.value.id == "kw"
+                    and (k := const_str(node.slice)) is not None):
+                reads[k] = "hard"
+            elif isinstance(node, ast.Call):
+                fn = call_name(node)
+                if (fn is not None and fn.endswith("kw.get") and node.args
+                        and (k := const_str(node.args[0])) is not None):
+                    reads.setdefault(k, "soft")
+                elif fn == "_rng" and node.args:
+                    reads.setdefault("block_range", "soft")
+
+
+def _scan_server(model: WireModel, sf: SourceFile) -> None:
+    model.found.add("server")
+    dispatch = build = None
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.FunctionDef):
+            if node.name == "_dispatch":
+                dispatch = node
+            elif node.name == "_build_driver":
+                build = node
+    if dispatch is None:
+        return
+    for node in ast.walk(dispatch):
+        if not isinstance(node, ast.If):
+            continue
+        t = node.test
+        if (isinstance(t, ast.Compare) and isinstance(t.left, ast.Name)
+                and t.left.id == "op" and len(t.ops) == 1
+                and isinstance(t.ops[0], ast.Eq)
+                and (op := const_str(t.comparators[0])) is not None):
+            model.server_ops[op] = (sf, node)
+            reads: dict = {}
+            if op != "batch":       # batch bodies read entry dicts, not kw
+                _kw_reads(node.body, reads)
+            model.server_reads[op] = reads
+    # `init` is handled in serve() by delegating kw to _build_driver
+    if build is not None:
+        reads: dict = {}
+        _kw_reads(build.body, reads)
+        model.server_ops.setdefault("init", (sf, build))
+        model.server_reads["init"] = reads
+
+
+def _payload_keys(node: ast.AST) -> dict | None:
+    """Keys of a ``dict(...)`` call or ``{...}`` literal payload."""
+    if isinstance(node, ast.Call) and call_name(node) == "dict":
+        if any(kw.arg is None for kw in node.keywords):
+            return None                       # **expansion: unknown
+        return {kw.arg: kw.value for kw in node.keywords}
+    if isinstance(node, ast.Dict):
+        out = {}
+        for k, v in zip(node.keys, node.values):
+            ks = const_str(k) if k is not None else None
+            if ks is None:
+                return None
+            out[ks] = v
+        return out
+    return None
+
+
+def _scan_client(model: WireModel, sf: SourceFile) -> None:
+    model.found.add("client")
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = call_name(node)
+        if fn is None:
+            continue
+        leaf = fn.rsplit(".", 1)[-1]
+        if leaf in ("_exec", "_queue") and node.args:
+            op = const_str(node.args[0])
+            if op is None:
+                continue
+            model.client_ops.setdefault(op, (sf, node))
+            if len(node.args) > 1:
+                keys = _payload_keys(node.args[1])
+                if keys:
+                    dst = model.client_keys.setdefault(op, {})
+                    for k in keys:
+                        dst.setdefault(k, (sf, node))
+        elif leaf == "_wire_kw" and len(node.args) >= 2:
+            op = const_str(node.args[0])
+            keys = _payload_keys(node.args[1])
+            if op is not None:
+                model.client_ops.setdefault(op, (sf, node))
+                if keys:
+                    dst = model.client_keys.setdefault(op, {})
+                    for k in keys:
+                        dst.setdefault(k, (sf, node))
+    # PIPELINED_OPS must stay a subset of BATCHABLE_OPS (they flush
+    # inside batch frames)
+    for stmt in sf.tree.body:
+        if isinstance(stmt, ast.Assign):
+            for tgt in stmt.targets:
+                if isinstance(tgt, ast.Name) and tgt.id == "PIPELINED_OPS":
+                    model.pipelined = set(_collect_str_elts(stmt.value))
+
+
+def extract_wire_model(corpus) -> WireModel:
+    model = WireModel()
+    for sf in corpus:
+        if sf.module == "repro.hw.driver":
+            _scan_driver(model, sf)
+        elif sf.module == "repro.hw.server":
+            _scan_server(model, sf)
+        elif sf.module == "repro.hw.stream_driver":
+            _scan_client(model, sf)
+    return model
+
+
+def _complete(model: WireModel) -> bool:
+    """Cross-file checks only fire when the whole trio was linted —
+    linting a subtree (e.g. just benchmarks) must not report the
+    protocol as half-wired because two of its files are out of scope."""
+    return model.found >= {"driver", "server", "client"}
+
+
+def _anchor(model: WireModel, op: str):
+    if op in model.server_ops:
+        return model.server_ops[op]
+    if op in model.client_ops:
+        return model.client_ops[op]
+    return model.batchable_node
+
+
+def check_server_coverage(corpus) -> Iterator[Finding]:
+    model = extract_wire_model(corpus)
+    if not _complete(model):
+        return
+    sf, node = model.batchable_node or (None, None)
+    for op in sorted(model.batchable - set(model.server_ops)):
+        yield Finding(
+            "RPL201", sf.rel, node.lineno, node.col_offset,
+            f"op {op!r} is in BATCHABLE_OPS but hw/server.py:_dispatch "
+            f"has no `op == {op!r}` branch — a wire peer batching it "
+            f"gets 'unknown op' after the whitelist admitted it",
+            line_at(sf, node))
+
+
+def check_client_coverage(corpus) -> Iterator[Finding]:
+    model = extract_wire_model(corpus)
+    if not _complete(model):
+        return
+    sf, node = model.batchable_node or (None, None)
+    for op in sorted(model.batchable - set(model.client_ops)):
+        yield Finding(
+            "RPL202", sf.rel, node.lineno, node.col_offset,
+            f"op {op!r} is in BATCHABLE_OPS but the StreamDriver client "
+            f"never emits it (no _exec/_queue/_wire_kw site) — the op "
+            f"is unreachable over the wire and its server branch is "
+            f"dead code",
+            line_at(sf, node))
+
+
+def check_whitelist_membership(corpus) -> Iterator[Finding]:
+    model = extract_wire_model(corpus)
+    if not _complete(model):
+        return
+    for op, (sf, node) in sorted(model.server_ops.items()):
+        if (op not in model.batchable and op not in CONTROL_OPS
+                and not op.startswith("unsafe/")):
+            yield Finding(
+                "RPL203", sf.rel, node.lineno, node.col_offset,
+                f"server dispatches op {op!r} which is neither in "
+                f"BATCHABLE_OPS nor a control/unsafe op — in-process "
+                f"run_batch would reject a list the wire accepts "
+                f"(transport asymmetry)",
+                line_at(sf, node))
+    for op, (sf, node) in sorted(model.client_ops.items()):
+        if (op not in model.batchable and op not in CONTROL_OPS
+                and not op.startswith("unsafe/")):
+            yield Finding(
+                "RPL203", sf.rel, node.lineno, node.col_offset,
+                f"client emits op {op!r} which is neither in "
+                f"BATCHABLE_OPS nor a control/unsafe op — it can never "
+                f"travel inside a batch frame, breaking pipelined "
+                f"flush ordering",
+                line_at(sf, node))
+    if model.pipelined - model.batchable:
+        sf, node = model.batchable_node
+        for op in sorted(model.pipelined - model.batchable):
+            yield Finding(
+                "RPL203", sf.rel, node.lineno, node.col_offset,
+                f"PIPELINED_OPS contains {op!r} which is not in "
+                f"BATCHABLE_OPS — queued writes flush inside batch "
+                f"frames, so every pipelined op must be batchable",
+                line_at(sf, node))
+
+
+def check_payload_keywords(corpus) -> Iterator[Finding]:
+    model = extract_wire_model(corpus)
+    if not _complete(model):
+        return
+    for op in sorted(set(model.server_reads) & set(model.client_ops)):
+        if op in ("batch", "meta"):
+            continue
+        reads = model.server_reads.get(op, {})
+        sent = model.client_keys.get(op, {})
+        hard = {k for k, kind in reads.items() if kind == "hard"}
+        for k in sorted(hard - set(sent)):
+            sf, node = model.server_ops[op]
+            yield Finding(
+                "RPL204", sf.rel, node.lineno, node.col_offset,
+                f"server op {op!r} reads kw[{k!r}] unconditionally but "
+                f"the client encoder never sends {k!r} — every wire "
+                f"call of this op raises KeyError server-side",
+                line_at(sf, node))
+        for k in sorted(set(sent) - set(reads)):
+            sf, node = sent[k]
+            yield Finding(
+                "RPL204", sf.rel, node.lineno, node.col_offset,
+                f"client encodes payload key {k!r} for op {op!r} but "
+                f"the server branch never reads it — the value is "
+                f"silently dropped on the wire",
+                line_at(sf, node))
+
+
+RULES = [
+    Rule(
+        "RPL201", "batchable op has a server branch", check_server_coverage,
+        "Every op in BATCHABLE_OPS (repro/hw/driver.py) must have a "
+        "matching `op == \"...\"` branch in hw/server.py:_dispatch.\n\n"
+        "Why: BATCHABLE_OPS is enforced symmetrically on every "
+        "transport — the whitelist admitting an op the server cannot "
+        "dispatch means a client-validated batch frame dies mid-list "
+        "server-side, after earlier ops already applied.\n\n"
+        "Fix: add the dispatch branch (and its payload decode) in the "
+        "same commit that extends BATCHABLE_OPS."),
+    Rule(
+        "RPL202", "batchable op has a client emitter", check_client_coverage,
+        "Every op in BATCHABLE_OPS must be emitted somewhere by the "
+        "StreamDriver client (`self._exec(op, ...)`, `self._queue(op, "
+        "...)`, or a `self._wire_kw(op, dict(...))` encode site).\n\n"
+        "Why: an op only the server knows is dead protocol surface — "
+        "it rots unreviewed and suggests the client half of a feature "
+        "was never shipped.\n\n"
+        "Fix: implement the client method, or remove the op from "
+        "BATCHABLE_OPS and the server."),
+    Rule(
+        "RPL203", "wire op whitelist symmetry", check_whitelist_membership,
+        "Ops dispatched by the server or emitted by the client must be "
+        "in BATCHABLE_OPS, a control op (init/shutdown/batch/meta), or "
+        "an `unsafe/*` twin-debug op; and PIPELINED_OPS must be a "
+        "subset of BATCHABLE_OPS.\n\n"
+        "Why: PR 4's post-review hardening made the whitelist "
+        "symmetric — an op accepted over the wire but rejected by "
+        "in-process run_batch (or vice versa) makes batched ≡ "
+        "sequential bit-identity transport-dependent, which is exactly "
+        "the bug class the conformance suite exists to prevent.  "
+        "Pipelined writes flush *inside* batch frames, so a pipelined "
+        "op outside the whitelist would poison every later frame.\n\n"
+        "Fix: add the op to BATCHABLE_OPS, or mark it control/unsafe "
+        "by design."),
+    Rule(
+        "RPL204", "payload keyword agreement", check_payload_keywords,
+        "For every op the client emits and the server dispatches, the "
+        "payload keywords must agree: a key the server reads as "
+        "`kw[\"k\"]` (no default) must be encoded by the client, and "
+        "every key the client encodes must be read (as `kw[\"k\"]`, "
+        "`kw.get(\"k\")`, or `_rng(kw)` for block_range) by the server "
+        "branch.\n\n"
+        "Why: a missing hard key is a guaranteed server-side KeyError "
+        "on every call; an unread client key is silent payload loss — "
+        "e.g. a `block_range` the server ignores would make a scoped "
+        "write land on the whole chip, corrupting co-resident "
+        "tenants.\n\n"
+        "Fix: wire the keyword through both sides (encode in "
+        "_wire_kw / the _exec payload, read in the _dispatch branch)."),
+]

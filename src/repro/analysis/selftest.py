@@ -1,0 +1,280 @@
+"""``--self-test``: prove every rule fires, and stays quiet when clean.
+
+Mirrors ``benchmarks/check_regression.py --self-test``: a gate that
+cannot demonstrate it would catch the failure it exists for is not a
+gate.  For each rule code we materialize a minimal fixture tree with
+exactly one injected violation, run the engine over it, and require the
+code to fire there — and *not* to fire on the corresponding clean twin.
+CI runs this before linting the real tree, so a rule silently broken by
+refactoring fails the build even when the tree itself is clean.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import tempfile
+
+from .engine import all_rules, run_lint
+
+__all__ = ["CASES", "run_self_test"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Case:
+    code: str
+    bad: dict      # rel path -> source with exactly one violation
+    clean: dict    # rel path -> source that must not fire the code
+
+
+# --- wire-protocol fixture trio -------------------------------------
+# The RPL2xx rules locate repro.hw.{driver,server,stream_driver} by
+# module name inside the corpus, so fixtures carry the same layout.
+
+def _trio(ops, server_ops, client_ops, server_extra="", pipelined=()):
+    """A minimal protocol trio.  ``server_ops``/``client_ops`` map
+    op -> payload keys (server: read hard; client: encoded)."""
+    driver = ("BATCHABLE_OPS = frozenset(%r)\n"
+              "PIPELINED_OPS = frozenset(%r)\n" % (sorted(ops),
+                                                   sorted(pipelined)))
+    branches = "".join(
+        "    if op == %r:\n        return {%s}\n" % (
+            op, ", ".join("%r: kw[%r]" % (k, k) for k in keys) or "'ok': 1")
+        for op, keys in server_ops.items())
+    server = ("def _dispatch(driver, op, kw):\n"
+              + branches + server_extra
+              + "    raise ValueError(op)\n")
+    methods = "".join(
+        "    def %s(self, **kw):\n"
+        "        return self._exec(%r, dict(%s))\n" % (
+            op.replace("/", "_"), op,
+            ", ".join("%s=kw[%r]" % (k, k) for k in keys))
+        for op, keys in client_ops.items())
+    client = ("class StreamDriver:\n"
+              "    def _exec(self, op, kw):\n"
+              "        return (op, kw)\n" + methods)
+    return {"repro/hw/driver.py": driver,
+            "repro/hw/server.py": server,
+            "repro/hw/stream_driver.py": client}
+
+
+_WIRED = _trio({"ping"}, {"ping": ["x"]}, {"ping": ["x"]})
+
+CASES = [
+    Case(
+        "RPL101",
+        bad={"repro/runtime/ctrl.py":
+             "from ..hw.twin import make_twin\n"
+             "def boot():\n    return make_twin\n"},
+        clean={"repro/runtime/ctrl.py":
+               "from ..hw import make_twin\n"
+               "def boot():\n    return make_twin\n"},
+    ),
+    Case(
+        "RPL102",
+        bad={"repro/core/opt.py":
+             "def probe(driver):\n    return driver.unsafe_twin()\n"},
+        clean={"tests/test_opt.py":
+               "def probe(driver):\n    return driver.unsafe_twin()\n"},
+    ),
+    Case(
+        "RPL103",
+        bad={"repro/core/opt.py":
+             "def peek(hw):\n    return hw.realized_unitaries\n"},
+        clean={"repro/core/opt.py":
+               "def peek(driver):\n    return driver.read_phases()\n"},
+    ),
+    Case(
+        "RPL201",
+        bad=_trio({"ping", "ghost"}, {"ping": ["x"]},
+                  {"ping": ["x"], "ghost": ["x"]}),
+        clean=_WIRED,
+    ),
+    Case(
+        "RPL202",
+        bad=_trio({"ping", "ghost"}, {"ping": ["x"], "ghost": ["x"]},
+                  {"ping": ["x"]}),
+        clean=_WIRED,
+    ),
+    Case(
+        "RPL203",
+        bad=_trio({"ping"}, {"ping": ["x"], "rogue": []},
+                  {"ping": ["x"], "rogue": []}),
+        clean=_WIRED,
+    ),
+    Case(
+        "RPL204",
+        bad=_trio({"ping"}, {"ping": ["x", "y"]}, {"ping": ["x"]}),
+        clean=_WIRED,
+    ),
+    Case(
+        "RPL301",
+        bad={"repro/runtime/step.py":
+             "import time\nimport jax\n"
+             "def f(x):\n    return x + time.time()\n"
+             "g = jax.jit(f)\n"},
+        clean={"repro/runtime/step.py":
+               "import time\nimport jax\n"
+               "def f(x):\n    return x * 2\n"
+               "g = jax.jit(f)\n"
+               "t0 = time.time()\n"},
+    ),
+    Case(
+        "RPL302",
+        bad={"repro/runtime/step.py":
+             "import jax\n"
+             "from ..models.layers import ptc_execution\n"
+             "def decode(m, x, driver):\n"
+             "    with ptc_execution(m, driver):\n"
+             "        return m(x)\n"
+             "g = jax.jit(decode)\n"},
+        clean={"repro/runtime/step.py":
+               "import jax\n"
+               "from ..models.layers import ptc_execution\n"
+               "def decode(m, x, driver):\n"
+               "    step = jax.jit(m)\n"
+               "    with ptc_execution(m, driver):\n"
+               "        return step(x)\n"},
+    ),
+    Case(
+        "RPL401",
+        bad={"repro/kernels/k.py":
+             "import jax.experimental.pallas as pl\n"
+             "def _kern(a_ref, o_ref):\n"
+             "    o_ref[...] = a_ref[...]\n"
+             "def run(a, b, s):\n"
+             "    return pl.pallas_call(\n"
+             "        _kern, grid=(4,),\n"
+             "        in_specs=[pl.BlockSpec((8,), lambda i: i),\n"
+             "                  pl.BlockSpec((8,), lambda i: i)],\n"
+             "        out_specs=pl.BlockSpec((8,), lambda i: i),\n"
+             "        out_shape=s)(a, b)\n"},
+        clean={"repro/kernels/k.py":
+               "import jax.experimental.pallas as pl\n"
+               "def _kern(a_ref, b_ref, o_ref):\n"
+               "    o_ref[...] = a_ref[...] + b_ref[...]\n"
+               "def run(a, b, s):\n"
+               "    return pl.pallas_call(\n"
+               "        _kern, grid=(4,),\n"
+               "        in_specs=[pl.BlockSpec((8,), lambda i: i),\n"
+               "                  pl.BlockSpec((8,), lambda i: i)],\n"
+               "        out_specs=pl.BlockSpec((8,), lambda i: i),\n"
+               "        out_shape=s)(a, b)\n"},
+    ),
+    Case(
+        "RPL402",
+        bad={"repro/kernels/k.py":
+             "import jax.experimental.pallas as pl\n"
+             "def _kern(a_ref, o_ref):\n"
+             "    o_ref[...] = a_ref[...]\n"
+             "def run(a, s):\n"
+             "    return pl.pallas_call(\n"
+             "        _kern, grid=(4, 4),\n"
+             "        in_specs=[pl.BlockSpec((8, 8), lambda i: (i, 0))],\n"
+             "        out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, j)),\n"
+             "        out_shape=s)(a)\n"},
+        clean={"repro/kernels/k.py":
+               "import jax.experimental.pallas as pl\n"
+               "def _kern(a_ref, o_ref):\n"
+               "    o_ref[...] = a_ref[...]\n"
+               "def run(a, s):\n"
+               "    return pl.pallas_call(\n"
+               "        _kern, grid=(4, 4),\n"
+               "        in_specs=[pl.BlockSpec((8, 8), lambda i, j: (i, 0))],\n"
+               "        out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, j)),\n"
+               "        out_shape=s)(a)\n"},
+    ),
+    Case(
+        "RPL403",
+        bad={"repro/kernels/k.py":
+             "import jax.experimental.pallas as pl\n"
+             "def _kern(a_ref, o_ref):\n"
+             "    o_ref[...] = a_ref[...]\n"
+             "def run(a, s):\n"
+             "    return pl.pallas_call(\n"
+             "        _kern, grid=(4,),\n"
+             "        in_specs=[pl.BlockSpec((8,), lambda i: i)],\n"
+             "        out_specs=pl.BlockSpec((8,), lambda i: i),\n"
+             "        out_shape=s,\n"
+             "        input_output_aliases={3: 0})(a)\n"},
+        clean={"repro/kernels/k.py":
+               "import jax.experimental.pallas as pl\n"
+               "def _kern(a_ref, o_ref):\n"
+               "    o_ref[...] = a_ref[...]\n"
+               "def run(a, s):\n"
+               "    return pl.pallas_call(\n"
+               "        _kern, grid=(4,),\n"
+               "        in_specs=[pl.BlockSpec((8,), lambda i: i)],\n"
+               "        out_specs=pl.BlockSpec((8,), lambda i: i),\n"
+               "        out_shape=s,\n"
+               "        input_output_aliases={0: 0})(a)\n"},
+    ),
+    Case(
+        "RPL501",
+        bad={"repro/runtime/seed.py":
+             "import time\nimport numpy as np\n"
+             "def make_rng():\n"
+             "    return np.random.default_rng(int(time.time()))\n"},
+        clean={"repro/runtime/seed.py":
+               "import numpy as np\n"
+               "def make_rng(seed):\n"
+               "    return np.random.default_rng(seed)\n"},
+    ),
+    Case(
+        "RPL502",
+        bad={"repro/hw/frames.py":
+             "def build(encode):\n"
+             "    return [encode(op) for op in {'advance', 'charge'}]\n"},
+        clean={"repro/hw/frames.py":
+               "def build(encode):\n"
+               "    return [encode(op)\n"
+               "            for op in sorted({'advance', 'charge'})]\n"},
+    ),
+]
+
+
+def _materialize(root: str, files: dict) -> None:
+    for rel, text in files.items():
+        full = os.path.join(root, rel)
+        os.makedirs(os.path.dirname(full), exist_ok=True)
+        with open(full, "w", encoding="utf-8") as fh:
+            fh.write(text)
+
+
+def _codes(result) -> set:
+    return {f.code for f in result.findings}
+
+
+def run_self_test(emit=print) -> bool:
+    """Inject one violation per rule; return True iff every rule fired
+    on its bad fixture and stayed quiet on its clean twin."""
+    covered = {c.code for c in CASES}
+    known = {r.code for r in all_rules()}
+    ok = True
+    for missing in sorted(known - covered):
+        emit(f"FAIL {missing}: no self-test fixture for this rule")
+        ok = False
+    for case in CASES:
+        if case.code not in known:
+            emit(f"FAIL {case.code}: fixture for unknown rule")
+            ok = False
+            continue
+        with tempfile.TemporaryDirectory(prefix="repro-lint-self-") as tmp:
+            bad_root = os.path.join(tmp, "bad", "fixture")
+            clean_root = os.path.join(tmp, "clean", "fixture")
+            _materialize(bad_root, case.bad)
+            _materialize(clean_root, case.clean)
+            fired = case.code in _codes(run_lint([bad_root]))
+            quiet = case.code not in _codes(run_lint([clean_root]))
+        if fired and quiet:
+            emit(f"ok   {case.code}: fires on injected violation, "
+                 f"quiet on clean twin")
+        else:
+            detail = []
+            if not fired:
+                detail.append("did NOT fire on the injected violation")
+            if not quiet:
+                detail.append("fired on the clean twin")
+            emit(f"FAIL {case.code}: " + "; ".join(detail))
+            ok = False
+    return ok

@@ -92,7 +92,7 @@ def calibrate_identity(key: jax.Array, n_blocks: int, k: int,
     """
     kd, ko = jax.random.split(key)
     if driver is None:
-        from ..hw.twin import make_twin    # lazy: hw sits above core
+        from ..hw import make_twin    # lazy: hw sits above core
         driver = make_twin(kd, n_blocks, k, model, kind, dev=dev)
     elif (driver.n_blocks, driver.k) != (n_blocks, k):
         raise ValueError(

@@ -112,7 +112,7 @@ def parallel_map(key: jax.Array, w: jax.Array, k: int, model=None, *,
         if block_range is not None:
             raise ValueError("block_range deployment needs an explicit "
                              "driver (the shared multi-tenant chip)")
-        from ..hw.twin import make_twin    # lazy: hw sits above core
+        from ..hw import make_twin    # lazy: hw sits above core
         driver = make_twin(kd, b, k, model, kind, m=w.shape[0],
                            n=w.shape[1], dev=dev)
     if block_range is None and driver.n_blocks != b:

@@ -93,7 +93,12 @@ STAT_CATEGORIES = frozenset(["serve", "probe", "readback", "search"])
 # the op surface a batched list may carry — identical to the wire
 # protocol's dispatchable set, so in-process and stream transports
 # accept/reject exactly the same lists (lifecycle ops like ``close`` /
-# ``unsafe_twin`` are excluded on every transport)
+# ``unsafe_twin`` are excluded on every transport).
+#
+# Extending this set means wiring a server branch in hw/server.py and a
+# client emitter in hw/stream_driver.py in the same commit — repro-lint
+# (RPL201/RPL202/RPL204, `python -m repro.analysis.lint --explain
+# RPL201`) blocks half-wired ops in CI.
 BATCHABLE_OPS = frozenset([
     "write_phases", "write_sigma", "write_signs", "read_phases",
     "read_sigma", "forward", "forward_layer", "readback_bases",
@@ -429,7 +434,12 @@ class PhotonicDriver(abc.ABC):
         """Escape hatch to the digital twin's internals (exact distances,
         the drifted :class:`DeviceRealization`).  Tests and benchmarks
         only — raises :class:`TwinUnavailable` when the device is not an
-        inspectable twin (i.e. real hardware)."""
+        inspectable twin (i.e. real hardware).
+
+        Call sites are statically audited: repro-lint restricts them to
+        an explicit diagnostic allowlist (RPL102) and quarantines
+        twin-only symbols outside the hatch (RPL101/RPL103) — see
+        ``python -m repro.analysis.lint --explain RPL102``."""
         raise TwinUnavailable(
             f"{type(self).__name__} is not backed by an inspectable twin")
 

@@ -53,7 +53,15 @@ _PTC_SCOPE: list[str] = []
 @contextlib.contextmanager
 def ptc_execution(hook: Callable):
     """Install ``hook(name, p, x, cfg, d_out) -> y | None`` as the active
-    PTC layer executor for the dynamic extent of the block."""
+    PTC layer executor for the dynamic extent of the block.
+
+    Never install this inside a function that jax traces (jit / scan /
+    vmap bodies): dispatch is tracer-guarded, so under trace every PTC
+    call silently stays digital and hardware-in-the-loop serving
+    degrades to a simulation without an error.  repro-lint flags such
+    installs statically (``python -m repro.analysis.lint --explain
+    RPL302``); the legal pattern is installing around an unjitted,
+    unrolled decode loop as ``launch/serve.py`` does."""
     global _PTC_EXEC_HOOK
     prev, _PTC_EXEC_HOOK = _PTC_EXEC_HOOK, hook
     try:

@@ -37,7 +37,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.noise import DEFAULT_NOISE
-from ..hw.drift import DriftConfig
+from ..hw import DriftConfig
 from .monitor import MonitorConfig
 from .recalibrate import RecalConfig
 from .fleet import FleetRouter, RuntimeConfig, make_fleet, RECALIBRATING

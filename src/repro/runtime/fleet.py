@@ -65,8 +65,7 @@ import numpy as np
 from ..core.mapping import parallel_map
 from ..core.noise import NoiseModel, DEFAULT_NOISE
 from ..core.ptc import blockize
-from ..hw import make_driver
-from ..hw.drift import DriftConfig, DEFAULT_DRIFT
+from ..hw import make_driver, DriftConfig, DEFAULT_DRIFT
 from .monitor import (MonitorConfig, HealthState, probe_mapping_distance,
                       probe_tenant_distances, update_health, clear_health)
 from .recalibrate import RecalConfig, recalibrate

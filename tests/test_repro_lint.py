@@ -1,0 +1,267 @@
+"""Tests for ``repro.analysis`` — the repo-specific AST lint engine.
+
+Three layers of evidence that the gate is live:
+
+* every rule fires on an injected violation and stays quiet on a clean
+  twin (the same fixtures ``--self-test`` runs in CI);
+* the suppression machinery round-trips: ``# repro: noqa[...]`` lines,
+  the fingerprint baseline (grandfather -> silence -> stale -> drop);
+* the wire-protocol rules demonstrably catch a *half-wired op* on a
+  copy of the real ``repro/hw`` trio — a fake op added to
+  ``BATCHABLE_OPS`` only must produce both a missing-server-branch and
+  a missing-client-emitter finding.
+
+The package is pure stdlib, so none of this touches jax.
+"""
+
+import json
+import shutil
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import run_lint, all_rules
+from repro.analysis.engine import baseline_payload, load_baseline
+from repro.analysis.findings import Finding, fingerprint, noqa_codes
+from repro.analysis.lint import main as lint_main
+from repro.analysis.selftest import CASES, run_self_test
+
+REPO = Path(__file__).resolve().parents[1]
+HW = REPO / "src" / "repro" / "hw"
+
+
+def _write_tree(root: Path, files: dict) -> Path:
+    for rel, text in files.items():
+        dest = root / rel
+        dest.parent.mkdir(parents=True, exist_ok=True)
+        dest.write_text(text)
+    return root
+
+
+def _codes(result):
+    return sorted(f.code for f in result.findings)
+
+
+# ---------------------------------------------------------------------------
+# per-rule fixtures: positive (fires) and negative (quiet)
+# ---------------------------------------------------------------------------
+
+def test_every_rule_has_a_selftest_fixture():
+    assert {r.code for r in all_rules()} == {c.code for c in CASES}
+
+
+@pytest.mark.parametrize("case", CASES, ids=lambda c: c.code)
+def test_rule_fires_on_violation_and_not_on_clean(case, tmp_path):
+    bad = _write_tree(tmp_path / "bad" / "fixture", case.bad)
+    clean = _write_tree(tmp_path / "clean" / "fixture", case.clean)
+    assert case.code in _codes(run_lint([str(bad)])), case.code
+    assert case.code not in _codes(run_lint([str(clean)])), case.code
+
+
+def test_self_test_driver_reports_all_ok():
+    lines = []
+    assert run_self_test(emit=lines.append)
+    assert len([ln for ln in lines if ln.startswith("ok")]) == len(CASES)
+
+
+# ---------------------------------------------------------------------------
+# suppression: noqa lines
+# ---------------------------------------------------------------------------
+
+def test_noqa_parsing():
+    assert noqa_codes("x = 1") is None
+    assert noqa_codes("x = 1  # repro: noqa") == frozenset()
+    assert noqa_codes("x = 1  # repro: noqa[RPL101]") == {"RPL101"}
+    assert noqa_codes("# repro: noqa[RPL101, RPL203]") == {"RPL101",
+                                                           "RPL203"}
+
+
+VIOLATION = {"repro/core/opt.py":
+             "def probe(driver):\n    return driver.unsafe_twin()\n"}
+
+
+def test_noqa_suppresses_matching_code_only(tmp_path):
+    src = VIOLATION["repro/core/opt.py"]
+    for comment, silenced in [
+        ("  # repro: noqa", True),
+        ("  # repro: noqa[RPL102]", True),
+        ("  # repro: noqa[RPL999]", False),
+    ]:
+        root = tmp_path / comment.strip("# :[]").replace(" ", "_")
+        _write_tree(root / "fixture", {
+            "repro/core/opt.py": src.replace(
+                "driver.unsafe_twin()", "driver.unsafe_twin()" + comment)})
+        result = run_lint([str(root / "fixture")])
+        if silenced:
+            assert not result.findings
+            assert [f.code for f in result.noqa_suppressed] == ["RPL102"]
+        else:
+            assert _codes(result) == ["RPL102"]
+
+
+# ---------------------------------------------------------------------------
+# suppression: fingerprint baseline round-trip
+# ---------------------------------------------------------------------------
+
+def test_baseline_round_trip(tmp_path):
+    root = _write_tree(tmp_path / "fixture", VIOLATION)
+    baseline_file = tmp_path / "baseline.json"
+
+    # 1. the violation is an active finding
+    first = run_lint([str(root)])
+    assert _codes(first) == ["RPL102"]
+
+    # 2. grandfather it -> silenced, counted as baselined
+    baseline_file.write_text(json.dumps(baseline_payload(first.findings)))
+    fps = load_baseline(str(baseline_file))
+    assert len(fps) == 1
+    second = run_lint([str(root)], baseline=fps)
+    assert not second.findings
+    assert [f.code for f in second.baseline_suppressed] == ["RPL102"]
+    assert not second.stale_baseline
+
+    # 3. editing the offending line resurfaces the finding (fingerprint
+    #    hashes the code, not the line number)
+    path = root / "repro/core/opt.py"
+    path.write_text(path.read_text().replace(
+        "driver.unsafe_twin()", "driver.unsafe_twin( )"))
+    resurfaced = run_lint([str(root)], baseline=fps)
+    assert _codes(resurfaced) == ["RPL102"]
+    assert resurfaced.stale_baseline  # old fingerprint no longer matches
+
+    # 4. fixing the violation leaves only a stale entry...
+    path.write_text("def probe(driver):\n    return driver.read_phases()\n")
+    fixed = run_lint([str(root)], baseline=fps)
+    assert fixed.ok and fixed.stale_baseline == sorted(fps)
+
+    # 5. ...which --update-baseline drops
+    rc = lint_main(["--baseline", str(baseline_file), "--update-baseline",
+                    str(root)])
+    assert rc == 0
+    assert load_baseline(str(baseline_file)) == set()
+
+
+def test_fingerprint_survives_line_drift():
+    a = Finding("RPL102", "repro/core/opt.py", 2, 11, "m", "x.unsafe_twin()")
+    b = Finding("RPL102", "repro/core/opt.py", 40, 3, "m", "x.unsafe_twin()")
+    c = Finding("RPL102", "repro/core/opt.py", 2, 11, "m", "y.unsafe_twin()")
+    assert fingerprint(a) == fingerprint(b)
+    assert fingerprint(a) != fingerprint(c)
+
+
+# ---------------------------------------------------------------------------
+# the half-wired-op demonstration on the REAL protocol trio
+# ---------------------------------------------------------------------------
+
+def _copy_real_trio(tmp_path: Path) -> Path:
+    root = tmp_path / "fixture" / "repro" / "hw"
+    root.mkdir(parents=True)
+    for name in ("driver.py", "server.py", "stream_driver.py"):
+        shutil.copy(HW / name, root / name)
+    return tmp_path / "fixture"
+
+
+def test_real_tree_trio_is_fully_wired(tmp_path):
+    root = _copy_real_trio(tmp_path)
+    result = run_lint([str(root)],
+                      codes=["RPL201", "RPL202", "RPL203", "RPL204"])
+    assert result.ok, "\n".join(f.format() for f in result.findings)
+
+
+def test_half_wired_op_is_caught(tmp_path):
+    # a fake op lands in BATCHABLE_OPS with no server branch and no
+    # client emitter — exactly the "whitelist admitted it, nobody
+    # implemented it" state RPL201/RPL202 exist to catch
+    root = _copy_real_trio(tmp_path)
+    driver = root / "repro" / "hw" / "driver.py"
+    text = driver.read_text()
+    assert "BATCHABLE_OPS = frozenset([" in text
+    driver.write_text(text.replace(
+        "BATCHABLE_OPS = frozenset([",
+        'BATCHABLE_OPS = frozenset([\n    "phantom_op",'))
+    result = run_lint([str(root)],
+                      codes=["RPL201", "RPL202", "RPL203", "RPL204"])
+    assert "RPL201" in _codes(result) and "RPL202" in _codes(result)
+    assert any("phantom_op" in f.message for f in result.findings
+               if f.code == "RPL201")
+    assert any("phantom_op" in f.message for f in result.findings
+               if f.code == "RPL202")
+
+
+def test_dropped_payload_key_is_caught(tmp_path):
+    # the client encodes a key the server branch never reads — silent
+    # payload loss on the wire (RPL204, the subtlest half-wiring)
+    root = _copy_real_trio(tmp_path)
+    client = root / "repro" / "hw" / "stream_driver.py"
+    text = client.read_text()
+    target = 'self._wire_kw("advance", dict(dt=dt))'
+    assert target in text
+    client.write_text(text.replace(
+        target, 'self._wire_kw("advance", dict(dt=dt, ghost=1))'))
+    result = run_lint([str(root)], codes=["RPL204"])
+    assert _codes(result) == ["RPL204"]
+    assert "ghost" in result.findings[0].message
+
+
+# ---------------------------------------------------------------------------
+# CLI surface
+# ---------------------------------------------------------------------------
+
+def test_cli_explain_and_list_rules(capsys):
+    assert lint_main(["--list-rules"]) == 0
+    listed = capsys.readouterr().out
+    for rule in all_rules():
+        assert rule.code in listed
+    assert lint_main(["--explain", "RPL204"]) == 0
+    assert "payload" in capsys.readouterr().out
+    assert lint_main(["--explain", "RPL999"]) == 2
+
+
+def test_cli_self_test_passes(capsys):
+    assert lint_main(["--self-test"]) == 0
+    out = capsys.readouterr().out
+    assert "FAIL" not in out
+
+
+def test_cli_exit_codes_and_json(tmp_path, capsys):
+    root = _write_tree(tmp_path / "fixture", VIOLATION)
+    report = tmp_path / "findings.json"
+    rc = lint_main([str(root), "--baseline", str(tmp_path / "absent.json"),
+                    "--json", str(report)])
+    assert rc == 1
+    data = json.loads(report.read_text())
+    assert data["ok"] is False
+    assert [f["code"] for f in data["findings"]] == ["RPL102"]
+    assert all("fingerprint" in f for f in data["findings"])
+    capsys.readouterr()
+
+    clean = _write_tree(tmp_path / "clean",
+                        {"repro/core/opt.py": "def f():\n    return 1\n"})
+    rc = lint_main([str(clean), "--baseline", str(tmp_path / "absent.json")])
+    assert rc == 0
+
+
+def test_cli_select_unknown_code_is_usage_error(tmp_path, capsys):
+    root = _write_tree(tmp_path / "fixture", VIOLATION)
+    assert lint_main([str(root), "--select", "RPL999"]) == 2
+    assert lint_main([str(root), "--select", "RPL101",
+                      "--baseline", str(tmp_path / "absent.json")]) == 0
+
+
+def test_parse_errors_are_reported_not_swallowed(tmp_path):
+    root = _write_tree(tmp_path / "fixture",
+                       {"repro/broken.py": "def f(:\n"})
+    result = run_lint([str(root)])
+    assert not result.ok
+    assert result.errors and "SyntaxError" in result.errors[0][1]
+
+
+# ---------------------------------------------------------------------------
+# the real tree stays clean (the CI gate, as a test)
+# ---------------------------------------------------------------------------
+
+def test_real_tree_is_lint_clean():
+    baseline = load_baseline(str(REPO / "repro-lint-baseline.json"))
+    result = run_lint([str(REPO / "src"), str(REPO / "benchmarks")],
+                      baseline=baseline)
+    assert result.ok, "\n".join(f.format() for f in result.findings)
