@@ -81,8 +81,23 @@ SPECS = {
     "BENCH_driver_overhead.json": dict(
         metrics={
             "batch_amortization_geomean": _amortization_geomean,
+            # raw batch-64 socket-vs-twin throughput ratio: the boolean
+            # acceptance gate below adapts its threshold to the host's
+            # core count, so this same-run ratio is ALSO drop-gated to
+            # catch data-plane regressions that stay above the adaptive
+            # floor (e.g. binary framing silently falling back to
+            # base64 would roughly halve it)
+            "socket_batch64_vs_twin_batch64":
+                lambda d: d["socket_batch64_vs_twin_batch64"],
         },
-        gates=["bit_identity_ok"],
+        # v4 additions: v4≡v3 framing identity, every-concurrent-session
+        # identity, and the batch-64 socket-within-2×-twin throughput
+        # acceptance gate — all booleans computed by the benchmark run
+        # itself, so "missing" means the check silently stopped running
+        gates=["bit_identity_ok",
+               "v4_v3_bit_identical",
+               "concurrent_bit_identical",
+               "v4_socket_batch64_within_2x_twin"],
     ),
     "BENCH_e2e_accuracy.json": dict(
         metrics={
@@ -192,7 +207,10 @@ def _degrade(src_dir: str, dst_dir: str) -> None:
             # toward the per-op rate on one transport (geomean −54%)
             n = _max_batch(d)
             d["subprocess"]["batch_sweep"][n]["probe_cols_per_s"] *= 0.1
+            d["socket_batch64_vs_twin_batch64"] *= 0.4
             d["bit_identity_ok"] = False
+            d["concurrent_bit_identical"] = False
+            d["v4_socket_batch64_within_2x_twin"] = False
         if fname == "BENCH_e2e_accuracy.json":
             d["baseline"]["accuracy"] *= 0.5
             d["gates"]["closed_loop_recovers"] = False

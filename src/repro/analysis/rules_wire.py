@@ -1,7 +1,8 @@
 """RPL2xx — wire-protocol consistency analyzers.
 
-The v3 driver protocol is defined in three places that nothing (until
-now) forced to agree:
+The driver wire protocol (v3 JSON lines, v4 binary frames — the
+framing differs, the op surface is the same) is defined in three
+places that nothing (until now) forced to agree:
 
 * ``repro/hw/driver.py`` — ``BATCHABLE_OPS``, the op whitelist every
   transport enforces symmetrically;
@@ -46,6 +47,7 @@ class WireModel:
         self.batchable: set[str] = set()
         self.batchable_node = None          # (sf, node) anchor
         self.pipelined: set[str] = set()
+        self.wire_internal: set[str] = set()
         self.server_ops: dict[str, tuple] = {}       # op -> (sf, node)
         self.server_reads: dict[str, dict] = {}      # op -> {key: "hard"|"soft"}
         self.client_ops: dict[str, tuple] = {}       # op -> (sf, node)
@@ -70,6 +72,9 @@ def _scan_driver(model: WireModel, sf: SourceFile) -> None:
                 if isinstance(tgt, ast.Name) and tgt.id == "BATCHABLE_OPS":
                     model.batchable = set(_collect_str_elts(node.value))
                     model.batchable_node = (sf, node)
+                elif (isinstance(tgt, ast.Name)
+                        and tgt.id == "WIRE_INTERNAL_OPS"):
+                    model.wire_internal = set(_collect_str_elts(node.value))
 
 
 def _kw_reads(body_nodes, reads: dict) -> None:
@@ -123,12 +128,28 @@ def _scan_server(model: WireModel, sf: SourceFile) -> None:
         model.server_reads["init"] = reads
 
 
-def _payload_keys(node: ast.AST) -> dict | None:
-    """Keys of a ``dict(...)`` call or ``{...}`` literal payload."""
+def _payload_keys(node: ast.AST, env: dict | None = None) -> dict | None:
+    """Keys of a ``dict(...)`` call or ``{...}`` literal payload.
+
+    ``env`` maps local names to payload dicts already resolved from
+    simple assignments, so the v4 handshake's re-offer idiom —
+    ``base = dict(key=..., ...)`` then ``_exec("init", dict(base,
+    v=want))`` — resolves to base's keys plus the overrides instead of
+    hiding the base payload from RPL204."""
     if isinstance(node, ast.Call) and call_name(node) == "dict":
         if any(kw.arg is None for kw in node.keywords):
             return None                       # **expansion: unknown
-        return {kw.arg: kw.value for kw in node.keywords}
+        out: dict = {}
+        for arg in node.args:                 # dict(base, ...) merge form
+            inner = _payload_keys(arg, env)
+            if inner is None and isinstance(arg, ast.Name):
+                inner = (env or {}).get(arg.id)
+            if inner is None:
+                return None                   # opaque positional: unknown
+            out.update(inner)
+        for kw in node.keywords:
+            out[kw.arg] = kw.value
+        return out
     if isinstance(node, ast.Dict):
         out = {}
         for k, v in zip(node.keys, node.values):
@@ -140,8 +161,24 @@ def _payload_keys(node: ast.AST) -> dict | None:
     return None
 
 
+def _local_payloads(sf: SourceFile) -> dict:
+    """name → payload keys for every simple ``name = dict(...)`` /
+    ``name = {...}`` assignment in the file (the client's base-payload
+    variables; collisions across scopes keep the first binding, which
+    is enough for a static cross-check)."""
+    env: dict = {}
+    for node in ast.walk(sf.tree):
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)):
+            keys = _payload_keys(node.value, env)
+            if keys is not None:
+                env.setdefault(node.targets[0].id, keys)
+    return env
+
+
 def _scan_client(model: WireModel, sf: SourceFile) -> None:
     model.found.add("client")
+    env = _local_payloads(sf)
     for node in ast.walk(sf.tree):
         if not isinstance(node, ast.Call):
             continue
@@ -155,14 +192,14 @@ def _scan_client(model: WireModel, sf: SourceFile) -> None:
                 continue
             model.client_ops.setdefault(op, (sf, node))
             if len(node.args) > 1:
-                keys = _payload_keys(node.args[1])
+                keys = _payload_keys(node.args[1], env)
                 if keys:
                     dst = model.client_keys.setdefault(op, {})
                     for k in keys:
                         dst.setdefault(k, (sf, node))
         elif leaf == "_wire_kw" and len(node.args) >= 2:
             op = const_str(node.args[0])
-            keys = _payload_keys(node.args[1])
+            keys = _payload_keys(node.args[1], env)
             if op is not None:
                 model.client_ops.setdefault(op, (sf, node))
                 if keys:
@@ -240,23 +277,41 @@ def check_whitelist_membership(corpus) -> Iterator[Finding]:
         return
     for op, (sf, node) in sorted(model.server_ops.items()):
         if (op not in model.batchable and op not in CONTROL_OPS
+                and op not in model.wire_internal
                 and not op.startswith("unsafe/")):
             yield Finding(
                 "RPL203", sf.rel, node.lineno, node.col_offset,
                 f"server dispatches op {op!r} which is neither in "
-                f"BATCHABLE_OPS nor a control/unsafe op — in-process "
-                f"run_batch would reject a list the wire accepts "
-                f"(transport asymmetry)",
+                f"BATCHABLE_OPS, WIRE_INTERNAL_OPS, nor a control/"
+                f"unsafe op — in-process run_batch would reject a "
+                f"list the wire accepts (transport asymmetry)",
                 line_at(sf, node))
     for op, (sf, node) in sorted(model.client_ops.items()):
         if (op not in model.batchable and op not in CONTROL_OPS
+                and op not in model.wire_internal
                 and not op.startswith("unsafe/")):
             yield Finding(
                 "RPL203", sf.rel, node.lineno, node.col_offset,
                 f"client emits op {op!r} which is neither in "
-                f"BATCHABLE_OPS nor a control/unsafe op — it can never "
-                f"travel inside a batch frame, breaking pipelined "
-                f"flush ordering",
+                f"BATCHABLE_OPS, WIRE_INTERNAL_OPS, nor a control/"
+                f"unsafe op — it can never travel inside a batch "
+                f"frame, breaking pipelined flush ordering",
+                line_at(sf, node))
+    # a wire-internal op is a client-rewrite + server-branch PAIR: one
+    # half alone is either an op the server can never see or a frame
+    # the server cannot answer
+    for op in sorted(model.wire_internal):
+        missing = [side for side, where in
+                   (("server branch", model.server_ops),
+                    ("client emitter", model.client_ops))
+                   if op not in where]
+        if missing and model.batchable_node is not None:
+            sf, node = model.batchable_node
+            yield Finding(
+                "RPL203", sf.rel, node.lineno, node.col_offset,
+                f"WIRE_INTERNAL_OPS contains {op!r} but it has no "
+                f"{' or '.join(missing)} — the wire-internal rewrite "
+                f"must be wired on both ends in the same commit",
                 line_at(sf, node))
     if model.pipelined - model.batchable:
         sf, node = model.batchable_node
@@ -321,8 +376,10 @@ RULES = [
     Rule(
         "RPL203", "wire op whitelist symmetry", check_whitelist_membership,
         "Ops dispatched by the server or emitted by the client must be "
-        "in BATCHABLE_OPS, a control op (init/shutdown/batch/meta), or "
-        "an `unsafe/*` twin-debug op; and PIPELINED_OPS must be a "
+        "in BATCHABLE_OPS, a control op (init/shutdown/batch/meta), a "
+        "declared WIRE_INTERNAL_OPS rewrite (client-coalesced forms "
+        "like `forward_many`, which must then be wired on BOTH ends), "
+        "or an `unsafe/*` twin-debug op; and PIPELINED_OPS must be a "
         "subset of BATCHABLE_OPS.\n\n"
         "Why: PR 4's post-review hardening made the whitelist "
         "symmetric — an op accepted over the wire but rejected by "

@@ -31,12 +31,19 @@ class Case:
 # The RPL2xx rules locate repro.hw.{driver,server,stream_driver} by
 # module name inside the corpus, so fixtures carry the same layout.
 
-def _trio(ops, server_ops, client_ops, server_extra="", pipelined=()):
+def _trio(ops, server_ops, client_ops, server_extra="", pipelined=(),
+          merge_ops=(), wire_internal=()):
     """A minimal protocol trio.  ``server_ops``/``client_ops`` map
-    op -> payload keys (server: read hard; client: encoded)."""
+    op -> payload keys (server: read hard; client: encoded).  Ops in
+    ``merge_ops`` emit via the v4 handshake idiom — a ``base =
+    dict(...)`` payload re-sent as ``self._exec(op, dict(base, v=4))``
+    — so the self-test proves RPL204 sees through the merge form (the
+    base keys count as sent, and a key dropped from the base is still
+    caught)."""
     driver = ("BATCHABLE_OPS = frozenset(%r)\n"
-              "PIPELINED_OPS = frozenset(%r)\n" % (sorted(ops),
-                                                   sorted(pipelined)))
+              "PIPELINED_OPS = frozenset(%r)\n"
+              "WIRE_INTERNAL_OPS = frozenset(%r)\n"
+              % (sorted(ops), sorted(pipelined), sorted(wire_internal)))
     branches = "".join(
         "    if op == %r:\n        return {%s}\n" % (
             op, ", ".join("%r: kw[%r]" % (k, k) for k in keys) or "'ok': 1")
@@ -45,10 +52,16 @@ def _trio(ops, server_ops, client_ops, server_extra="", pipelined=()):
               + branches + server_extra
               + "    raise ValueError(op)\n")
     methods = "".join(
-        "    def %s(self, **kw):\n"
-        "        return self._exec(%r, dict(%s))\n" % (
-            op.replace("/", "_"), op,
-            ", ".join("%s=kw[%r]" % (k, k) for k in keys))
+        ("    def %s(self, **kw):\n"
+         "        base = dict(%s)\n"
+         "        return self._exec(%r, dict(base, v=4))\n" % (
+             op.replace("/", "_"),
+             ", ".join("%s=kw[%r]" % (k, k) for k in keys), op))
+        if op in merge_ops else
+        ("    def %s(self, **kw):\n"
+         "        return self._exec(%r, dict(%s))\n" % (
+             op.replace("/", "_"), op,
+             ", ".join("%s=kw[%r]" % (k, k) for k in keys)))
         for op, keys in client_ops.items())
     client = ("class StreamDriver:\n"
               "    def _exec(self, op, kw):\n"
@@ -59,6 +72,10 @@ def _trio(ops, server_ops, client_ops, server_extra="", pipelined=()):
 
 
 _WIRED = _trio({"ping"}, {"ping": ["x"]}, {"ping": ["x"]})
+# v4-emitter twin: the client sends ping's payload through the
+# dict(base, v=4) merge form; must lint exactly as clean as _WIRED
+_WIRED_V4 = _trio({"ping"}, {"ping": ["x", "v"]}, {"ping": ["x"]},
+                  merge_ops={"ping"})
 
 CASES = [
     Case(
@@ -103,9 +120,30 @@ CASES = [
         clean=_WIRED,
     ),
     Case(
+        # RPL203 on the WIRE_INTERNAL_OPS surface: a declared
+        # client-coalesced rewrite (v4's forward_many shape) is clean
+        # when both the client emitter and server branch exist, and
+        # caught when only one end is wired
+        "RPL203",
+        bad=_trio({"ping"}, {"ping": ["x"], "merged": ["xs"]},
+                  {"ping": ["x"]}, wire_internal={"merged"}),
+        clean=_trio({"ping"}, {"ping": ["x"], "merged": ["xs"]},
+                    {"ping": ["x"], "merged": ["xs"]},
+                    wire_internal={"merged"}),
+    ),
+    Case(
         "RPL204",
         bad=_trio({"ping"}, {"ping": ["x", "y"]}, {"ping": ["x"]}),
         clean=_WIRED,
+    ),
+    Case(
+        # RPL204 through the v4 dict(base, ...) merge emitter: the base
+        # payload's keys count as sent (clean twin), and a hard server
+        # key missing from the base is still caught (bad twin)
+        "RPL204",
+        bad=_trio({"ping"}, {"ping": ["x", "y", "v"]}, {"ping": ["x"]},
+                  merge_ops={"ping"}),
+        clean=_WIRED_V4,
     ),
     Case(
         "RPL301",

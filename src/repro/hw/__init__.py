@@ -12,18 +12,22 @@ response is observable — is enforced here as an API boundary::
     runtime/fleet.py      serving/routing ───▶    hw/server.py   remote twin
 
     hw/driver.py             the ABC + PTC-call accounting
-    hw/stream_driver.py      shared op-stream client (pipelining, batch)
+    hw/stream_driver.py      shared op-stream client (pipelining, batch,
+                             async reader)
     hw/subprocess_driver.py  pipe transport (HIL topology)
     hw/socket_driver.py      TCP transport (remote-host topology)
+    hw/instrument_driver.py  real-instrument skeleton (ABC minus
+                             unsafe_twin)
 
 Three transports ship: :class:`TwinDriver` (in-process, jit-friendly)
 and two op-stream clients sharing one :class:`StreamDriver` base —
-:class:`SubprocessDriver` (JSON over stdin/stdout pipes to
+:class:`SubprocessDriver` (framed bytes over stdin/stdout pipes to
 ``repro.hw.server``, the hardware-in-the-loop shape) and
 :class:`SocketDriver` (the same framing over TCP, so the device server
 can run on another host; swap the server for a real instrument daemon
-and the control plane is untouched).  All meter every op that touches
-light in Appendix-G PTC calls (:class:`DriverStats`).
+and the control plane is untouched — :class:`ReferenceInstrumentDriver`
+is the skeleton such a daemon would host).  All meter every op that
+touches light in Appendix-G PTC calls (:class:`DriverStats`).
 
 All transports are *tenant-addressable* (wire protocol v2 surface):
 state writes, probes, and in-situ jobs accept ``block_range=(start,
@@ -34,6 +38,14 @@ tenant → block-range registry on top of this).  Protocol v3 adds the
 one wire frame, and the stream transports pipeline result-less writes
 into the next observable op's frame — closing the ~23× probe-throughput
 gap the per-op round-trips cost (``benchmarks/driver_overhead.py``).
+Protocol v4 makes the plane concurrent: binary frames (raw little-endian
+array payloads, no base64) negotiated at init with a v3 JSON-line
+fallback, a thread-per-connection socket server (one twin-farm process
+serves a whole fleet), and ``driver.run_batch_async`` — issue the frame
+now, collect the future later — which ``repro.runtime.fleet`` uses to
+overlap probe sweeps and serve passes across chips.  Every encoding and
+scheduling choice is bit-identical by construction; only the wall-clock
+changes.
 
 Twin-only readouts (exact mapping distance, the drifted realization) are
 reachable only through ``driver.unsafe_twin()`` — tests and benchmarks
@@ -41,39 +53,45 @@ only; ``tests/test_driver.py`` guards the import boundary.
 """
 
 from .driver import (PhotonicDriver, DriverStats, ZORefineResult,  # noqa: F401
-                     ICJobResult, TwinUnavailable, probe_cost,
-                     readback_cost, resolve_block_range)
+                     ICJobResult, TwinUnavailable, CompletedBatch,
+                     probe_cost, readback_cost, resolve_block_range)
 from .drift import (DriftConfig, DriftState, init_drift, advance,  # noqa: F401
                     bias_deviation, DEFAULT_DRIFT)
-from .protocol import PROTOCOL_VERSION, MAX_FRAME_BYTES  # noqa: F401
+from .protocol import (PROTOCOL_VERSION, SUPPORTED_VERSIONS,  # noqa: F401
+                       MAX_FRAME_BYTES)
 from .twin import TwinDriver, TwinHandle, make_twin  # noqa: F401
-from .stream_driver import StreamDriver  # noqa: F401
+from .stream_driver import StreamDriver, BatchFuture  # noqa: F401
 from .subprocess_driver import SubprocessDriver  # noqa: F401
 from .socket_driver import SocketDriver  # noqa: F401
+from .instrument_driver import ReferenceInstrumentDriver  # noqa: F401
 
 __all__ = ["PhotonicDriver", "DriverStats", "ZORefineResult", "ICJobResult",
-           "TwinUnavailable", "probe_cost", "readback_cost",
-           "resolve_block_range", "PROTOCOL_VERSION", "MAX_FRAME_BYTES",
-           "DriftConfig", "DriftState", "init_drift", "advance",
-           "bias_deviation", "DEFAULT_DRIFT", "TwinDriver", "TwinHandle",
-           "make_twin", "StreamDriver", "SubprocessDriver", "SocketDriver",
-           "make_driver"]
+           "TwinUnavailable", "CompletedBatch", "probe_cost",
+           "readback_cost", "resolve_block_range", "PROTOCOL_VERSION",
+           "SUPPORTED_VERSIONS", "MAX_FRAME_BYTES", "DriftConfig",
+           "DriftState", "init_drift", "advance", "bias_deviation",
+           "DEFAULT_DRIFT", "TwinDriver", "TwinHandle", "make_twin",
+           "StreamDriver", "BatchFuture", "SubprocessDriver",
+           "SocketDriver", "ReferenceInstrumentDriver", "make_driver"]
 
 
 def make_driver(transport: str, key, n_blocks: int, k: int, model,
                 kind: str = "clements", *, m: int | None = None,
                 n: int | None = None, drift=None,
-                address: tuple[str, int] | None = None) -> PhotonicDriver:
+                address: tuple[str, int] | None = None,
+                protocol: int | None = None) -> PhotonicDriver:
     """Uniform driver factory: ``transport`` ∈ {"twin", "subprocess",
     "socket"}.  ``address=(host, port)`` points the socket transport at
     a remote ``repro.hw.server --socket`` daemon; without it the socket
-    driver self-hosts a loopback server child."""
+    driver self-hosts a loopback server child.  ``protocol`` pins the
+    stream transports to a specific wire version (3 or 4) instead of
+    negotiating v4-with-v3-fallback."""
     if transport == "twin":
         return make_twin(key, n_blocks, k, model, kind, m=m, n=n, drift=drift)
     if transport == "subprocess":
         return SubprocessDriver(key, n_blocks, k, model, kind, m=m, n=n,
-                                drift=drift)
+                                drift=drift, protocol=protocol)
     if transport == "socket":
         return SocketDriver(key, n_blocks, k, model, kind, m=m, n=n,
-                            drift=drift, address=address)
+                            drift=drift, address=address, protocol=protocol)
     raise ValueError(f"unknown driver transport: {transport!r}")

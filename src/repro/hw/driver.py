@@ -82,10 +82,10 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["DriverStats", "PhotonicDriver", "ZORefineResult", "ICJobResult",
-           "TwinUnavailable", "probe_cost", "readback_cost",
-           "readout_blocks", "resolve_block_range", "BATCHABLE_OPS",
-           "STAT_CATEGORIES", "forward_coalesce_key", "coalesce_spans",
-           "validate_batch_ops"]
+           "TwinUnavailable", "CompletedBatch", "probe_cost",
+           "readback_cost", "readout_blocks", "resolve_block_range",
+           "BATCHABLE_OPS", "WIRE_INTERNAL_OPS", "STAT_CATEGORIES",
+           "forward_coalesce_key", "coalesce_spans", "validate_batch_ops"]
 
 # the PTC meter's categories (DriverStats fields a charge may land in)
 STAT_CATEGORIES = frozenset(["serve", "probe", "readback", "search"])
@@ -105,6 +105,16 @@ BATCHABLE_OPS = frozenset([
     "zo_refine", "run_ic", "advance", "charge", "reset_stats", "stats",
 ])
 
+# ops that exist only INSIDE a wire batch frame, never in a user op
+# list: the v4 client rewrites a coalescible span of ``forward`` ops
+# into one ``forward_many`` entry before encoding, and the server
+# answers it with the same stacked shape its own coalescer emits.
+# Each must have both a client emitter and a server branch (repro-lint
+# RPL203 enforces the symmetry) but is rejected by
+# ``validate_batch_ops`` — users batch ``forward``; the wire form is a
+# transport detail.
+WIRE_INTERNAL_OPS = frozenset(["forward_many"])
+
 
 def forward_coalesce_key(kw: dict):
     """Coalescibility key for a batched ``forward`` op: consecutive
@@ -112,7 +122,12 @@ def forward_coalesce_key(kw: dict):
     metering category, and tenant scope all agree.  Works on python
     kwargs and decoded wire kwargs alike."""
     br = kw.get("block_range")
-    return (np.shape(kw.get("x")), kw.get("category", "probe"),
+    x = kw.get("x")
+    # .shape directly: np.shape() round-trips scalars through asarray,
+    # which is ~5µs/op of pure overhead on the batch-64 hot path
+    shape = getattr(x, "shape", None)
+    return (tuple(shape) if shape is not None else np.shape(x),
+            kw.get("category", "probe"),
             None if br is None else (int(br[0]), int(br[1])))
 
 
@@ -250,6 +265,25 @@ class ICJobResult(NamedTuple):
     v: jax.Array          # readback of the realized Ĩ_V
     loss: jax.Array       # final surrogate loss per block
     history: jax.Array    # best-loss traces across restarts
+
+
+class CompletedBatch:
+    """Already-resolved future-like handle for :meth:`run_batch_async`.
+
+    The minimal surface async callers rely on (``done()`` /
+    ``result(timeout=None)``), backed by results computed before the
+    handle was constructed — what a driver with no round-trip to overlap
+    (the in-process twin) hands back, and what stream transports fall
+    back to when a frame must be split synchronously."""
+
+    def __init__(self, results: list):
+        self._results = results
+
+    def done(self) -> bool:
+        return True
+
+    def result(self, timeout=None) -> list:
+        return self._results
 
 
 class PhotonicDriver(abc.ABC):
@@ -420,6 +454,22 @@ class PhotonicDriver(abc.ABC):
             else:
                 out.append(getattr(self, name)(**kw))
         return out
+
+    def run_batch_async(self, ops: "list[tuple[str, dict]]"):
+        """Issue an op list for asynchronous collection.
+
+        Returns a future-like handle with ``done()`` and
+        ``result(timeout=None)``; ``result()`` returns — or raises —
+        exactly what :meth:`run_batch` would have for the same list.
+        This default executes synchronously and hands back an
+        already-resolved :class:`CompletedBatch` (an in-process driver
+        has no round-trip to overlap); stream transports override it to
+        write the frame immediately and resolve the future from a
+        response-reader thread.  Either way ops execute in issue order
+        against the device, so async results are bit-identical to the
+        synchronous encoding.
+        """
+        return CompletedBatch(self.run_batch(ops))
 
     def flush(self) -> None:
         """Force any client-side pipelined writes onto the device

@@ -1,0 +1,263 @@
+"""`ReferenceInstrumentDriver`: the ABC minus ``unsafe_twin()``.
+
+Proof that the control-plane surface is hardware-realizable: a driver
+skeleton that implements EVERY :class:`~repro.hw.driver.PhotonicDriver`
+contract — geometry, commanded-state mirror, tenant ``block_range``
+validation, Appendix-G PTC metering (bit-matching the twin's charge
+formulas), batching, the clock — while delegating the handful of
+operations that actually touch light to abstract ``_hw_*`` hooks.  An
+instrument integrator subclasses this, fills in the hooks against their
+lab I/O (DAC writes, detector reads, the device's local ZO controller),
+and the entire stack above the ABC — calibration, mapping, monitoring,
+recalibration, fleet serving, the wire server — runs against real
+hardware unchanged.
+
+What the skeleton deliberately does NOT provide is ``unsafe_twin()``:
+real hardware has no inspectable internals, so the inherited hatch
+raises :class:`~repro.hw.driver.TwinUnavailable` — which is the whole
+point of the observability boundary (repro-lint's RPL1xx rules restrict
+the hatch to diagnostics; everything load-bearing must work without it).
+
+The commanded-state mirror is the controller's own copy of what it has
+written (phases, Σ, signs): ``read_phases``/``read_sigma`` answer from
+it for free, exactly as the ABC specifies — a real chip cannot read its
+phases back optically any more than the paper's §3.2 model can.
+
+Hook contract (all scoped arrays carry ``stop - start`` blocks as their
+leading dim):
+
+===========================  ============================================
+``_hw_apply_phases``         commit scoped (B, T)+(B, T) phase banks
+``_hw_apply_sigma``          commit scoped (B, k) attenuators
+``_hw_apply_signs``          commit scoped (B, k)+(B, k) sign banks
+``_hw_forward``              probe columns (n, k) → (B, n, k)
+``_hw_forward_layer``        serve rows (rows, n_in) → (rows, out_dim)
+``_hw_readback``             reciprocal readout → (U, V*) columns
+``_hw_zo_refine``            device-local ZO job → (phi, loss, history)
+``_hw_run_ic``               device-local IC job → (phi, u, v, loss,
+                             history)
+===========================  ============================================
+"""
+
+from __future__ import annotations
+
+import abc
+
+import jax
+import numpy as np
+
+from ..core import unitary as un
+from .driver import (PhotonicDriver, DriverStats, ZORefineResult, ICJobResult,
+                     probe_cost, readback_cost, resolve_block_range)
+
+__all__ = ["ReferenceInstrumentDriver"]
+
+
+class ReferenceInstrumentDriver(PhotonicDriver):
+    """Control-plane bookkeeping for a real photonic instrument.
+
+    Concrete in everything the paper's observability model lets a
+    controller own; abstract in exactly the operations that need a
+    physical chip."""
+
+    def __init__(self, n_blocks: int, k: int, kind: str = "clements", *,
+                 m: int | None = None, n: int | None = None):
+        self._spec = un.mesh_spec(k, kind)
+        self._kind = kind
+        self._b = int(n_blocks)
+        # controller-side mirror of the commanded state (the free reads)
+        t = self._spec.n_rot
+        self._phi = np.zeros((self._b, 2 * t), np.float32)
+        self._sigma = np.ones((self._b, k), np.float32)
+        self._d_u = np.ones((self._b, k), np.float32)
+        self._d_v = np.ones((self._b, k), np.float32)
+        # default layer geometry: a 1×B grid (calibration-style chips),
+        # matching make_twin's defaults
+        self._m = int(m) if m is not None else k
+        self._n = int(n) if n is not None else k * self._b
+        self._stats = DriverStats()
+        self._clock = 0.0
+
+    # -- physical I/O hooks (the integrator's surface) -----------------------
+
+    @abc.abstractmethod
+    def _hw_apply_phases(self, phi_u: np.ndarray, phi_v: np.ndarray,
+                         start: int, stop: int) -> None:
+        """Drive the phase shifters of blocks [start, stop)."""
+
+    @abc.abstractmethod
+    def _hw_apply_sigma(self, sigma: np.ndarray,
+                        start: int, stop: int) -> None:
+        """Drive the Σ attenuators of blocks [start, stop)."""
+
+    @abc.abstractmethod
+    def _hw_apply_signs(self, d_u: np.ndarray, d_v: np.ndarray,
+                        start: int, stop: int) -> None:
+        """Configure the ±1 crossings of blocks [start, stop)."""
+
+    @abc.abstractmethod
+    def _hw_forward(self, x: np.ndarray, start: int, stop: int) -> jax.Array:
+        """Stream probe columns ``x`` (n, k) through blocks [start, stop);
+        detector readout, (stop-start, n, k)."""
+
+    @abc.abstractmethod
+    def _hw_forward_layer(self, x: np.ndarray, start: int, stop: int,
+                          out_dim: int) -> jax.Array:
+        """Serve-path forward through the assembled sub-grid of blocks
+        [start, stop): (rows, n_in) → (rows, out_dim)."""
+
+    @abc.abstractmethod
+    def _hw_readback(self, cols, start: int, stop: int):
+        """Reciprocal-probe basis readout of blocks [start, stop):
+        ``(U, V*)`` columns, each (stop-start, k, len(cols))."""
+
+    @abc.abstractmethod
+    def _hw_zo_refine(self, w_blocks: np.ndarray, key, cfg, method: str,
+                      start: int, stop: int):
+        """Device-local hardware-restricted ZO against per-block targets;
+        returns ``(phi, loss, history)`` with phi (stop-start, 2T).  The
+        skeleton commits phi to the mirror and meters the search."""
+
+    @abc.abstractmethod
+    def _hw_run_ic(self, key, sigs: np.ndarray, cfg, restarts: int,
+                   method: str):
+        """Device-local Identity Calibration; returns
+        ``(phi, u, v, loss, history)``.  The skeleton commits phi and
+        meters search + readback."""
+
+    # -- geometry ------------------------------------------------------------
+
+    @property
+    def k(self) -> int:
+        return self._spec.k
+
+    @property
+    def kind(self) -> str:
+        return self._kind
+
+    @property
+    def n_blocks(self) -> int:
+        return self._b
+
+    @property
+    def layer_shape(self) -> tuple[int, int]:
+        return self._m, self._n
+
+    # -- commanded state (mirror + commit) -----------------------------------
+
+    def write_phases(self, phi_u, phi_v, *, block_range=None) -> None:
+        t = self._spec.n_rot
+        start, stop = resolve_block_range(self._b, block_range)
+        nb = stop - start
+        phi_u = np.asarray(phi_u, np.float32).reshape(nb, t)
+        phi_v = np.asarray(phi_v, np.float32).reshape(nb, t)
+        self._phi[start:stop, :t] = phi_u
+        self._phi[start:stop, t:] = phi_v
+        self._hw_apply_phases(phi_u, phi_v, start, stop)
+
+    def write_sigma(self, sigma, *, block_range=None) -> None:
+        start, stop = resolve_block_range(self._b, block_range)
+        sigma = np.asarray(sigma, np.float32).reshape(stop - start, self.k)
+        self._sigma[start:stop] = sigma
+        self._hw_apply_sigma(sigma, start, stop)
+
+    def write_signs(self, d_u, d_v, *, block_range=None) -> None:
+        start, stop = resolve_block_range(self._b, block_range)
+        nb = stop - start
+        d_u = np.asarray(d_u, np.float32).reshape(nb, self.k)
+        d_v = np.asarray(d_v, np.float32).reshape(nb, self.k)
+        self._d_u[start:stop] = d_u
+        self._d_v[start:stop] = d_v
+        self._hw_apply_signs(d_u, d_v, start, stop)
+
+    def read_phases(self):
+        t = self._spec.n_rot
+        return self._phi[:, :t].copy(), self._phi[:, t:].copy()
+
+    def read_sigma(self):
+        return self._sigma.copy()
+
+    # -- probes (metered identically to the twin) ----------------------------
+
+    def forward(self, x, category: str = "probe", *, block_range=None):
+        x = np.asarray(x, np.float32)
+        start, stop = resolve_block_range(self._b, block_range)
+        y = self._hw_forward(x, start, stop)
+        self._stats.charge(category, probe_cost(stop - start, x.shape[0]))
+        return y
+
+    def forward_layer(self, x, *, block_range=None,
+                      out_dim: int | None = None):
+        x = np.asarray(x, np.float32)
+        start, stop = resolve_block_range(self._b, block_range)
+        if out_dim is None:
+            out_dim = self._m if (start, stop) == (0, self._b) else \
+                (stop - start) * self.k
+        lead, n_in = x.shape[:-1], x.shape[-1]
+        rows = x.reshape(-1, n_in)
+        y = self._hw_forward_layer(rows, start, stop, int(out_dim))
+        self._stats.charge("serve", probe_cost(stop - start, rows.shape[0]))
+        return np.asarray(y).reshape(*lead, int(out_dim))
+
+    def readback_bases(self, cols=None, *, block_range=None):
+        start, stop = resolve_block_range(self._b, block_range)
+        if cols is not None:
+            idx = [int(c) for c in np.asarray(cols).reshape(-1)]
+            u, v = self._hw_readback(idx, start, stop)
+            self._stats.charge("readback",
+                               readback_cost(stop - start, len(idx)))
+        else:
+            u, v = self._hw_readback(list(range(self.k)), start, stop)
+            self._stats.charge("readback", readback_cost(stop - start,
+                                                         self.k))
+        return u, v
+
+    # -- in-situ jobs --------------------------------------------------------
+
+    def zo_refine(self, w_blocks, key, cfg, method: str = "zcd", *,
+                  block_range=None) -> ZORefineResult:
+        start, stop = resolve_block_range(self._b, block_range)
+        phi, loss, history = self._hw_zo_refine(
+            np.asarray(w_blocks, np.float32), key, cfg, method, start, stop)
+        self._phi[start:stop] = np.asarray(phi, np.float32)
+        # each ZCD step issues ≤2 transfer-matrix evaluations of k
+        # columns — the twin's exact charge formula
+        self._stats.charge("search",
+                           float(cfg.steps * 2 * (stop - start) * self.k))
+        return ZORefineResult(phi=phi, loss=loss, history=history,
+                              steps=int(cfg.steps))
+
+    def run_ic(self, key, sigs, cfg, *, restarts: int = 4,
+               method: str = "zcd") -> ICJobResult:
+        sigs = np.asarray(sigs, np.float32)
+        phi, u, v, loss, history = self._hw_run_ic(key, sigs, cfg,
+                                                   int(restarts), method)
+        self._phi[:] = np.asarray(phi, np.float32)
+        # one surrogate measurement = k unit-vector probes per Σ_cal
+        # setting; ZCD spends ≤2 measurements per step — twin-identical
+        self._stats.charge("search", float(
+            restarts * cfg.steps * 2 * sigs.shape[0] * self.k * self._b))
+        self._stats.charge("readback", readback_cost(self._b, self.k))
+        return ICJobResult(phi=phi, u=u, v=v, loss=loss, history=history)
+
+    # -- time / accounting ---------------------------------------------------
+
+    def advance(self, dt: float = 1.0) -> None:
+        # real hardware drifts on its own; the controller only keeps the
+        # virtual clock other bookkeeping (recal cadence) is phrased in
+        self._clock += float(dt)
+
+    @property
+    def clock(self) -> float:
+        """Virtual time elapsed via :meth:`advance`."""
+        return self._clock
+
+    @property
+    def stats(self) -> DriverStats:
+        return self._stats
+
+    def charge(self, category: str, calls: float) -> None:
+        self._stats.charge(category, calls)
+
+    # unsafe_twin() is deliberately NOT implemented: the inherited hatch
+    # raises TwinUnavailable — real hardware has no inspectable twin.

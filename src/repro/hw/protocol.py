@@ -1,24 +1,49 @@
-"""JSON op-stream wire protocol for out-of-process drivers.
+"""Op-stream wire protocol for out-of-process drivers (v4: binary framing).
 
-Newline-delimited JSON request/response frames, over any byte stream
-(the subprocess transport uses stdin/stdout pipes, the socket transport
-a TCP connection — same framing)::
+Request/response frames over any *byte* stream (the subprocess transport
+uses stdin/stdout pipes, the socket transport a TCP connection — same
+framing)::
 
     → {"id": 7, "op": "forward", "kw": {"x": {"__nd__": ...}, ...}}
     ← {"id": 7, "ok": true, "result": {"y": {"__nd__": ...}}}
     ← {"id": 8, "ok": false, "error": "..."}
 
-Arrays travel as base64 of their raw bytes plus dtype/shape, so float32
-round-trips bit-exactly — the conformance suite relies on the twin and
-stream transports returning identical results for identical seeds.
-Configs (``NoiseModel``, ``DriftConfig``, ``ZOConfig``) travel as plain
-field dicts.
+Two frame encodings share the stream, distinguished by the first byte:
+
+* **JSON lines** (v3 and earlier, and every ``init`` frame) — one
+  newline-terminated UTF-8 JSON document.  Arrays travel as base64 of
+  their raw bytes plus dtype/shape.
+* **Binary frames** (v4) — a length-prefixed frame whose array payloads
+  are raw little-endian bytes, zero base64::
+
+      ┌──────────┬───────────┬──────────────┬───────────────┬──────────┐
+      │ MAGIC ×4 │ json_len  │ payload_len  │ JSON metadata │ payload  │
+      │ 00 52 42 │ u32 LE    │ u32 LE       │ (json_len B)  │ raw LE   │
+      │ 34       │           │              │               │ arrays   │
+      └──────────┴───────────┴──────────────┴───────────────┴──────────┘
+
+  The JSON section is the same frame dict, with each array node
+  replaced by ``{"__nd__": [offset, nbytes], "dtype": ..., "shape":
+  ...}`` referencing a slice of the payload section.  The leading
+  ``0x00`` magic byte can never begin a JSON text line, so a receiver
+  dispatches on one byte — :func:`recv` accepts either encoding on any
+  stream, which is what makes the handshake fallback trivial.
+
+Both encodings carry the identical raw array bytes (base64 is just a
+transfer coat), so results are **bit-identical across encodings** — the
+conformance suite relies on the twin and stream transports returning
+identical results for identical seeds, in either framing.  Configs
+(``NoiseModel``, ``DriftConfig``, ``ZOConfig``) travel as plain field
+dicts.
 
 Framing limits: a frame longer than ``MAX_FRAME_BYTES`` is rejected
-(:class:`ProtocolError`) *without* buffering the whole line — a
+(:class:`ProtocolError`) *without* buffering the whole frame — a
 misbehaving peer cannot balloon the server's memory — and a line that is
 not valid JSON is likewise a hard :class:`ProtocolError` (the stream is
 assumed desynced; the connection terminates rather than guessing).
+Limits are enforced in **encoded bytes** on both paths (a v3 frame full
+of multi-byte UTF-8 used to be measured in code points, undershooting
+the byte ceiling the docstring promises).
 
 The ``batch`` frame (v3)
 ------------------------
@@ -47,65 +72,95 @@ stacked the (bit-identical) outputs so the span pays one codec pass
 instead of ``n``; clients split the leading axis back into per-op
 results.
 
-Versioning: the client sends ``{"v": PROTOCOL_VERSION}`` inside the
-``init`` op's kwargs and the server echoes its own version in the init
-result; a mismatch is a hard error on both sides (no silent fallback —
-a stale peer would misinterpret batched or tenant-scoped ops).
+Versioning: the client sends ``{"v": ...}`` inside the ``init`` op's
+kwargs — always as a JSON line, so any server can parse it — and the
+server echoes the *negotiated* version in the init result.
 
 * v1 — original surface (PR 2): whole-chip ops only.
-* v2 — multi-tenant surface: ``block_range`` on ``write_phases`` /
-  ``write_sigma`` / ``write_signs`` / ``forward`` / ``forward_layer``
-  (+ ``out_dim``) / ``readback_bases`` / ``zo_refine`` and on
-  ``unsafe/true_mapping_distance``; version handshake added.
+* v2 — multi-tenant surface: ``block_range`` on the stateful ops;
+  version handshake added.
 * v3 — op-stream data plane: the ``batch`` frame (client-side write
-  pipelining rides on it), frame-size limits, and the socket transport
-  (same framing over TCP).  A v2 peer would treat a ``batch`` frame as
-  an unknown op mid-session, so the handshake hard-rejects it.
+  pipelining rides on it), frame-size limits, and the socket transport.
+* v4 — binary framing (above) + concurrent server sessions + the async
+  client.  A v4 server still speaks v3 (``SUPPORTED_VERSIONS``): a v3
+  client negotiates v3 in the init handshake and the session stays on
+  JSON lines.  A v4 client refused by a v3-only server ("protocol
+  mismatch" init error) retries the init with ``v=3`` on the same
+  connection — results are bit-identical either way, only the codec
+  cost differs.  v1/v2 peers are still hard-rejected on both sides (a
+  stale peer would misinterpret batched or tenant-scoped ops).
 """
 
 from __future__ import annotations
 
 import base64
 import json
-from typing import Any, IO
+import struct
+from typing import Any, BinaryIO
 
 import numpy as np
 
 __all__ = ["encode", "decode", "send", "recv", "ProtocolError",
-           "PROTOCOL_VERSION", "MAX_FRAME_BYTES"]
+           "PROTOCOL_VERSION", "SUPPORTED_VERSIONS", "MAX_FRAME_BYTES"]
 
-PROTOCOL_VERSION = 3
+PROTOCOL_VERSION = 4
+
+# versions a v4 server will negotiate down to in the init handshake
+SUPPORTED_VERSIONS = (3, 4)
 
 # Generous ceiling: the largest legitimate frames carry whole-chip phase
-# banks / block targets (base64 inflates raw float32 by 4/3).  64 MiB of
-# frame ≈ a 12M-parameter write — far beyond any single-chip op here.
+# banks / block targets.  64 MiB of frame ≈ a 16M-parameter write — far
+# beyond any single-chip op here.
 MAX_FRAME_BYTES = 64 * 1024 * 1024
 
 _ND = "__nd__"
+
+# binary frame header: magic (0x00 can never start a JSON text line),
+# then u32 LE json-section length + u32 LE payload-section length
+_MAGIC = b"\x00RB4"
+_HEADER = struct.Struct("<II")
 
 
 class ProtocolError(RuntimeError):
     """Framing / transport failure on the driver stream."""
 
 
-def encode(obj: Any) -> Any:
-    """Recursively JSON-encode a python/jax value tree."""
+def encode(obj: Any, binary: bool = False) -> Any:
+    """Recursively wire-encode a python/jax value tree.
+
+    With ``binary=False`` (the JSON-line codec) arrays become base64
+    ``__nd__`` nodes.  With ``binary=True`` the ``__nd__`` value is the
+    array's raw little-endian bytes — :func:`send` hoists those into the
+    frame's payload section, zero base64.  :func:`decode` accepts both
+    node forms, so a value encoded for one framing still decodes if it
+    ends up inside the other (e.g. a pipelined op queued before the
+    handshake settled the session codec).
+    """
     if obj is None or isinstance(obj, (bool, int, float, str)):
         return obj
     if isinstance(obj, dict):
-        return {k: encode(v) for k, v in obj.items()}
+        return {k: encode(v, binary) for k, v in obj.items()}
     if isinstance(obj, (list, tuple)):
-        return [encode(v) for v in obj]
+        return [encode(v, binary) for v in obj]
     arr = np.asarray(obj)
-    return {_ND: base64.b64encode(arr.tobytes()).decode("ascii"),
+    if arr.dtype.byteorder == ">":       # wire order is little-endian
+        arr = arr.astype(arr.dtype.newbyteorder("<"))
+    raw = arr.tobytes()
+    return {_ND: raw if binary else base64.b64encode(raw).decode("ascii"),
             "dtype": str(arr.dtype), "shape": list(arr.shape)}
 
 
 def decode(obj: Any) -> Any:
-    """Inverse of :func:`encode` (arrays come back as numpy)."""
+    """Inverse of :func:`encode` (arrays come back as numpy).
+
+    ``__nd__`` payloads may be base64 strings (JSON-line frames) or raw
+    bytes / memoryviews (binary frames, resolved by :func:`recv`).
+    """
     if isinstance(obj, dict):
         if _ND in obj:
-            raw = base64.b64decode(obj[_ND])
+            raw = obj[_ND]
+            if isinstance(raw, str):
+                raw = base64.b64decode(raw)
             return np.frombuffer(raw, dtype=np.dtype(obj["dtype"])).reshape(
                 obj["shape"]).copy()
         return {k: decode(v) for k, v in obj.items()}
@@ -114,27 +169,132 @@ def decode(obj: Any) -> Any:
     return obj
 
 
-def send(fp: IO[str], msg: dict) -> None:
-    line = json.dumps(msg, separators=(",", ":"))
-    if len(line) + 1 > MAX_FRAME_BYTES:
-        raise ProtocolError(
-            f"refusing to send oversized frame ({len(line) + 1} bytes > "
-            f"{MAX_FRAME_BYTES})")
-    fp.write(line + "\n")
+def _hoist_payload(obj: Any, chunks: list, sizes: list) -> Any:
+    """Rebuild ``obj`` with raw-bytes ``__nd__`` nodes replaced by
+    ``[offset, nbytes]`` references into the payload section (the
+    chunks are concatenated in reference order).  The input tree is
+    never mutated — a pipelined frame may be re-encoded after an
+    oversized split."""
+    if isinstance(obj, dict):
+        raw = obj.get(_ND)
+        if isinstance(raw, (bytes, bytearray, memoryview)):
+            off = sizes[0]
+            chunks.append(raw)
+            sizes[0] = off + len(raw)
+            node = dict(obj)
+            node[_ND] = [off, len(raw)]
+            return node
+        return {k: _hoist_payload(v, chunks, sizes) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_hoist_payload(v, chunks, sizes) for v in obj]
+    return obj
+
+
+def _resolve_payload(obj: Any, payload: memoryview) -> Any:
+    """Inverse of :func:`_hoist_payload`: ``[offset, nbytes]`` node
+    references become (zero-copy) memoryview slices of the payload."""
+    if isinstance(obj, dict):
+        ref = obj.get(_ND)
+        if isinstance(ref, list) and len(ref) == 2:
+            off, n = int(ref[0]), int(ref[1])
+            if off < 0 or n < 0 or off + n > len(payload):
+                raise ProtocolError(
+                    f"binary frame payload reference [{off}, {n}] out of "
+                    f"bounds for a {len(payload)}-byte payload section")
+            node = dict(obj)
+            node[_ND] = payload[off:off + n]
+            return node
+        return {k: _resolve_payload(v, payload) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_resolve_payload(v, payload) for v in obj]
+    return obj
+
+
+def send(fp: BinaryIO, msg: dict, binary: bool = False) -> None:
+    """Write one frame.  Size limits are enforced in encoded bytes and
+    checked BEFORE anything is written — an oversized frame leaves the
+    stream exactly as it was (callers rely on this to split op lists
+    and to keep a session alive after refusing a too-large result)."""
+    if binary:
+        chunks: list = []
+        sizes = [0]
+        meta = _hoist_payload(msg, chunks, sizes)
+        head = json.dumps(meta, separators=(",", ":")).encode("utf-8")
+        total = len(_MAGIC) + _HEADER.size + len(head) + sizes[0]
+        if total > MAX_FRAME_BYTES:
+            raise ProtocolError(
+                f"refusing to send oversized frame ({total} bytes > "
+                f"{MAX_FRAME_BYTES})")
+        fp.write(_MAGIC)
+        fp.write(_HEADER.pack(len(head), sizes[0]))
+        fp.write(head)
+        for chunk in chunks:
+            fp.write(chunk)
+    else:
+        data = (json.dumps(msg, separators=(",", ":")) + "\n").encode("utf-8")
+        if len(data) > MAX_FRAME_BYTES:
+            raise ProtocolError(
+                f"refusing to send oversized frame ({len(data)} bytes > "
+                f"{MAX_FRAME_BYTES})")
+        fp.write(data)
     fp.flush()
 
 
-def recv(fp: IO[str], max_bytes: int = MAX_FRAME_BYTES) -> dict:
-    # bounded readline: a peer streaming an endless line cannot make us
-    # buffer more than the frame ceiling before we reject it
-    line = fp.readline(max_bytes + 1)
-    if not line:
+def _read_exact(fp: BinaryIO, n: int) -> bytes:
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = fp.read(n - len(buf))
+        if not chunk:
+            raise ProtocolError(
+                "driver stream closed mid-frame (peer exited?)")
+        buf.extend(chunk)
+    return bytes(buf)
+
+
+def recv(fp: BinaryIO, max_bytes: int = MAX_FRAME_BYTES) -> dict:
+    """Read one frame, auto-detecting the encoding from its first byte
+    (``0x00`` → binary, anything else → JSON line).  Bounded: neither
+    path buffers more than ``max_bytes`` before rejecting."""
+    first = fp.read(1)
+    if not first:
         raise ProtocolError("driver stream closed (peer exited?)")
+    if first == _MAGIC[:1]:
+        magic = first + _read_exact(fp, len(_MAGIC) - 1)
+        if magic != _MAGIC:
+            raise ProtocolError(
+                f"malformed binary frame: bad magic {magic!r}")
+        json_len, payload_len = _HEADER.unpack(
+            _read_exact(fp, _HEADER.size))
+        total = len(_MAGIC) + _HEADER.size + json_len + payload_len
+        if total > max_bytes:
+            raise ProtocolError(
+                f"oversized frame rejected (> {max_bytes} bytes)")
+        head = _read_exact(fp, json_len)
+        payload = memoryview(_read_exact(fp, payload_len))
+        try:
+            meta = json.loads(head)
+        except json.JSONDecodeError as e:
+            raise ProtocolError(
+                f"malformed binary frame metadata: {head[:200]!r}") from e
+        if not isinstance(meta, dict):
+            raise ProtocolError(
+                f"malformed frame: expected a dict, got {type(meta).__name__}")
+        return _resolve_payload(meta, payload)
+    # JSON line: bounded readline — a peer streaming an endless line
+    # cannot make us buffer more than the frame ceiling (counted in
+    # BYTES: multi-byte UTF-8 used to slip past a code-point count)
+    line = first + fp.readline(max_bytes)
     if len(line) > max_bytes or (len(line) == max_bytes
-                                 and not line.endswith("\n")):
+                                 and not line.endswith(b"\n")):
         raise ProtocolError(
             f"oversized frame rejected (> {max_bytes} bytes)")
     try:
-        return json.loads(line)
+        msg = json.loads(line)
     except json.JSONDecodeError as e:
         raise ProtocolError(f"malformed frame: {line[:200]!r}") from e
+    if not isinstance(msg, dict):
+        # normalize here so both framings reject non-dict frames the
+        # same way (serve() turns this into an error frame + live
+        # session rather than a dropped connection)
+        return {"__non_dict__": msg}
+    return msg

@@ -1,21 +1,31 @@
 """Out-of-process twin server: ``python -m repro.hw.server``.
 
 Hosts one :class:`TwinDriver` per session and serves the driver protocol
-(newline-delimited JSON, see ``repro.hw.protocol``) over either
+(v4 binary frames with a v3 JSON-line fallback, see
+``repro.hw.protocol``) over either
 
 * **stdin/stdout** (the default — the :class:`SubprocessDriver` pipe
   topology), or
 * **TCP** (``--socket HOST:PORT`` — the :class:`SocketDriver` topology,
   so the twin can run on another host; ``PORT=0`` binds an ephemeral
   port, announced as ``LISTENING <port>`` on stdout for self-hosted
-  clients).  Connections are served one at a time, each with its own
-  fresh driver session; ``--max-conns N`` exits after N sessions (the
-  self-hosted lifetime).
+  clients).  Connections are served **concurrently**, one thread and one
+  fresh driver session per connection — one twin-farm process can serve
+  a whole fleet.  ``--max-conns N`` bounds how many sessions run at
+  once (further accepts wait); ``--sessions N`` exits after N sessions
+  total (the self-hosted lifetime).
 
 This is the hardware-in-the-loop shape: the parent's stream driver sees
 only the control-plane surface, while the device physics lives in this
 process — swap this server for a real instrument daemon and nothing on
 the control plane changes.
+
+Version negotiation: the client's ``init`` frame (always a JSON line)
+carries ``v``; the server accepts any of ``SUPPORTED_VERSIONS`` and
+echoes the negotiated version in the init result.  The init exchange
+itself always travels as JSON lines; once v4 is negotiated, both sides
+switch the session to binary frames.  A v3 peer keeps JSON lines for
+the whole session — bit-identical results either way.
 
 In-situ jobs (``zo_refine`` / ``run_ic``) execute *here*, against the
 local device, with the same ``repro.hw.jobs`` code the in-process twin
@@ -38,6 +48,7 @@ from __future__ import annotations
 import argparse
 import socket as _socket
 import sys
+import threading
 import traceback
 
 import jax.numpy as jnp
@@ -46,25 +57,33 @@ import numpy as np
 from ..core.noise import NoiseModel
 from ..optim.zo import ZOConfig
 from .drift import DriftConfig
-from .driver import forward_coalesce_key, coalesce_spans, BATCHABLE_OPS
+from .driver import (forward_coalesce_key, coalesce_spans, BATCHABLE_OPS,
+                     WIRE_INTERNAL_OPS)
 from .protocol import (encode, decode, send, recv, ProtocolError,
-                       PROTOCOL_VERSION)
+                       PROTOCOL_VERSION, SUPPORTED_VERSIONS)
 from .twin import make_twin
 
 __all__ = ["serve", "serve_socket", "main"]
 
 
 def _build_driver(kw: dict):
+    """Build the session driver from an ``init`` payload.
+
+    Returns ``(driver, negotiated_version)``.  Any version outside
+    ``SUPPORTED_VERSIONS`` is a hard mismatch — the error string keeps
+    the ``protocol mismatch`` marker the v4 client's fallback logic
+    keys on."""
     v = int(kw.get("v", 1))
-    if v != PROTOCOL_VERSION:
+    if v not in SUPPORTED_VERSIONS:
+        supported = "/".join(f"v{s}" for s in SUPPORTED_VERSIONS)
         raise RuntimeError(
             f"driver protocol mismatch: client speaks v{v}, server "
-            f"speaks v{PROTOCOL_VERSION}")
+            f"speaks {supported}")
     model = NoiseModel(**kw["model"])
     drift = DriftConfig(**kw["drift"]) if kw.get("drift") else None
     return make_twin(jnp.asarray(kw["key"]), int(kw["n_blocks"]),
                      int(kw["k"]), model, kw.get("kind", "clements"),
-                     m=kw.get("m"), n=kw.get("n"), drift=drift)
+                     m=kw.get("m"), n=kw.get("n"), drift=drift), v
 
 
 def _rng(kw: dict):
@@ -82,10 +101,13 @@ def _dispatch(driver, op: str, kw: dict):
         entries = kw.get("ops") or []
         for entry in entries:
             # the same whitelist PhotonicDriver.run_batch enforces
-            # in-process: session-control ops can't nest, and the
-            # unsafe/* twin hatch and meta stay out of reach of batch
-            # frames from untrusted wire peers
-            if entry.get("op") not in BATCHABLE_OPS:
+            # in-process — plus "forward_many", the wire-internal form a
+            # v4 client ships when it coalesces a probe span before
+            # encoding; session-control ops can't nest, and the unsafe/*
+            # twin hatch and meta stay out of reach of batch frames from
+            # untrusted wire peers
+            if entry.get("op") not in BATCHABLE_OPS \
+                    and entry.get("op") not in WIRE_INTERNAL_OPS:
                 raise ValueError(
                     f"op {entry.get('op')!r} cannot appear inside a batch")
         can_coalesce = hasattr(driver, "forward_many")
@@ -98,14 +120,22 @@ def _dispatch(driver, op: str, kw: dict):
             try:
                 if j - i > 1:
                     kw_i = entries[i].get("kw") or {}
-                    ys = driver.forward_many(
-                        [(e.get("kw") or {})["x"] for e in entries[i:j]],
-                        category=kw_i.get("category", "probe"),
-                        block_range=_rng(kw_i))
+                    xs_span = [(e.get("kw") or {})["x"]
+                               for e in entries[i:j]]
                     # the span travels as ONE stacked array (op axis
                     # leading) — one codec pass instead of n; the client
                     # splits it back into per-op results, bit-identical
-                    results.append(dict(coalesced=j - i, y=np.stack(ys)))
+                    fm = getattr(driver, "forward_many_stacked", None)
+                    if fm is not None:
+                        y = fm(xs_span,
+                               category=kw_i.get("category", "probe"),
+                               block_range=_rng(kw_i))
+                    else:
+                        y = np.stack(driver.forward_many(
+                            xs_span,
+                            category=kw_i.get("category", "probe"),
+                            block_range=_rng(kw_i)))
+                    results.append(dict(coalesced=j - i, y=y))
                 else:
                     results.append(
                         _dispatch(driver, sub, entries[i].get("kw") or {}))
@@ -135,6 +165,22 @@ def _dispatch(driver, op: str, kw: dict):
     if op == "forward":
         return dict(y=driver.forward(kw["x"], kw.get("category", "probe"),
                                      block_range=_rng(kw)))
+    if op == "forward_many":
+        # a client-coalesced probe span: one stacked x array in, one
+        # stacked y out (the same shape the server's own batch
+        # coalescing emits, so the client splits both identically)
+        xs = kw["xs"]
+        cat = kw.get("category", "probe")
+        fm = getattr(driver, "forward_many_stacked", None)
+        if fm is not None:
+            y = fm(xs, category=cat, block_range=_rng(kw))
+            return dict(coalesced=int(y.shape[0]), y=y)
+        if hasattr(driver, "forward_many"):
+            ys = driver.forward_many(xs, category=cat, block_range=_rng(kw))
+        else:
+            ys = [driver.forward(x, cat, block_range=_rng(kw)) for x in xs]
+        return dict(coalesced=len(ys),
+                    y=np.stack([np.asarray(y) for y in ys]))
     if op == "forward_layer":
         out_dim = kw.get("out_dim")
         return dict(y=driver.forward_layer(
@@ -187,13 +233,17 @@ def _dispatch(driver, op: str, kw: dict):
 
 
 def serve(fin, fout) -> None:
-    """One driver session over a newline-JSON stream pair.
+    """One driver session over a byte-stream pair.
 
-    Returns when the peer shuts down, disconnects, or desyncs the
-    framing (malformed/oversized frames are rejected with a best-effort
-    error frame, then the connection is dropped — after a framing
-    violation the stream position is untrustworthy)."""
+    Frames arrive in either encoding (:func:`recv` auto-detects); the
+    session's *outbound* encoding follows the init handshake — JSON
+    lines until (and including) the init reply, binary once v4 is
+    negotiated.  Returns when the peer shuts down, disconnects, or
+    desyncs the framing (malformed/oversized frames are rejected with a
+    best-effort error frame, then the connection is dropped — after a
+    framing violation the stream position is untrustworthy)."""
     driver = None
+    binary = False
     while True:
         try:
             req = recv(fin)
@@ -203,100 +253,159 @@ def serve(fin, fout) -> None:
                 # loudly before dropping the connection
                 try:
                     send(fout, dict(id=None, ok=False,
-                                    error=f"protocol error: {e}"))
+                                    error=f"protocol error: {e}"),
+                         binary=binary)
                 except Exception:
                     pass
             return
         rid = None
         try:
-            # inside the try: a valid-JSON frame can still be a non-dict
+            # inside the try: a valid frame can still be a non-dict
             # or carry a malformed __nd__ payload — that must draw an
             # error frame, not escape serve() (and, for the socket
             # daemon, kill the session loop for every future client)
             rid, op = req.get("id"), req.get("op")
             kw = decode(req.get("kw") or {})
             if op == "shutdown":
-                send(fout, dict(id=rid, ok=True, result=None))
+                send(fout, dict(id=rid, ok=True, result=None), binary=binary)
                 return
             if op == "init":
-                driver = _build_driver(kw)
+                driver, v = _build_driver(kw)
                 result = _dispatch(driver, "meta", {})
+                result["v"] = v         # echo the NEGOTIATED version
+                # the init reply always travels as a JSON line (the
+                # peer only switches framing after reading it) …
+                send(fout, dict(id=rid, ok=True, result=encode(result)))
+                # … then the session goes binary iff v4 was negotiated
+                binary = v >= 4
+                continue
             elif driver is None:
                 raise RuntimeError("first op must be 'init'")
             else:
                 result = _dispatch(driver, op, kw)
             try:
-                send(fout, dict(id=rid, ok=True, result=encode(result)))
+                send(fout, dict(id=rid, ok=True,
+                                result=encode(result, binary=binary)),
+                     binary=binary)
             except ProtocolError as e:
                 # result too large for one frame: send() refused BEFORE
                 # writing, so the stream is still framed — report a
                 # per-op error and keep the session (the op's state
                 # effects stand, exactly as a failed read would)
                 send(fout, dict(id=rid, ok=False,
-                                error=f"result not sendable: {e}"))
+                                error=f"result not sendable: {e}"),
+                     binary=binary)
         except ProtocolError:
             return                      # response no longer sendable
         except OSError:
             return                      # transport died mid-response
         except Exception:
             send(fout, dict(id=rid, ok=False,
-                            error=traceback.format_exc(limit=8)))
+                            error=traceback.format_exc(limit=8)),
+                 binary=binary)
 
 
-def serve_socket(host: str = "127.0.0.1", port: int = 0, *,
-                 max_conns: int | None = None, announce=None) -> None:
-    """Serve driver sessions over TCP, one connection at a time.
-
-    Each accepted connection is an independent session (own init, own
-    TwinDriver).  ``port=0`` binds an ephemeral port; the bound port is
-    announced as ``LISTENING <port>`` on ``announce`` (default stdout)
-    so self-hosting clients can discover it.  ``max_conns`` bounds the
-    number of sessions served (None = forever).
-    """
-    out = announce if announce is not None else sys.stdout
-    with _socket.create_server((host, port)) as srv:
-        print(f"LISTENING {srv.getsockname()[1]}", file=out, flush=True)
-        served = 0
-        while max_conns is None or served < max_conns:
-            conn, peer = srv.accept()
+def _serve_connection(conn, peer, lock: threading.Lock, state: dict,
+                      gate) -> None:
+    """One socket session, fully contained: ANY exception escaping the
+    session (not just OSError — e.g. a MemoryError from a hostile frame,
+    or a dispatcher bug outside serve()'s per-frame try) is logged and
+    swallowed so the daemon keeps serving other clients.  Accounting
+    (``served``) increments either way, under the shared lock."""
+    try:
+        try:
             with conn:
                 conn.setsockopt(_socket.IPPROTO_TCP, _socket.TCP_NODELAY, 1)
-                fin = conn.makefile("r", encoding="utf-8", newline="\n",
-                                    buffering=1 << 20)
-                fout = conn.makefile("w", encoding="utf-8", newline="\n",
-                                     buffering=1 << 20)
+                fin = conn.makefile("rb", buffering=1 << 20)
+                fout = conn.makefile("wb", buffering=1 << 20)
                 try:
                     serve(fin, fout)
-                except OSError as e:
-                    # one client dying mid-session (BrokenPipe on send,
-                    # RST on recv) must not take the daemon down with it
-                    print(f"session from {peer} aborted: {e}",
-                          file=sys.stderr, flush=True)
                 finally:
                     try:
                         fout.flush()
                     except Exception:
                         pass
-            served += 1
+        except Exception as e:
+            # one client dying mid-session (BrokenPipe on send, RST on
+            # recv) — or a non-OSError bug in its session — must not
+            # take the daemon down with it
+            print(f"session from {peer} aborted: {e!r}",
+                  file=sys.stderr, flush=True)
+    finally:
+        with lock:
+            state["served"] += 1
+        if gate is not None:
+            gate.release()
+
+
+def serve_socket(host: str = "127.0.0.1", port: int = 0, *,
+                 max_conns: int | None = None,
+                 sessions: int | None = None, announce=None) -> None:
+    """Serve driver sessions over TCP, one thread per connection.
+
+    Each accepted connection is an independent concurrent session (own
+    init, own TwinDriver, own thread); shared state is only the
+    announce stream and the ``served`` counter, guarded by one lock.
+    ``port=0`` binds an ephemeral port; the bound port is announced as
+    ``LISTENING <port>`` on ``announce`` (default stdout) so
+    self-hosting clients can discover it.
+
+    ``max_conns`` is the *concurrency* budget — at most that many
+    sessions run at once, further accepts queue in the listen backlog.
+    ``sessions`` bounds the daemon lifetime: stop accepting after that
+    many sessions total, drain the live ones, return.  (Self-hosted
+    drivers spawn with ``--sessions 1``.)
+    """
+    out = announce if announce is not None else sys.stdout
+    lock = threading.Lock()
+    state = {"served": 0}
+    gate = (threading.BoundedSemaphore(max_conns)
+            if max_conns is not None else None)
+    workers: list[threading.Thread] = []
+    with _socket.create_server((host, port)) as srv:
+        print(f"LISTENING {srv.getsockname()[1]}", file=out, flush=True)
+        accepted = 0
+        while sessions is None or accepted < sessions:
+            if gate is not None:
+                gate.acquire()
+            try:
+                conn, peer = srv.accept()
+            except BaseException:
+                if gate is not None:
+                    gate.release()
+                raise
+            accepted += 1
+            t = threading.Thread(
+                target=_serve_connection, args=(conn, peer, lock, state, gate),
+                name=f"hw-session-{accepted}", daemon=True)
+            t.start()
+            workers.append(t)
+            workers = [w for w in workers if w.is_alive()]
+    for t in workers:                   # bounded lifetime: drain, then exit
+        t.join()
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
-        description="repro.hw twin server (op-stream driver protocol v3)")
+        description="repro.hw twin server (op-stream driver protocol v4, "
+                    "v3 fallback)")
     ap.add_argument("--socket", metavar="HOST:PORT", default=None,
                     help="serve over TCP instead of stdin/stdout "
                          "(PORT=0 picks an ephemeral port)")
     ap.add_argument("--max-conns", type=int, default=None,
-                    help="exit after N socket sessions (default: serve "
-                         "forever)")
+                    help="serve at most N socket sessions CONCURRENTLY "
+                         "(default: unbounded)")
+    ap.add_argument("--sessions", type=int, default=None,
+                    help="exit after N socket sessions total (default: "
+                         "serve forever)")
     args = ap.parse_args(argv)
     if args.socket is not None:
         host, _, port = args.socket.rpartition(":")
         serve_socket(host or "127.0.0.1", int(port),
-                     max_conns=args.max_conns)
+                     max_conns=args.max_conns, sessions=args.sessions)
         return 0
     # stdout is the wire: anything else (jax chatter) must go to stderr
-    serve(sys.stdin, sys.stdout)
+    serve(sys.stdin.buffer, sys.stdout.buffer)
     return 0
 
 

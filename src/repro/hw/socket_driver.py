@@ -1,17 +1,23 @@
 """`SocketDriver`: the op-stream driver protocol over a TCP socket.
 
-Same framing, same v3 surface, same bit-identical results as the pipe
+Same framing, same op surface, same bit-identical results as the pipe
 transport — but the twin server can live on *another host*: point the
 driver at an ``address=(host, port)`` where ``python -m repro.hw.server
 --socket HOST:PORT`` is listening, and the whole control plane (IC, PM,
 monitoring, recalibration, fleet serving) runs against the remote
-device unchanged.
+device unchanged.  The v4 server is concurrent (thread-per-connection),
+so many SocketDrivers — a whole fleet — can share one server process,
+each with its own independent session.
 
 With ``address=None`` the driver self-hosts: it spawns a local server
 child bound to an ephemeral loopback port (``--socket 127.0.0.1:0
---max-conns 1``), reads the announced port off the child's stdout, and
+--sessions 1``), reads the announced port off the child's stdout, and
 connects — which is how the conformance suite and benchmarks exercise
-the TCP path hermetically.
+the TCP path hermetically.  The announce read is bounded by
+``connect_timeout`` (a child that dies silently, or never binds, fails
+construction instead of hanging it), and any construction failure —
+refused connection, handshake error — tears the child and its stderr
+spool back down before the exception propagates.
 
 ``TCP_NODELAY`` is set on the connection: the protocol is strictly
 request/response, so Nagle's algorithm would add a delayed-ACK stall to
@@ -22,10 +28,12 @@ round-trip amortization.
 from __future__ import annotations
 
 import os
+import select
 import socket
 import subprocess
 import sys
 import tempfile
+import time
 
 import jax
 
@@ -46,37 +54,71 @@ class SocketDriver(StreamDriver):
                  m: int | None = None, n: int | None = None,
                  drift: DriftConfig | None = None,
                  address: tuple[str, int] | None = None,
-                 python: str | None = None, connect_timeout: float = 30.0):
+                 python: str | None = None, connect_timeout: float = 30.0,
+                 protocol: int | None = None):
         self._proc = None
         self._stderr = None
-        if address is None:
-            # self-hosted: spawn a loopback server child and learn its port
-            self._stderr = tempfile.NamedTemporaryFile(
-                mode="w+", prefix="repro-hw-server-", suffix=".err",
-                delete=False)
-            self._proc = subprocess.Popen(
-                [python or sys.executable, "-u", "-m", "repro.hw.server",
-                 "--socket", "127.0.0.1:0", "--max-conns", "1"],
-                stdin=subprocess.DEVNULL, stdout=subprocess.PIPE,
-                stderr=self._stderr, text=True, env=server_env())
-            line = self._proc.stdout.readline()
-            if not line.startswith("LISTENING "):
-                self.close()
+        self._sock = None
+        # any failure from here on — a child that never announces, a
+        # refused connection, a handshake error — must not leak the
+        # spawned server or its stderr spool: unwind via close()
+        try:
+            if address is None:
+                # self-hosted: spawn a loopback server child, learn its port
+                self._stderr = tempfile.NamedTemporaryFile(
+                    mode="w+", prefix="repro-hw-server-", suffix=".err",
+                    delete=False)
+                self._proc = subprocess.Popen(
+                    [python or sys.executable, "-u", "-m", "repro.hw.server",
+                     "--socket", "127.0.0.1:0", "--sessions", "1"],
+                    stdin=subprocess.DEVNULL, stdout=subprocess.PIPE,
+                    stderr=self._stderr, env=server_env())
+                line = self._read_announce(connect_timeout)
+                if not line.startswith("LISTENING "):
+                    raise ProtocolError(
+                        f"socket server failed to announce its port: "
+                        f"{line!r}" + self._transport_diagnostics())
+                address = ("127.0.0.1", int(line.split()[1]))
+            self._sock = socket.create_connection(address,
+                                                  timeout=connect_timeout)
+            self._sock.settimeout(None)
+            self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            # 1 MiB stream buffers (batched frames are ~100 KB; the
+            # default 8 KB would syscall a dozen times per frame)
+            self._fin = self._sock.makefile("rb", buffering=1 << 20)
+            self._fout = self._sock.makefile("wb", buffering=1 << 20)
+            self._handshake(key, n_blocks, k, model, kind, m, n, drift,
+                            protocol=protocol)
+        except Exception:
+            self.close()
+            raise
+
+    def _read_announce(self, timeout: float) -> str:
+        """Bounded read of the child's ``LISTENING <port>`` line.
+
+        Raw fd reads under ``select`` with a deadline: a child that dies
+        before binding hits the EOF branch, one that never announces
+        hits the deadline — either way construction fails promptly
+        instead of blocking forever on ``readline()``."""
+        fd = self._proc.stdout.fileno()
+        deadline = time.monotonic() + timeout
+        buf = b""
+        while b"\n" not in buf:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
                 raise ProtocolError(
-                    f"socket server failed to announce its port: {line!r}"
+                    f"socket server did not announce its port within "
+                    f"{timeout:.1f}s" + self._transport_diagnostics())
+            ready, _, _ = select.select([fd], [], [], remaining)
+            if not ready:
+                continue
+            chunk = os.read(fd, 4096)
+            if not chunk:
+                raise ProtocolError(
+                    "socket server exited before announcing its port"
                     + self._transport_diagnostics())
-            address = ("127.0.0.1", int(line.split()[1]))
-        self._sock = socket.create_connection(address,
-                                              timeout=connect_timeout)
-        self._sock.settimeout(None)
-        self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-        # 1 MiB stream buffers (batched frames are ~100 KB; the default
-        # 8 KB would syscall a dozen times per frame)
-        self._fin = self._sock.makefile("r", encoding="utf-8", newline="\n",
-                                        buffering=1 << 20)
-        self._fout = self._sock.makefile("w", encoding="utf-8", newline="\n",
-                                         buffering=1 << 20)
-        self._handshake(key, n_blocks, k, model, kind, m, n, drift)
+            buf += chunk
+        return buf.split(b"\n", 1)[0].decode("utf-8", "replace")
 
     # -- transport hooks -----------------------------------------------------
 
@@ -101,14 +143,19 @@ class SocketDriver(StreamDriver):
                 pass
             self._sock = None
             self._fin = self._fout = None
-        if self._proc is not None:
+        if getattr(self, "_proc", None) is not None:
+            if sock is None:
+                # construction never reached a session (announce timeout,
+                # refused connection): the child is parked in accept()
+                # and will not exit on its own — reap it
+                self._proc.kill()
             try:
                 self._proc.wait(timeout=5)
             except Exception:
                 self._proc.kill()
                 self._proc.wait(timeout=5)
             self._proc = None
-        if self._stderr is not None:
+        if getattr(self, "_stderr", None) is not None:
             try:
                 self._stderr.close()
                 os.unlink(self._stderr.name)

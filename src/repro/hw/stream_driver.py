@@ -1,10 +1,11 @@
 """`StreamDriver`: shared op-stream client for out-of-process drivers.
 
 Both wire transports — :class:`~repro.hw.subprocess_driver.SubprocessDriver`
-(JSON over stdin/stdout pipes) and :class:`~repro.hw.socket_driver.SocketDriver`
+(frames over stdin/stdout pipes) and :class:`~repro.hw.socket_driver.SocketDriver`
 (the same framing over TCP) — are thin subclasses of this base, which owns
-everything above the byte stream: the init version handshake, per-op
-encode/decode, the v3 ``batch`` frame, and client-side write pipelining.
+everything above the byte stream: the init version handshake (v4 with a
+v3 fallback), per-op encode/decode, the ``batch`` frame, client-side
+write pipelining, and the async response reader.
 
 Write pipelining (v3)
 ---------------------
@@ -26,6 +27,18 @@ rules close most of it:
   one frame and returns the per-op results, for hot paths that *read*
   repeatedly (probe sweeps, recalibration's job+readback sequence).
 
+Async issue/collect (v4)
+------------------------
+:meth:`run_batch_async` writes the batch frame and returns a
+:class:`BatchFuture` immediately; a lazily-started daemon reader thread
+matches response frames to futures by request id.  Frames on one stream
+still execute strictly in issue order server-side (one session = one
+driver = one thread there), so async results are bit-identical to the
+synchronous encoding — the only thing that overlaps is *this* client's
+wait.  ``FleetRouter`` uses it to overlap probe sweeps and serve passes
+across chips.  Once the reader exists, synchronous ops route through the
+same id-matched path, so sync and async calls interleave safely.
+
 Arguments are validated client-side where the driver has the geometry
 (``block_range`` bounds), so a queued write still raises ``ValueError``
 at the call site, not at the flush boundary.  Server-side failures of a
@@ -35,6 +48,8 @@ flushed batch raise at the flushing op and name the failing index.
 from __future__ import annotations
 
 import dataclasses
+import threading
+from concurrent.futures import Future
 
 import jax
 import jax.numpy as jnp
@@ -46,11 +61,12 @@ from .device import DeviceRealization
 from ..core.noise import PhaseNoise
 from .driver import (PhotonicDriver, DriverStats, ZORefineResult, ICJobResult,
                      TwinUnavailable, resolve_block_range, BATCHABLE_OPS,
-                     STAT_CATEGORIES)
+                     STAT_CATEGORIES, CompletedBatch, forward_coalesce_key,
+                     coalesce_spans)
 from .protocol import (encode, decode, send, recv, ProtocolError,
-                       PROTOCOL_VERSION)
+                       PROTOCOL_VERSION, SUPPORTED_VERSIONS)
 
-__all__ = ["StreamDriver", "RemoteTwinHandle", "PIPELINED_OPS"]
+__all__ = ["StreamDriver", "RemoteTwinHandle", "BatchFuture", "PIPELINED_OPS"]
 
 
 def _rng_kw(block_range):
@@ -94,7 +110,7 @@ class RemoteTwinHandle:
     def true_mapping_distance(self, w_blocks: jax.Array,
                               block_range=None) -> float:
         r = self._d._exec("unsafe/true_mapping_distance",
-                          dict(w_blocks=encode(w_blocks),
+                          dict(w_blocks=self._d._encode(w_blocks),
                                block_range=_rng_kw(block_range)))
         return float(r["d"])
 
@@ -102,11 +118,34 @@ class RemoteTwinHandle:
         return float(self._d._exec("unsafe/bias_deviation", {})["d"])
 
 
+class BatchFuture:
+    """Handle to an in-flight :meth:`StreamDriver.run_batch_async` frame.
+
+    ``result()`` blocks until the response frame arrives (optionally
+    bounded by ``timeout`` seconds), then decodes to exactly what the
+    synchronous :meth:`~StreamDriver.run_batch` would have returned —
+    same objects, same per-op errors, bit-identical values."""
+
+    def __init__(self, driver: "StreamDriver", names: list,
+                 n_head: int, raw: Future):
+        self._driver = driver
+        self._names = names
+        self._n_head = n_head
+        self._raw = raw
+
+    def done(self) -> bool:
+        return self._raw.done()
+
+    def result(self, timeout=None):
+        resp = self._raw.result(timeout)
+        return self._driver._finish_batch(self._names, self._n_head, resp)
+
+
 class StreamDriver(PhotonicDriver):
-    """Control-plane client over a newline-JSON op stream.
+    """Control-plane client over a framed op byte stream.
 
     Subclasses own the transport: they must create ``self._fin`` /
-    ``self._fout`` (text-mode stream files), then call
+    ``self._fout`` (binary-mode stream files), then call
     :meth:`_handshake`, and implement :meth:`_transport_alive`,
     :meth:`_transport_diagnostics`, and :meth:`close`.
     """
@@ -128,36 +167,143 @@ class StreamDriver(PhotonicDriver):
     # -- handshake -----------------------------------------------------------
 
     def _handshake(self, key, n_blocks: int, k: int, model, kind: str,
-                   m, n, drift) -> None:
+                   m, n, drift, protocol: int | None = None) -> None:
+        """Init the session, negotiating the wire protocol.
+
+        Offers v4 (binary frames) by default; a v3-only peer answers the
+        init with a ``protocol mismatch`` error — same connection, still
+        framed — and the client retries the init at v3, staying on JSON
+        lines for the session.  ``protocol`` forces a specific version
+        (no fallback), which is how the conformance tests pin the v3
+        encoding for bit-identity comparisons."""
         self._rid = 0
         self._rpc_count = 0          # frames sent (introspection/benchmarks)
         self._pending: list[dict] = []
-        meta = self._exec("init", dict(
-            v=PROTOCOL_VERSION, key=encode(np.asarray(key)),
-            n_blocks=int(n_blocks), k=int(k), kind=kind, m=m, n=n,
-            model=dataclasses.asdict(model),
-            drift=drift._asdict() if drift is not None else None))
-        if int(meta.get("v", 1)) != PROTOCOL_VERSION:
+        self._binary = False         # init always travels as a JSON line
+        self._twin_verified = False
+        self._lock = threading.Lock()
+        self._inflight: dict[int, Future] = {}
+        self._reader: threading.Thread | None = None
+        self._reader_err: BaseException | None = None
+        want = PROTOCOL_VERSION if protocol is None else int(protocol)
+        if want not in SUPPORTED_VERSIONS:
+            raise ValueError(
+                f"unsupported driver protocol v{want} "
+                f"(client speaks {SUPPORTED_VERSIONS})")
+        base = dict(
+            key=encode(np.asarray(key)), n_blocks=int(n_blocks), k=int(k),
+            kind=kind, m=m, n=n, model=dataclasses.asdict(model),
+            drift=drift._asdict() if drift is not None else None)
+        try:
+            meta = self._exec("init", dict(base, v=want))
+        except ProtocolError:
+            self.close()
+            raise
+        except RuntimeError as e:
+            if not (protocol is None and want > 3
+                    and "protocol mismatch" in str(e)):
+                self.close()
+                raise
+            # v3-only peer refused the init (a clean error frame — the
+            # stream is still framed): retry as a v3 session
+            want = 3
+            try:
+                meta = self._exec("init", dict(base, v=want))
+            except Exception:
+                self.close()
+                raise
+        if int(meta.get("v", 1)) != want:
             self.close()
             raise ProtocolError(
-                f"driver protocol mismatch: server speaks "
-                f"v{meta.get('v', 1)}, client speaks v{PROTOCOL_VERSION}")
+                f"driver protocol mismatch: server negotiated "
+                f"v{meta.get('v', 1)}, client asked for v{want}")
+        self._binary = want >= 4     # everything after init goes binary
+        self._protocol = want
         self._meta = meta
 
     # -- op stream -----------------------------------------------------------
 
+    def _encode(self, obj):
+        """Session-codec array encoding (binary once v4 is negotiated)."""
+        return encode(obj, binary=getattr(self, "_binary", False))
+
+    def _ensure_reader(self) -> None:
+        """Start the response reader (idempotent; caller holds _lock).
+
+        Until the first async op, the driver is purely synchronous and
+        no thread exists; once started, ALL responses flow through the
+        reader and are matched to futures by request id."""
+        if self._reader is None:
+            t = threading.Thread(target=self._read_loop, daemon=True,
+                                 name=f"{type(self).__name__}-reader")
+            self._reader = t
+            t.start()
+
+    def _read_loop(self) -> None:
+        while True:
+            try:
+                resp = recv(self._fin)
+            except Exception as e:
+                with self._lock:
+                    self._reader_err = e
+                    inflight, self._inflight = self._inflight, {}
+                err = ProtocolError(
+                    f"driver stream failed: {e}"
+                    + self._transport_diagnostics())
+                for fut in inflight.values():
+                    fut.set_exception(err)
+                return
+            with self._lock:
+                fut = self._inflight.pop(resp.get("id"), None)
+            if fut is not None:
+                # unmatched ids (e.g. the id=0 shutdown ack) are dropped
+                fut.set_result(resp)
+
+    def _post(self, msg: dict) -> Future:
+        """Write one request frame; return a Future of the raw response.
+
+        The future is registered *before* the frame is written (under
+        the stream lock), so a fast peer cannot race the reader.  Raises
+        :class:`ProtocolError` without writing if the frame is oversized
+        or the transport is down — the stream stays framed."""
+        fut: Future = Future()
+        with self._lock:
+            if not self._transport_alive():
+                raise ProtocolError(
+                    "driver stream is closed (peer exited or driver closed)"
+                    + self._transport_diagnostics())
+            if self._reader_err is not None:
+                raise ProtocolError(
+                    f"driver stream failed: {self._reader_err}"
+                    + self._transport_diagnostics())
+            self._ensure_reader()
+            self._rid += 1
+            rid = self._rid
+            self._inflight[rid] = fut
+            try:
+                send(self._fout, dict(msg, id=rid), binary=self._binary)
+                self._rpc_count += 1
+            except Exception:
+                del self._inflight[rid]
+                raise
+        return fut
+
     def _send_frame(self, msg: dict) -> dict:
-        """One request frame → one response frame (raw JSON dicts)."""
+        """One request frame → one decoded response (blocking)."""
         if not self._transport_alive():
             raise ProtocolError(
                 "driver stream is closed (peer exited or driver closed)"
                 + self._transport_diagnostics())
-        self._rid += 1
-        msg = dict(msg, id=self._rid)
         try:
-            send(self._fout, msg)
-            resp = recv(self._fin)
-            self._rpc_count += 1
+            if self._reader is not None:
+                # async reader owns the receive side: route through it
+                resp = self._post(msg).result()
+            else:
+                self._rid += 1
+                framed = dict(msg, id=self._rid)
+                send(self._fout, framed, binary=self._binary)
+                resp = recv(self._fin)
+                self._rpc_count += 1
         except (ProtocolError, OSError) as e:
             raise ProtocolError(
                 f"driver stream failed during op {msg.get('op')!r}: {e}"
@@ -216,6 +362,66 @@ class StreamDriver(PhotonicDriver):
 
     # -- batched op lists ----------------------------------------------------
 
+    def _validated_entries(self, ops) -> list:
+        """Wire entries for an op list, with consecutive coalescible
+        ``forward`` ops merged CLIENT-SIDE into one stacked
+        ``forward_many`` entry (one codec pass + one metadata node
+        instead of n — the dominant per-op cost of a batched probe
+        sweep).  The merge rule is the shared ``coalesce_spans``, so the
+        server's reply (one ``coalesced`` result per span) re-expands to
+        exactly the per-op results sequential dispatch would return."""
+        for name, _ in ops:
+            if name not in BATCHABLE_OPS:
+                raise ValueError(
+                    f"op {name!r} cannot appear inside a batch")
+        first = ops[0] if ops else None
+        if (len(ops) > 1 and all(o is first for o in ops)
+                and first[0] == "forward"):
+            # the replicated-op list (`[op] * n`, the canonical probe
+            # sweep) coalesces by construction: one key, one span —
+            # skip n-1 redundant key derivations on the hot path
+            keys = [forward_coalesce_key(first[1])] * len(ops)
+        else:
+            keys = [forward_coalesce_key(kw) if name == "forward" else None
+                    for name, kw in ops]
+        entries = []
+        for i, j in coalesce_spans(keys):
+            if j - i > 1:
+                kw = ops[i][1]
+                # same dtype coercion the device applies to each op; a
+                # span of the SAME array object (the common probe-sweep
+                # shape) converts once and broadcasts instead of paying
+                # n host transfers + a stack copy
+                span = [k.get("x") for _, k in ops[i:j]]
+                if all(s is span[0] for s in span):
+                    x0 = np.asarray(span[0], np.float32)
+                    xs = np.broadcast_to(x0, (len(span),) + x0.shape)
+                else:
+                    xs = np.stack([np.asarray(s, np.float32)
+                                   for s in span])
+                entries.append(dict(op="forward_many", kw=self._wire_kw(
+                    "forward_many",
+                    dict(xs=xs, category=kw.get("category", "probe"),
+                         block_range=kw.get("block_range")))))
+            else:
+                name, kw = ops[i]
+                entries.append(
+                    dict(op=name, kw=self._wire_kw(name, dict(kw))))
+        return entries
+
+    @staticmethod
+    def _split_coalesced(raw: list) -> list:
+        # a coalesced probe span comes back as one stacked array (op
+        # axis leading): split it into per-op results — bit-identical
+        # to per-op payloads at a fraction of the codec cost
+        flat: list = []
+        for r in raw:
+            if isinstance(r, dict) and "coalesced" in r:
+                flat.extend(dict(y=y) for y in r["y"])
+            else:
+                flat.append(r)
+        return flat
+
     def run_batch(self, ops):
         """Execute ``[(op_name, kwargs), ...]`` in ONE round-trip.
 
@@ -227,12 +433,7 @@ class StreamDriver(PhotonicDriver):
         accepted — the same validation every transport applies, so a
         list that runs in-process runs over the wire and vice versa.
         """
-        for name, _ in ops:
-            if name not in BATCHABLE_OPS:
-                raise ValueError(
-                    f"op {name!r} cannot appear inside a batch")
-        entries = [dict(op=name, kw=self._wire_kw(name, dict(kw)))
-                   for name, kw in ops]
+        entries = self._validated_entries(ops)
         if not entries:
             return []
         head, self._pending = self._pending, []
@@ -259,17 +460,58 @@ class StreamDriver(PhotonicDriver):
                     f"list)") from e
             raise
         raw = raw[len(head):]
-        # a coalesced probe span comes back as one stacked array (op
-        # axis leading): split it into per-op results — bit-identical
-        # to per-op payloads at a fraction of the codec cost
-        flat = []
-        for r in raw:
-            if isinstance(r, dict) and "coalesced" in r:
-                flat.extend(dict(y=y) for y in r["y"])
-            else:
-                flat.append(r)
+        flat = self._split_coalesced(raw)
         return [self._decode_result(name, r)
                 for (name, _), r in zip(ops, flat)]
+
+    def run_batch_async(self, ops):
+        """Issue ``[(op_name, kwargs), ...]`` NOW; collect results later.
+
+        The batch frame (with any pipelined writes flushed ahead of it,
+        exactly as :meth:`run_batch`) is written before this returns; a
+        daemon reader thread resolves the returned :class:`BatchFuture`
+        when the response frame arrives.  ``future.result()`` returns —
+        or raises — exactly what the synchronous call would have.
+        Frames on one stream execute in issue order server-side, so
+        interleaved sync/async ops keep their program order and results
+        stay bit-identical to the synchronous encoding.
+        """
+        entries = self._validated_entries(ops)
+        head, self._pending = self._pending, []
+        all_entries = head + entries
+        if not all_entries:
+            return CompletedBatch([])
+        names = [name for name, _ in ops]
+        try:
+            raw = self._post(dict(op="batch", kw=dict(ops=all_entries)))
+        except ProtocolError as e:
+            if "refusing to send oversized frame" not in str(e):
+                raise
+            # nothing was written: fall back to the synchronous halving
+            # split (identical semantics) and hand back a resolved handle
+            self._send_split = True
+            raw_results = self._send_ops(all_entries)[len(head):]
+            flat = self._split_coalesced(raw_results)
+            return CompletedBatch([self._decode_result(name, r)
+                                   for name, r in zip(names, flat)])
+        return BatchFuture(self, names, len(head), raw)
+
+    def _finish_batch(self, names: list, n_head: int, resp: dict) -> list:
+        """Decode a raw ``batch`` response frame for :class:`BatchFuture`."""
+        if not resp.get("ok"):
+            err = RuntimeError(
+                f"remote driver op 'batch' failed:\n{resp.get('error')}")
+            if n_head:
+                raise RuntimeError(
+                    f"{err}\n(note: {n_head} pipelined write(s) were "
+                    f"flushed ahead of this run_batch_async in the same "
+                    f"frame; server batch indices include them — subtract "
+                    f"{n_head} for this call's op list)") from err
+            raise err
+        raw = decode(resp.get("result"))[n_head:]
+        flat = self._split_coalesced(raw)
+        return [self._decode_result(name, r)
+                for name, r in zip(names, flat)]
 
     # -- per-op wire encoding / result decoding ------------------------------
 
@@ -305,18 +547,20 @@ class StreamDriver(PhotonicDriver):
                   "forward_layer"):
             for name in ("phi_u", "phi_v", "sigma", "d_u", "d_v", "x"):
                 if name in kw:
-                    kw[name] = encode(kw[name])
+                    kw[name] = self._encode(kw[name])
+        if op == "forward_many":
+            kw["xs"] = self._encode(kw["xs"])
         if op == "forward_layer" and kw.get("out_dim") is not None:
             kw["out_dim"] = int(kw["out_dim"])
         if op == "readback_bases" and kw.get("cols") is not None:
             kw["cols"] = [int(c) for c in np.asarray(kw["cols"]).tolist()]
         if op in ("zo_refine", "run_ic"):
-            kw["key"] = encode(np.asarray(kw["key"]))
+            kw["key"] = self._encode(np.asarray(kw["key"]))
             kw["cfg"] = kw["cfg"]._asdict()
             if "w_blocks" in kw:
-                kw["w_blocks"] = encode(kw["w_blocks"])
+                kw["w_blocks"] = self._encode(kw["w_blocks"])
             if "sigs" in kw:
-                kw["sigs"] = encode(kw["sigs"])
+                kw["sigs"] = self._encode(kw["sigs"])
             if "restarts" in kw:
                 kw["restarts"] = int(kw["restarts"])
         if op == "charge":
@@ -374,6 +618,11 @@ class StreamDriver(PhotonicDriver):
     @property
     def layer_shape(self) -> tuple[int, int]:
         return int(self._meta["m"]), int(self._meta["n"])
+
+    @property
+    def protocol(self) -> int:
+        """The wire protocol version this session negotiated (3 or 4)."""
+        return int(getattr(self, "_protocol", PROTOCOL_VERSION))
 
     # -- commanded state (pipelined: no round-trip) --------------------------
 
@@ -451,7 +700,13 @@ class StreamDriver(PhotonicDriver):
             "charge", dict(category=category, calls=calls)))
 
     def unsafe_twin(self) -> RemoteTwinHandle:
-        # probe the peer's unsafe/* support once, then trust it
+        # a dead stream means NO twin, not a confusing ProtocolError
+        # three calls deep into a RemoteTwinHandle
+        if not self._transport_alive():
+            raise TwinUnavailable(
+                "driver stream is closed (peer exited or driver closed)")
+        # probe the peer's unsafe/* support once per live stream, then
+        # trust it (close() invalidates the cache)
         if not getattr(self, "_twin_verified", False):
             try:
                 self._exec("unsafe/bias_deviation", {})
@@ -469,10 +724,15 @@ class StreamDriver(PhotonicDriver):
         reads that will never happen), and waiting on a reply from a
         possibly-wedged peer would make close() unbounded; the
         transports' close() paths already escalate to kill/disconnect
-        on a timeout.  Errors are swallowed — close() must succeed on a
-        dead peer."""
+        on a timeout.  (The id=0 ack, if it ever arrives, matches no
+        in-flight future and is dropped by the reader.)  Errors are
+        swallowed — close() must succeed on a dead peer.  The
+        ``unsafe_twin`` capability cache dies with the stream: a
+        re-verified probe on a future stream must start from scratch."""
+        self._twin_verified = False
         try:
             self._pending = []
-            send(self._fout, dict(id=0, op="shutdown", kw={}))
+            send(self._fout, dict(id=0, op="shutdown", kw={}),
+                 binary=getattr(self, "_binary", False))
         except Exception:
             pass

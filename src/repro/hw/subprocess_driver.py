@@ -6,12 +6,12 @@ control plane reaches it only through the wire protocol — the same
 topology a lab instrument server or a remote chip simulator would have.
 Results are bit-identical to :class:`TwinDriver` for equal construction
 seeds (the server runs the same physics and job code on the same
-backend; float32 arrays round-trip the stream exactly).
+backend; raw array bytes round-trip the stream exactly).
 
-All protocol behavior (v3 batch frames, write pipelining, per-op
-encode/decode) lives in the shared
-:class:`~repro.hw.stream_driver.StreamDriver` base; this class only
-owns the child process and its stdin/stdout pipes.
+All protocol behavior (v4 binary frames with the v3 fallback, batch
+frames, write pipelining, the async reader, per-op encode/decode) lives
+in the shared :class:`~repro.hw.stream_driver.StreamDriver` base; this
+class only owns the child process and its (binary) stdin/stdout pipes.
 """
 
 from __future__ import annotations
@@ -67,22 +67,33 @@ class SubprocessDriver(StreamDriver):
                  model: NoiseModel, kind: str = "clements", *,
                  m: int | None = None, n: int | None = None,
                  drift: DriftConfig | None = None,
-                 python: str | None = None):
-        # server stderr (jax chatter, crash tracebacks) goes to a spool
-        # file so a dead pipe can be diagnosed without polluting stdout
-        self._stderr = tempfile.NamedTemporaryFile(
-            mode="w+", prefix="repro-hw-server-", suffix=".err", delete=False)
-        # 1 MiB pipe buffers: a batched probe sweep's response frame is
-        # ~100 KB — default 8 KB buffering costs a dozen syscalls per
-        # frame on the hot path
-        self._proc = subprocess.Popen(
-            [python or sys.executable, "-u", "-m", "repro.hw.server"],
-            stdin=subprocess.PIPE, stdout=subprocess.PIPE,
-            stderr=self._stderr, text=True, env=server_env(),
-            bufsize=1 << 20)
-        self._fin = self._proc.stdout
-        self._fout = self._proc.stdin
-        self._handshake(key, n_blocks, k, model, kind, m, n, drift)
+                 python: str | None = None, protocol: int | None = None):
+        self._proc = None
+        self._stderr = None
+        try:
+            # server stderr (jax chatter, crash tracebacks) goes to a
+            # spool file so a dead pipe can be diagnosed without
+            # polluting stdout
+            self._stderr = tempfile.NamedTemporaryFile(
+                mode="w+", prefix="repro-hw-server-", suffix=".err",
+                delete=False)
+            # binary pipes (the wire is framed bytes, not text); 1 MiB
+            # buffers — a batched probe sweep's response frame is
+            # ~100 KB, and default 8 KB buffering costs a dozen
+            # syscalls per frame on the hot path
+            self._proc = subprocess.Popen(
+                [python or sys.executable, "-u", "-m", "repro.hw.server"],
+                stdin=subprocess.PIPE, stdout=subprocess.PIPE,
+                stderr=self._stderr, env=server_env(), bufsize=1 << 20)
+            self._fin = self._proc.stdout
+            self._fout = self._proc.stdin
+            self._handshake(key, n_blocks, k, model, kind, m, n, drift,
+                            protocol=protocol)
+        except Exception:
+            # a half-built driver (spawn failed, handshake refused) must
+            # not leak the child or the spool file
+            self.close()
+            raise
 
     # -- transport hooks -----------------------------------------------------
 
@@ -96,23 +107,24 @@ class SubprocessDriver(StreamDriver):
         return stderr_tail(self._stderr)
 
     def close(self) -> None:
-        if getattr(self, "_proc", None) is None:
-            return
-        try:
-            if self._proc.poll() is None:
-                self._shutdown_stream()
-                self._proc.wait(timeout=5)
-        except Exception:
-            self._proc.kill()
-            self._proc.wait(timeout=5)
-        finally:
+        proc = getattr(self, "_proc", None)
+        if proc is not None:
+            try:
+                if proc.poll() is None:
+                    self._shutdown_stream()
+                    proc.wait(timeout=5)
+            except Exception:
+                proc.kill()
+                proc.wait(timeout=5)
             self._proc = None
             self._fin = self._fout = None
+        if getattr(self, "_stderr", None) is not None:
             try:
                 self._stderr.close()
                 os.unlink(self._stderr.name)
             except OSError:
                 pass
+            self._stderr = None
 
     def __del__(self):
         try:

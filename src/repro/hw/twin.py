@@ -315,14 +315,30 @@ class TwinDriver(PhotonicDriver):
         compiled (vmapped) call — the data plane of a batched health
         sweep.  Bit-identical to N sequential :meth:`forward` calls
         (asserted by the conformance suite); each op is charged
-        individually.  Returns host arrays (one per op)."""
-        xs = np.stack([np.asarray(x, np.float32) for x in xs])
+        individually.  Returns host arrays (one per op).
+
+        ``xs`` is a sequence of same-shape per-op arrays, or the
+        equivalent already-stacked (n, ...) array — the form a v4 batch
+        frame carries, accepted directly to skip n re-conversions."""
+        return list(self.forward_many_stacked(xs, category,
+                                              block_range=block_range))
+
+    def forward_many_stacked(self, xs, category: str = "probe", *,
+                             block_range=None) -> np.ndarray:
+        """:meth:`forward_many` without the final split: returns the
+        single stacked ``(n, ...)`` host array — exactly the v4 wire
+        form — so a server answering a coalesced probe span avoids
+        splitting into n views only to re-stack them for the frame."""
+        if isinstance(xs, np.ndarray):
+            xs = np.ascontiguousarray(xs, np.float32)
+        else:
+            xs = np.stack([np.asarray(x, np.float32) for x in xs])
         start, stop = resolve_block_range(self._b, block_range)
         ys = np.asarray(self._jit_forward_many(
             self._phi, self._sigma, self._state.dev, xs, start, stop))
         for x in xs:
             self._stats.charge(category, probe_cost(stop - start, x.shape[0]))
-        return list(ys)
+        return ys
 
     def run_batch(self, ops):
         """Sequential dispatch, with consecutive same-shape ``forward``

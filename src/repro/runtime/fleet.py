@@ -67,7 +67,7 @@ from ..core.noise import NoiseModel, DEFAULT_NOISE
 from ..core.ptc import blockize
 from ..hw import make_driver, DriftConfig, DEFAULT_DRIFT
 from .monitor import (MonitorConfig, HealthState, probe_mapping_distance,
-                      probe_tenant_distances, update_health, clear_health)
+                      score_tenant_probes, update_health, clear_health)
 from .recalibrate import RecalConfig, recalibrate
 
 __all__ = ["HEALTHY", "DEGRADED", "RECALIBRATING", "RuntimeConfig",
@@ -361,40 +361,78 @@ class FleetRouter:
             return min(cands, key=lambda c: (c.served, c.chip_id))
         return None
 
-    def serve_pass(self, chip: Chip, items: "Sequence[tuple[int, jax.Array]]"
-                   ) -> list:
-        """Execute several tenants' layer matmuls on ``chip`` in ONE
-        driver round-trip: ``items`` is ``[(tenant_idx, x), ...]`` and
-        the whole list ships as a single v3 ``batch`` frame (any
-        pipelined clock advances from :meth:`tick` flush ahead of it in
-        the same frame), so a decode step costs O(1) RPCs per
-        (chip, layer-group) instead of one per op.  Results are
-        bit-identical to per-op ``forward_layer`` calls by the batch
-        frame's construction; serve counters update per tenant."""
+    def _pass_ops(self, chip: Chip,
+                  items: "Sequence[tuple[int, jax.Array]]") -> list:
         ops = []
         for idx, x in items:
             t = chip.tenants[idx]
             ops.append(("forward_layer", dict(x=x, block_range=t.block_range,
                                               out_dim=t.m)))
-        ys = chip.driver.run_batch(ops)
+        return ops
+
+    def serve_pass(self, chip: Chip, items: "Sequence[tuple[int, jax.Array]]"
+                   ) -> list:
+        """Execute several tenants' layer matmuls on ``chip`` in ONE
+        driver round-trip: ``items`` is ``[(tenant_idx, x), ...]`` and
+        the whole list ships as a single ``batch`` frame (any pipelined
+        clock advances from :meth:`tick` flush ahead of it in the same
+        frame), so a decode step costs O(1) RPCs per (chip,
+        layer-group) instead of one per op.  Results are bit-identical
+        to per-op ``forward_layer`` calls by the batch frame's
+        construction; serve counters update per tenant."""
+        ys = chip.driver.run_batch(self._pass_ops(chip, items))
         for idx, _ in items:
             chip.tenants[idx].served += 1
         chip.served += len(items)   # chip total stays Σ tenant counters
         return ys
+
+    def serve_pass_async(self, chip: Chip,
+                         items: "Sequence[tuple[int, jax.Array]]"):
+        """:meth:`serve_pass`, split at the wire: issue the batch frame
+        now, return a future whose ``.result()`` is exactly
+        :meth:`serve_pass`'s response list.  A caller holding passes
+        for several chips issues them all, then collects — the frames
+        overlap across chips instead of serializing round-trips.
+        Counters update at issue time (the frame is committed to the
+        wire once this returns); results are bit-identical to the
+        blocking path by :meth:`~repro.hw.driver.PhotonicDriver.
+        run_batch_async`'s contract."""
+        fut = chip.driver.run_batch_async(self._pass_ops(chip, items))
+        for idx, _ in items:
+            chip.tenants[idx].served += 1
+        chip.served += len(items)   # chip total stays Σ tenant counters
+        return fut
 
     # -- the closed loop ----------------------------------------------------
 
     def tick(self, dt: float = 1.0) -> None:
         """Advance virtual time: every chip's clock runs, due probes
         fire, alarms raise, out-of-band recalibration jobs schedule and
-        complete.  ``driver.advance`` is result-less, so on stream
-        transports it pipelines client-side — a tick with no due probe
-        costs zero round-trips, and the queued advances land (in order)
-        inside the next probe's / serve's batch frame."""
+        complete.
+
+        The tick is two-phase.  The *issue* phase walks chips in order:
+        clocks advance (result-less, so stream transports pipeline them
+        client-side — a tick with no due probe costs zero round-trips),
+        finished repair jobs land, and every due probe's batch frame
+        goes out via ``driver.run_batch_async`` WITHOUT waiting for its
+        response — a fleet health sweep has every chip's frame in
+        flight at once.  The *collect* phase resolves responses in the
+        same chip order, scores them electronically
+        (:func:`~repro.runtime.monitor.score_tenant_probes`), and runs
+        alarm/repair scheduling against the repair-slot occupancy each
+        chip would have observed in the sequential walk — PRNG draws,
+        health decisions, and results are bit-identical to the
+        serialized tick; only the wall-clock overlap changes."""
         cfg = self.cfg
         self.tick_count += 1
         in_repair = sum(c.status == RECALIBRATING for c in self.chips)
+        probe_due = self.tick_count % cfg.probe_every == 0
 
+        # issue phase.  Probe keys and _finish_recal's keys draw at the
+        # chip's position in the walk, exactly as the sequential loop
+        # drew them.  `pending` records every schedulable chip with the
+        # repair-slot occupancy at its walk position.
+        pending = []
         for chip in self.chips:
             chip.driver.advance(dt)
 
@@ -405,34 +443,45 @@ class FleetRouter:
                     in_repair -= 1
                 continue
 
-            if self.tick_count % cfg.probe_every == 0:
-                self._probe(chip)
+            x = fut = None
+            if probe_due:
+                x = jax.random.normal(self._next_key(),
+                                      (cfg.monitor.n_probes, chip.driver.k))
+                fut = chip.driver.run_batch_async(
+                    [("forward", dict(x=x, category="probe"))])
+            pending.append((chip, in_repair, x, fut))
 
+        # collect phase: resolve in issue order; a chip's scheduling
+        # decision replays the sequential walk's slot count — its
+        # issue-phase occupancy plus repairs scheduled ahead of it here
+        scheduled = 0
+        for chip, base_repair, x, fut in pending:
+            if fut is not None:
+                self._score_probe(chip, x, fut.result()[0])
             if (chip.alarmed and self.recal_enabled
-                    and in_repair < cfg.max_concurrent_recals):
+                    and base_repair + scheduled < cfg.max_concurrent_recals):
                 # repair the worst alarmed tenant; others re-queue after
                 alarmed = [t for t in chip.tenants if t.health.alarmed]
                 worst = max(alarmed, key=lambda t: t.health.distance)
                 chip.status = RECALIBRATING
                 chip.recal_tenant = worst.tenant_id
                 chip.recal_ticks_left = cfg.recal_latency
-                in_repair += 1
+                scheduled += 1
                 self.events.append(dict(tick=self.tick_count,
                                         event="recal_start",
                                         chip=chip.chip_id,
                                         tenant=worst.tenant_id))
 
-    def _probe(self, chip: Chip) -> None:
-        """One shared probe stream, scored per tenant (B·n_probes PTC
-        calls total — same light as a whole-chip check).  On stream
-        transports this is ONE batched RPC per chip: the probe forward
-        flushes the pipelined clock advances queued by :meth:`tick` in
-        the same wire frame."""
+    def _score_probe(self, chip: Chip, x: jax.Array, y_hat) -> None:
+        """Fold one resolved probe response into tenant health: the
+        shared stream ``x`` is scored per tenant (B·n_probes PTC calls
+        total, charged at issue — same light as a whole-chip check).
+        On stream transports the issued frame was ONE batched RPC: the
+        probe forward flushed the pipelined clock advances queued by
+        :meth:`tick` in the same wire frame."""
         cfg = self.cfg
-        ests = probe_tenant_distances(
-            self._next_key(), chip.driver,
-            [(t.block_range, t.w_blocks) for t in chip.tenants],
-            cfg.monitor.n_probes)
+        ests = score_tenant_probes(
+            x, y_hat, [(t.block_range, t.w_blocks) for t in chip.tenants])
         for ten, est in zip(chip.tenants, ests):
             was_alarmed = ten.health.alarmed
             ten.health = update_health(ten.health, float(est), cfg.monitor)

@@ -49,8 +49,8 @@ from ..hw.driver import readout_blocks
 
 __all__ = ["MonitorConfig", "HealthState", "aggregate_distance",
            "probe_mapping_distance", "probe_tenant_distances",
-           "readout_mapping_distance", "probe_identity_distance",
-           "update_health", "clear_health"]
+           "score_tenant_probes", "readout_mapping_distance",
+           "probe_identity_distance", "update_health", "clear_health"]
 
 
 class MonitorConfig(NamedTuple):
@@ -111,13 +111,27 @@ def probe_tenant_distances(key: jax.Array, driver,
     Wire cost: ONE batched RPC per chip.  The single ``forward`` is the
     probe stream's only observable op, and on the stream transports it
     auto-flushes any pipelined clock advances / writes ahead of itself
-    in the same v3 ``batch`` frame — a fleet health sweep therefore
-    costs one round-trip per chip regardless of how many ticks elapsed
-    since the last probe.
+    in the same ``batch`` frame — a fleet health sweep therefore costs
+    one round-trip per chip regardless of how many ticks elapsed since
+    the last probe.
+
+    The probe splits into issue (draw ``x``, stream it through the
+    device) and score (:func:`score_tenant_probes`, pure electronics)
+    so an async caller — ``FleetRouter.tick`` — can have every chip's
+    probe frame in flight before the first response is scored.
     """
-    k = driver.k
-    x = jax.random.normal(key, (n_probes, k))
+    x = jax.random.normal(key, (n_probes, driver.k))
     y_hat = driver.forward(x, category="probe")            # (B, n, k)
+    return score_tenant_probes(x, y_hat, tenants)
+
+
+def score_tenant_probes(x: jax.Array, y_hat: jax.Array,
+                        tenants: "list[tuple[tuple[int, int], jax.Array]]"
+                        ) -> list[jax.Array]:
+    """Score one shared probe response per tenant (the electronic half
+    of :func:`probe_tenant_distances`): ``x`` (n, k) is the probe batch
+    that produced the device response ``y_hat`` (B, n, k); each
+    tenant's d̂ compares its block slice against its own targets."""
     out = []
     for (start, stop), w_blocks in tenants:
         y_ref = jnp.einsum("bij,nj->bni", w_blocks, x)

@@ -218,20 +218,21 @@ def test_block_range_bounds_rejected(transport):
 
 @pytest.mark.parametrize("peer_version", [1, 2])
 def test_protocol_version_handshake_rejects_mismatch(peer_version):
-    """A v1 or v2 client is refused by the v3 server — no silent
-    fallback onto a surface it would misread (a v2 peer would treat a
-    ``batch`` frame as an unknown op mid-session)."""
+    """A v1 or v2 client is refused by the server (which speaks v3 and
+    v4) — no silent fallback onto a surface it would misread (a v2 peer
+    would treat a ``batch`` frame as an unknown op mid-session)."""
     import io
-    from repro.hw.protocol import encode, PROTOCOL_VERSION
+    from repro.hw.protocol import encode, PROTOCOL_VERSION, SUPPORTED_VERSIONS
     from repro.hw.server import serve
 
-    assert PROTOCOL_VERSION == 3
+    assert PROTOCOL_VERSION == 4
+    assert peer_version not in SUPPORTED_VERSIONS
     req = {"id": 1, "op": "init", "kw": encode(dict(
         v=peer_version, key=np.zeros(2, np.uint32), n_blocks=B, k=K,
         model=dict(), drift=None))}
     import json as _json
-    fin = io.StringIO(_json.dumps(req) + "\n")
-    fout = io.StringIO()
+    fin = io.BytesIO((_json.dumps(req) + "\n").encode())
+    fout = io.BytesIO()
     serve(fin, fout)
     resp = _json.loads(fout.getvalue().splitlines()[0])
     assert resp["ok"] is False

@@ -1,0 +1,566 @@
+"""Protocol v4: binary framing, negotiation/fallback, the concurrent
+socket server, the async client — plus regression tests for the
+transport-lifecycle bugfixes that shipped with v4.
+
+Conformance spine: everything v4 changes is *encoding and scheduling*,
+never values — binary frames carry the identical raw array bytes, a
+shared concurrent server gives every session its own driver, and async
+futures resolve to exactly what the synchronous call would have
+returned.  Every test here therefore ends in a bit-identity assertion
+against the in-process twin or the v3 encoding.
+
+The bugfix regressions (each failed before the fix):
+
+* ``SocketDriver`` construction failure leaked the spawned server child
+  and its stderr spool; the announce ``readline()`` could block forever.
+* One poison socket session (a non-OSError escaping ``serve``) killed
+  the daemon for every other client.
+* Frame limits counted *characters*, so multi-byte UTF-8 slipped past
+  the byte ceiling on the JSON-line path.
+* ``unsafe_twin()``'s capability cache survived ``close()``, turning a
+  dead stream into a confusing ``ProtocolError`` instead of
+  ``TwinUnavailable``.
+"""
+
+import io
+import json
+import os
+import stat
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.noise import DEFAULT_NOISE
+from repro.hw import make_driver, make_twin
+from repro.hw.drift import DriftConfig
+from repro.hw.driver import CompletedBatch, TwinUnavailable
+from repro.hw.protocol import (encode, decode, send, recv, ProtocolError,
+                               PROTOCOL_VERSION, SUPPORTED_VERSIONS)
+from repro.hw import protocol as protocol_mod
+from repro.hw import server as server_mod
+from repro.hw.socket_driver import SocketDriver
+
+K = 3
+M = N = 6
+B = (M // K) * (N // K)
+MODEL = DEFAULT_NOISE.post_ic()
+DRIFT = DriftConfig(sigma_phase=0.03, theta=0.01)
+KEY = jax.random.PRNGKey(42)
+STREAM_TRANSPORTS = ["subprocess", "socket"]
+
+
+def _mk(transport, protocol=None):
+    return make_driver(transport, KEY, B, K, MODEL, m=M, n=N, drift=DRIFT,
+                       protocol=protocol)
+
+
+# ---------------------------------------------------------------------------
+# binary framing
+# ---------------------------------------------------------------------------
+
+ALL_DTYPES = ["float32", "float64", "int8", "int16", "int32", "int64",
+              "uint8", "uint16", "uint32", "uint64", "bool",
+              "complex64", "complex128"]
+
+
+def test_binary_roundtrip_bit_exact_every_dtype():
+    """Raw-payload frames round-trip every dtype the drivers could ship
+    bit-for-bit — dtype, shape, and bytes all preserved."""
+    rng = np.random.default_rng(0)
+    tree = {}
+    for name in ALL_DTYPES:
+        dt = np.dtype(name)
+        if dt.kind == "f":
+            a = rng.standard_normal((2, 3)).astype(dt)
+        elif dt.kind == "c":
+            a = (rng.standard_normal((2, 3))
+                 + 1j * rng.standard_normal((2, 3))).astype(dt)
+        elif dt.kind == "b":
+            a = rng.integers(0, 2, (2, 3)).astype(dt)
+        else:
+            a = rng.integers(0, 100, (2, 3)).astype(dt)
+        tree[name] = a
+    tree["scalars"] = [1, 2.5, True, None, "s"]
+    tree["nested"] = dict(x=[np.arange(4, dtype=np.float32).reshape(2, 2)])
+
+    buf = io.BytesIO()
+    send(buf, dict(id=1, op="x", kw=encode(tree, binary=True)), binary=True)
+    buf.seek(0)
+    out = decode(recv(buf)["kw"])
+    for name in ALL_DTYPES:
+        assert out[name].dtype == tree[name].dtype, name
+        assert out[name].shape == tree[name].shape, name
+        assert out[name].tobytes() == tree[name].tobytes(), name
+    assert out["scalars"] == [1, 2.5, True, None, "s"]
+    np.testing.assert_array_equal(out["nested"]["x"][0],
+                                  tree["nested"]["x"][0])
+
+
+def test_binary_frame_is_raw_bytes_not_base64():
+    """The array payload appears verbatim in the frame (no base64), and
+    the JSON section references it by [offset, nbytes]."""
+    arr = np.arange(7, dtype=np.float32)
+    buf = io.BytesIO()
+    send(buf, dict(id=1, op="x", kw=encode(dict(a=arr), binary=True)),
+         binary=True)
+    frame = buf.getvalue()
+    assert frame[:4] == b"\x00RB4"
+    assert arr.tobytes() in frame                 # raw LE payload
+    json_len, payload_len = np.frombuffer(frame[4:12], "<u4")
+    head = json.loads(frame[12:12 + json_len])
+    assert head["kw"]["a"]["__nd__"] == [0, int(payload_len)]
+
+
+def test_big_endian_arrays_are_normalized_to_wire_order():
+    a = np.arange(5, dtype=">f8")
+    for binary in (False, True):
+        buf = io.BytesIO()
+        send(buf, dict(id=1, op="x", kw=encode(dict(a=a), binary=binary)),
+             binary=binary)
+        buf.seek(0)
+        out = decode(recv(buf)["kw"])["a"]
+        np.testing.assert_array_equal(out, a.astype("<f8"))
+
+
+def test_recv_auto_detects_interleaved_framings():
+    """One stream can carry both encodings (exactly what the v4 session
+    does across the init boundary): recv dispatches per frame."""
+    buf = io.BytesIO()
+    send(buf, dict(id=1, op="a", kw=encode(dict(x=np.ones(2, np.float32)))))
+    send(buf, dict(id=2, op="b",
+                   kw=encode(dict(x=np.zeros(3, np.float32), ), binary=True)),
+         binary=True)
+    send(buf, dict(id=3, op="c", kw={}))
+    buf.seek(0)
+    assert recv(buf)["id"] == 1
+    got = recv(buf)
+    assert got["id"] == 2
+    np.testing.assert_array_equal(decode(got["kw"])["x"],
+                                  np.zeros(3, np.float32))
+    assert recv(buf)["id"] == 3
+
+
+def test_binary_frame_bounds_checked():
+    """A hostile [offset, nbytes] payload reference cannot read outside
+    the payload section."""
+    arr = np.arange(4, dtype=np.float32)
+    buf = io.BytesIO()
+    send(buf, dict(id=1, op="x", kw=encode(dict(a=arr), binary=True)),
+         binary=True)
+    frame = bytearray(buf.getvalue())
+    json_len = int(np.frombuffer(frame[4:8], "<u4")[0])
+    head = json.loads(bytes(frame[12:12 + json_len]))
+    head["kw"]["a"]["__nd__"] = [8, 64]          # past the 16-byte payload
+    new_head = json.dumps(head, separators=(",", ":")).encode()
+    rebuilt = (bytes(frame[:4])
+               + np.asarray([len(new_head), 16], "<u4").tobytes()
+               + new_head + arr.tobytes())
+    with pytest.raises(ProtocolError, match="out of bounds"):
+        recv(io.BytesIO(rebuilt))
+
+
+# ---------------------------------------------------------------------------
+# negotiation + fallback
+# ---------------------------------------------------------------------------
+
+class _Announce:
+    """Capture serve_socket's ``LISTENING <port>`` line."""
+
+    def __init__(self):
+        self.port = None
+        self.ready = threading.Event()
+
+    def write(self, s):
+        if s.startswith("LISTENING"):
+            self.port = int(s.split()[1])
+            self.ready.set()
+
+    def flush(self):
+        pass
+
+
+def _inprocess_server(sessions, max_conns=None):
+    """serve_socket on an ephemeral port in a daemon thread; returns
+    (port, thread)."""
+    ann = _Announce()
+    t = threading.Thread(
+        target=server_mod.serve_socket,
+        args=("127.0.0.1", 0),
+        kwargs=dict(sessions=sessions, max_conns=max_conns, announce=ann),
+        daemon=True)
+    t.start()
+    assert ann.ready.wait(timeout=30), "server never announced its port"
+    return ann.port, t
+
+
+@pytest.mark.parametrize("transport", STREAM_TRANSPORTS)
+def test_default_session_negotiates_v4(transport):
+    driver = _mk(transport)
+    try:
+        assert driver.protocol == 4
+        assert driver._binary is True
+        y = driver.forward(jnp.ones((2, K)))
+        assert y.shape == (B, 2, K)
+    finally:
+        driver.close()
+
+
+@pytest.mark.parametrize("transport", STREAM_TRANSPORTS)
+def test_pinned_v3_session_is_bit_identical_to_v4(transport):
+    """The same ops on a pinned-v3 (JSON line) and a v4 (binary) session
+    return identical bytes — the framing is a transfer coat."""
+    x = jnp.asarray(np.random.default_rng(1).standard_normal((4, K)),
+                    jnp.float32)
+    outs = {}
+    for proto in (3, 4):
+        d = _mk(transport, protocol=proto)
+        try:
+            assert d.protocol == proto
+            outs[proto] = (np.asarray(d.forward(x)),
+                           np.asarray(d.readback_bases()[0]),
+                           d.stats.as_dict())
+        finally:
+            d.close()
+    np.testing.assert_array_equal(outs[3][0], outs[4][0])
+    np.testing.assert_array_equal(outs[3][1], outs[4][1])
+    assert outs[3][2] == outs[4][2]
+
+
+def test_v4_client_falls_back_to_v3_only_server(monkeypatch):
+    """A v3-only peer refuses the v4 init with a 'protocol mismatch'
+    error frame; the client retries the init at v3 on the SAME
+    connection and the session works (bit-identical to the twin)."""
+    monkeypatch.setattr(server_mod, "SUPPORTED_VERSIONS", (3,))
+    port, t = _inprocess_server(sessions=1)
+    x = jnp.ones((2, K))
+    twin = make_twin(KEY, B, K, MODEL, m=M, n=N, drift=DRIFT)
+    ref = np.asarray(twin.forward(x))
+    d = SocketDriver(KEY, B, K, MODEL, m=M, n=N, drift=DRIFT,
+                     address=("127.0.0.1", port))
+    try:
+        assert d.protocol == 3
+        assert d._binary is False
+        np.testing.assert_array_equal(np.asarray(d.forward(x)), ref)
+    finally:
+        d.close()
+    t.join(timeout=30)
+    assert not t.is_alive()
+
+
+def test_pinned_v4_client_errors_on_v3_only_server(monkeypatch):
+    """protocol=4 means *no* fallback: the mismatch surfaces."""
+    monkeypatch.setattr(server_mod, "SUPPORTED_VERSIONS", (3,))
+    port, t = _inprocess_server(sessions=1)
+    with pytest.raises(RuntimeError, match="protocol mismatch"):
+        SocketDriver(KEY, B, K, MODEL, m=M, n=N, drift=DRIFT,
+                     address=("127.0.0.1", port), protocol=4)
+    t.join(timeout=30)
+
+
+# ---------------------------------------------------------------------------
+# concurrent server
+# ---------------------------------------------------------------------------
+
+def _session_results(port):
+    d = SocketDriver(KEY, B, K, MODEL, m=M, n=N, drift=DRIFT,
+                     address=("127.0.0.1", port))
+    try:
+        rng = np.random.default_rng(7)
+        x = jnp.asarray(rng.standard_normal((4, K)), jnp.float32)
+        d.advance(1.0)
+        fwd = np.asarray(d.forward(x))
+        batch = d.run_batch([("forward", dict(x=x)),
+                             ("read_sigma", {}),
+                             ("stats", {})])
+        return fwd, np.asarray(batch[0]), np.asarray(batch[1]), \
+            batch[2].as_dict()
+    finally:
+        d.close()
+
+
+def test_n_threads_one_server_bit_identical_to_dedicated_sessions():
+    """N clients sharing ONE server process concurrently each get their
+    own independent session (own driver), and every result is
+    bit-identical to a dedicated single-session server's."""
+    n = 3
+    port, t = _inprocess_server(sessions=n)
+    results = [None] * n
+    errs = []
+
+    def worker(i):
+        try:
+            results[i] = _session_results(port)
+        except Exception as e:  # noqa: BLE001 - surfaced below
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(n)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(timeout=120)
+    assert not errs, errs
+    t.join(timeout=30)
+    assert not t.is_alive()
+
+    # dedicated reference server, one session
+    ref_port, ref_t = _inprocess_server(sessions=1)
+    ref = _session_results(ref_port)
+    ref_t.join(timeout=30)
+
+    for got in results:
+        assert got is not None
+        np.testing.assert_array_equal(got[0], ref[0])
+        np.testing.assert_array_equal(got[1], ref[1])
+        np.testing.assert_array_equal(got[2], ref[2])
+        assert got[3] == ref[3]
+
+
+def test_max_conns_bounds_concurrency_not_lifetime():
+    """--max-conns 1 serializes sessions but keeps serving: two
+    sequential clients both succeed against one bounded server."""
+    port, t = _inprocess_server(sessions=2, max_conns=1)
+    a = _session_results(port)
+    b = _session_results(port)
+    t.join(timeout=30)
+    np.testing.assert_array_equal(a[0], b[0])
+
+
+# ---------------------------------------------------------------------------
+# async client
+# ---------------------------------------------------------------------------
+
+def test_twin_run_batch_async_is_completed_batch():
+    """The no-round-trip driver's async handle is already resolved and
+    carries exactly what the sync call returns."""
+    twin = make_twin(KEY, B, K, MODEL, m=M, n=N, drift=DRIFT)
+    x = jnp.ones((2, K))
+    fut = twin.run_batch_async([("forward", dict(x=x))])
+    assert isinstance(fut, CompletedBatch)
+    assert fut.done() is True
+    np.testing.assert_array_equal(np.asarray(fut.result(timeout=1)[0]),
+                                  np.asarray(twin.forward(x)))
+
+
+@pytest.mark.parametrize("transport", ["subprocess"])
+def test_async_futures_complete_and_collect_out_of_order(transport):
+    """Several in-flight batches resolve correctly even when collected
+    in reverse issue order, and sync ops interleave safely once the
+    reader thread owns the stream — all bit-identical to the twin."""
+    rng = np.random.default_rng(5)
+    xs = [jnp.asarray(rng.standard_normal((3, K)), jnp.float32)
+          for _ in range(4)]
+    twin = make_twin(KEY, B, K, MODEL, m=M, n=N, drift=DRIFT)
+    refs = [np.asarray(twin.forward(x)) for x in xs]
+    ref_stats = twin.stats.as_dict()
+
+    driver = _mk(transport)
+    try:
+        futs = [driver.run_batch_async([("forward", dict(x=x))])
+                for x in xs]
+        # a sync op through the id-matched path, mid-flight
+        stats = driver.stats.as_dict()
+        assert stats == ref_stats
+        for fut, ref in zip(reversed(futs), reversed(refs)):
+            y = fut.result(timeout=60)[0]
+            np.testing.assert_array_equal(np.asarray(y), ref)
+        assert all(f.done() for f in futs)
+    finally:
+        driver.close()
+
+
+@pytest.mark.parametrize("transport", ["subprocess"])
+def test_async_flushes_pipelined_head_in_same_frame(transport):
+    """run_batch_async carries queued pipelined writes ahead of its ops
+    in the SAME frame — program order is preserved and the head's
+    results are not leaked into the future's value."""
+    twin = make_twin(KEY, B, K, MODEL, m=M, n=N, drift=DRIFT)
+    twin.advance(1.0)
+    ref = np.asarray(twin.forward(jnp.ones((2, K))))
+
+    driver = _mk(transport)
+    try:
+        frames0 = driver._rpc_count
+        driver.advance(1.0)                       # queued client-side
+        fut = driver.run_batch_async([("forward", dict(x=jnp.ones((2, K))))])
+        assert driver._rpc_count == frames0 + 1   # ONE frame, head included
+        ys = fut.result(timeout=60)
+        assert len(ys) == 1                       # head result not leaked
+        np.testing.assert_array_equal(np.asarray(ys[0]), ref)
+    finally:
+        driver.close()
+
+
+# ---------------------------------------------------------------------------
+# bugfix regressions
+# ---------------------------------------------------------------------------
+
+def _fake_python(tmp_path, body):
+    """An executable that stands in for the server interpreter."""
+    script = tmp_path / "fake-python"
+    script.write_text("#!/bin/sh\n" + body)
+    script.chmod(script.stat().st_mode | stat.S_IXUSR)
+    return str(script)
+
+
+def _spy_child_resources(monkeypatch):
+    """Record the Popen children and stderr spool files SocketDriver
+    creates, so a failed construction can be audited for leaks."""
+    import subprocess as sp
+    import tempfile
+    from repro.hw import socket_driver as sd_mod
+
+    procs, spools = [], []
+    real_popen, real_ntf = sp.Popen, tempfile.NamedTemporaryFile
+
+    def spy_popen(*a, **kw):
+        p = real_popen(*a, **kw)
+        procs.append(p)
+        return p
+
+    def spy_ntf(*a, **kw):
+        f = real_ntf(*a, **kw)
+        spools.append(f.name)
+        return f
+
+    monkeypatch.setattr(sd_mod.subprocess, "Popen", spy_popen)
+    monkeypatch.setattr(sd_mod.tempfile, "NamedTemporaryFile", spy_ntf)
+    return procs, spools
+
+
+def test_socket_ctor_announce_timeout_reaps_child_and_spool(
+        tmp_path, monkeypatch):
+    """Regression: a child that never announces used to block
+    construction forever on readline(); killing that, the half-built
+    driver used to leak the child process and the stderr spool."""
+    procs, spools = _spy_child_resources(monkeypatch)
+    fake = _fake_python(tmp_path, "sleep 30\n")
+    t0 = time.monotonic()
+    with pytest.raises(ProtocolError, match="did not announce"):
+        SocketDriver(KEY, B, K, MODEL, m=M, n=N, drift=DRIFT,
+                     python=fake, connect_timeout=0.5)
+    assert time.monotonic() - t0 < 10             # bounded, not forever
+    assert len(procs) == 1 and len(spools) == 1
+    assert procs[0].poll() is not None            # child reaped
+    assert not os.path.exists(spools[0])          # spool unlinked
+
+
+def test_socket_ctor_child_death_fails_fast_without_leaks(
+        tmp_path, monkeypatch):
+    procs, spools = _spy_child_resources(monkeypatch)
+    fake = _fake_python(tmp_path, "echo oops >&2\nexit 1\n")
+    with pytest.raises(ProtocolError, match="exited before announcing"):
+        SocketDriver(KEY, B, K, MODEL, m=M, n=N, drift=DRIFT,
+                     python=fake, connect_timeout=10.0)
+    assert procs[0].poll() is not None
+    assert not os.path.exists(spools[0])
+
+
+def test_socket_daemon_survives_poison_session(monkeypatch):
+    """Regression: a non-OSError escaping one session used to kill the
+    accept loop — one hostile/unlucky client took the daemon down for
+    everyone.  Now the session is contained, logged, counted, and the
+    next client gets a full session."""
+    calls = {"n": 0}
+    real_serve = server_mod.serve
+
+    def poisoned(fin, fout):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise MemoryError("poison session")
+        return real_serve(fin, fout)
+
+    monkeypatch.setattr(server_mod, "serve", poisoned)
+    port, t = _inprocess_server(sessions=2)
+    with pytest.raises((ProtocolError, RuntimeError, OSError)):
+        _session_results(port)                    # session 1: poisoned
+    got = _session_results(port)                  # session 2: full session
+    assert got[0].shape == (B, 4, K)
+    t.join(timeout=30)
+    assert not t.is_alive()                       # drained after 2 sessions
+    assert calls["n"] == 2
+
+
+def test_frame_limit_counts_bytes_not_characters(monkeypatch):
+    """Regression: the JSON-line limit was enforced on the *string*
+    length, so a peer's multi-byte UTF-8 slipped past the byte ceiling
+    (our own encoder escapes to ASCII, but the wire accepts any valid
+    JSON — recv must bound what it buffers in BYTES)."""
+    line = '{"id":1,"op":"x","kw":{"pad":"' + "é" * 40 + '"}}\n'
+    data = line.encode("utf-8")
+    assert len(line) < len(data)                  # multi-byte payload
+    limit = len(line) + 5                         # chars fit, bytes don't
+    assert limit < len(data)
+
+    # generous ceiling: the frame parses fine
+    assert recv(io.BytesIO(data),
+                max_bytes=len(data))["kw"]["pad"] == "é" * 40
+    # byte-exact ceiling: rejected even though the CHARACTER count fits
+    with pytest.raises(ProtocolError, match="oversized"):
+        recv(io.BytesIO(data), max_bytes=limit)
+
+    # send side: the byte count is checked BEFORE anything is written
+    monkeypatch.setattr(protocol_mod, "MAX_FRAME_BYTES", 16)
+    buf = io.BytesIO()
+    with pytest.raises(ProtocolError, match="oversized"):
+        send(buf, dict(id=1, op="x", kw={"pad": "a" * 64}))
+    assert buf.getvalue() == b""
+    buf = io.BytesIO()
+    with pytest.raises(ProtocolError, match="oversized"):
+        send(buf, dict(id=1, op="x",
+                       kw=encode(dict(a=np.zeros(64, np.float32)),
+                                 binary=True)), binary=True)
+    assert buf.getvalue() == b""
+
+
+@pytest.mark.parametrize("transport", STREAM_TRANSPORTS)
+def test_unsafe_twin_capability_cache_dies_with_the_stream(transport):
+    """Regression: the one-time unsafe/* capability probe was cached
+    past close(), so a dead stream raised ProtocolError from deep
+    inside a RemoteTwinHandle instead of TwinUnavailable up front."""
+    driver = _mk(transport)
+    try:
+        assert driver.unsafe_twin().bias_deviation() >= 0.0
+    finally:
+        driver.close()
+    assert driver._twin_verified is False
+    with pytest.raises(TwinUnavailable):
+        driver.unsafe_twin()
+
+
+# ---------------------------------------------------------------------------
+# fleet async plumbing
+# ---------------------------------------------------------------------------
+
+def test_fleet_serve_pass_async_matches_sync():
+    """serve_pass_async ≡ serve_pass: same results, same counters."""
+    from repro.runtime.fleet import RuntimeConfig, make_chip, FleetRouter
+
+    cfg = RuntimeConfig(k=K, probe_every=10)
+    rng = np.random.default_rng(11)
+    w = [jnp.asarray(rng.standard_normal((M, N)) * 0.3, jnp.float32),
+         jnp.asarray(rng.standard_normal((M, N)) * 0.3, jnp.float32)]
+    xs = [jnp.asarray(rng.standard_normal((2, N)), jnp.float32)
+          for _ in range(2)]
+    items = list(enumerate(xs))
+
+    chip_a = make_chip(jax.random.PRNGKey(3), 0, w, cfg)
+    chip_b = make_chip(jax.random.PRNGKey(3), 0, w, cfg)
+    router_a = FleetRouter([chip_a], cfg, seed=0)
+    router_b = FleetRouter([chip_b], cfg, seed=0)
+
+    ys_sync = router_a.serve_pass(chip_a, items)
+    ys_async = router_b.serve_pass_async(chip_b, items).result()
+    for a, b in zip(ys_sync, ys_async):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert chip_a.served == chip_b.served == len(items)
+    assert [t.served for t in chip_a.tenants] == \
+        [t.served for t in chip_b.tenants]
+
+
+def test_protocol_constants():
+    assert PROTOCOL_VERSION == 4
+    assert SUPPORTED_VERSIONS == (3, 4)
