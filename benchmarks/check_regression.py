@@ -124,11 +124,27 @@ SPECS = {
             # better, so a latency blow-up trips the drop gate.
             "inv_p99_latency_steps":
                 lambda d: 1.0 / d["ref_rate"]["p99_latency_steps"],
+            # chunked-prefill dividend: C=1 over C=8 TTFT p50 on the
+            # prompt-heavy workload, in virtual steps — the ≥4× gate
+            # below is the floor, this drop-gates erosion above it
+            "chunked_ttft_speedup_c8":
+                lambda d: d["prefill"]["ttft_speedup_c8"],
+            # inverted absolute TTFT at C=8 (virtual steps, seeded
+            # schedule → bit-deterministic): higher is better, so a
+            # prefill slowdown that ALSO slowed the C=1 side (keeping
+            # the ratio flat) still trips this one
+            "inv_chunked_ttft_p50":
+                lambda d: 1.0 / max(d["prefill"]["ttft"]["8"]["p50"], 1e-9),
         },
         gates=["gates.speedup_ge_2x",
                "gates.sigma0_token_identical_twin",
                "gates.sigma0_token_identical_socket",
-               "gates.drift_closed_loop_completes"],
+               "gates.drift_closed_loop_completes",
+               "gates.chunked_token_identical_digital",
+               "gates.chunked_token_identical_twin",
+               "gates.chunked_token_identical_socket",
+               "gates.chunked_ttft_ge_4x",
+               "gates.chunked_frames_reduced"],
     ),
 }
 
@@ -220,6 +236,12 @@ def _degrade(src_dir: str, dst_dir: str) -> None:
             d["tokens_per_chip_speedup"] *= 0.4
             d["ref_rate"]["p99_latency_steps"] *= 3.0
             d["gates"]["sigma0_token_identical_twin"] = False
+            # a chunked-prefill regression: ingestion degenerates back
+            # toward one token/step (TTFT inflates, ratio collapses)
+            # and the wide-frame path diverges from the legacy tokens
+            d["prefill"]["ttft"]["8"]["p50"] *= 5.0
+            d["prefill"]["ttft_speedup_c8"] *= 0.2
+            d["gates"]["chunked_token_identical_digital"] = False
         with open(os.path.join(dst_dir, fname), "w") as f:
             json.dump(d, f)
 

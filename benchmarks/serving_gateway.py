@@ -65,10 +65,11 @@ def _seq_args(params, req, *, driver="twin", sigma=0.0, recal=False):
 
 
 def _gw_args(params, reqs, *, hw=True, driver="twin", sigma=0.0,
-             recal=False, slots=SLOTS):
+             recal=False, slots=SLOTS, chunk=1, page=None):
     return argparse.Namespace(
         arch=ARCH, seed=SEED, slots=slots, requests=len(reqs), rate=1.0,
-        max_new=(4, 12), eos_id=None, **PAGE,
+        max_new=(4, 12), eos_id=None, **(page or PAGE),
+        prefill_chunk=chunk,
         fleet=FLEET if hw else 0, drift=sigma > 0, drift_sigma=sigma,
         probe_every=10, fleet_k=FLEET_K, fleet_driver=driver,
         hw_logits=hw, hw_shadow=False, deploy_zo=False,
@@ -150,6 +151,58 @@ def main(budget: str = "quick") -> None:
     print(f"socket token-identity (gateway ≡ sequential): "
           f"{socket_identical}", flush=True)
 
+    # -- chunked paged prefill: TTFT on a prompt-heavy workload --------------
+    # Prompt tokens dominate this workload, so time-to-first-token is
+    # governed by prefill throughput: C tokens/step/slot instead of 1.
+    # TTFT is measured in VIRTUAL STEPS (a pure function of the seeded
+    # schedule — bit-deterministic across hosts), so the ≥4× gate and
+    # the drop-gated speedup metric are host-invariant.
+    pre_page = dict(page_size=8, pages=64, max_pages_per_slot=8)
+    pre_reqs = poisson_workload(SEED + 3, 6 if budget == "quick" else 8,
+                                2.0, cfg.vocab, prompt_len=(24, 44),
+                                max_new=(4, 6))
+    pre_ttft, pre_busy, pre_outs = {}, {}, {}
+    for c in (1, 8, 32):
+        rep = gw_run(_gw_args(params, pre_reqs, hw=False, chunk=c,
+                              page=pre_page))
+        pre_ttft[str(c)] = rep["ttft_steps"]
+        pre_busy[str(c)] = rep["busy_steps"]
+        pre_outs[c] = [r["tokens"] for r in rep["requests"]]
+        print(f"prefill chunk {c:2d}: ttft p50 "
+              f"{rep['ttft_steps']['p50']:5.1f} p99 "
+              f"{rep['ttft_steps']['p99']:5.1f} steps | "
+              f"{rep['busy_steps']} busy steps", flush=True)
+    chunk_digital_ok = pre_outs[8] == pre_outs[1] == pre_outs[32]
+    ttft_speedup = pre_ttft["1"]["p50"] / max(pre_ttft["8"]["p50"], 1e-9)
+    print(f"chunked ttft speedup (C=8 vs C=1): {ttft_speedup:.2f}× | "
+          f"digital token-identity: {chunk_digital_ok}", flush=True)
+
+    # twin transport: the wide (decode + Σ chunk) frames must stay
+    # invisible to tokens while cutting the frame count
+    tw_reqs = pre_reqs[:4]
+    tw1 = gw_run(_gw_args(params, tw_reqs, chunk=1, page=pre_page))
+    tw8 = gw_run(_gw_args(params, tw_reqs, chunk=8, page=pre_page))
+    chunk_twin_ok = ([r["tokens"] for r in tw8["requests"]]
+                     == [r["tokens"] for r in tw1["requests"]])
+    hw1, hw8 = tw1["fleet"]["hw"], tw8["fleet"]["hw"]
+    frames_reduced = hw8["frames"] < hw1["frames"]
+    print(f"twin chunked: token-identity {chunk_twin_ok} | frames "
+          f"{hw1['frames']}→{hw8['frames']} (cols/frame "
+          f"{hw1['cols_per_frame']:.1f}→{hw8['cols_per_frame']:.1f})",
+          flush=True)
+
+    # socket transport: same identity through the real wire protocol
+    sk_reqs = poisson_workload(SEED + 4, 3, 2.0, cfg.vocab,
+                               prompt_len=(12, 20), max_new=(3, 4))
+    sk_page = dict(page_size=8, pages=32, max_pages_per_slot=3)
+    sk1 = gw_run(_gw_args(params, sk_reqs, driver="socket", chunk=1,
+                          page=sk_page))
+    sk8 = gw_run(_gw_args(params, sk_reqs, driver="socket", chunk=8,
+                          page=sk_page))
+    chunk_socket_ok = ([r["tokens"] for r in sk8["requests"]]
+                       == [r["tokens"] for r in sk1["requests"]])
+    print(f"socket chunked token-identity: {chunk_socket_ok}", flush=True)
+
     # -- latency vs offered load (digital gateway, virtual steps) ------------
     sweep = []
     for rate in sweep_rates:
@@ -181,7 +234,12 @@ def main(budget: str = "quick") -> None:
         speedup_ge_2x=bool(speedup >= 2.0),
         sigma0_token_identical_twin=bool(twin_identical),
         sigma0_token_identical_socket=bool(socket_identical),
-        drift_closed_loop_completes=bool(drift_complete))
+        drift_closed_loop_completes=bool(drift_complete),
+        chunked_token_identical_digital=bool(chunk_digital_ok),
+        chunked_token_identical_twin=bool(chunk_twin_ok),
+        chunked_token_identical_socket=bool(chunk_socket_ok),
+        chunked_ttft_ge_4x=bool(ttft_speedup >= 4.0),
+        chunked_frames_reduced=bool(frames_reduced))
 
     emit("serving_gateway",
          ["rate", "steps", "occupancy", "p50_latency_steps",
@@ -208,6 +266,14 @@ def main(budget: str = "quick") -> None:
         drift=dict(sigma=0.008, tokens_out=drift_rep["tokens_out"],
                    alarms=sum(c["alarms"] for c in drift_chips),
                    recals=sum(c["recals"] for c in drift_chips)),
+        prefill=dict(
+            workload=dict(n=len(pre_reqs), prompt_len=[24, 44],
+                          max_new=[4, 6], page=pre_page),
+            ttft=pre_ttft, busy_steps=pre_busy,
+            ttft_speedup_c8=ttft_speedup,
+            twin=dict(frames_c1=hw1["frames"], frames_c8=hw8["frames"],
+                      cols_per_frame_c1=hw1["cols_per_frame"],
+                      cols_per_frame_c8=hw8["cols_per_frame"])),
         gates=gates)
     os.makedirs(ART, exist_ok=True)
     path = os.path.join(ART, "BENCH_serving_gateway.json")
@@ -215,6 +281,7 @@ def main(budget: str = "quick") -> None:
         json.dump(summary, f, indent=2)
     print(f"--- serving_gateway summary ({path}) ---")
     print(json.dumps(dict(gates=gates, speedup=speedup,
+                          ttft_speedup_c8=ttft_speedup,
                           p99_latency_steps=ref["p99_latency_steps"]),
                      indent=2))
     for name, ok in gates.items():

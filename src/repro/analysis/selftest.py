@@ -200,6 +200,51 @@ CASES = [
                "        out_shape=s)(a, b)\n"},
     ),
     Case(
+        # RPL401 on the chunked-prefill call shape: scalar-prefetch grid
+        # spec + VMEM scratch operands.  The kernel's positional arity
+        # must count prefetch refs + inputs + outputs + scratch refs;
+        # the bad twin drops the scratch ref (the exact miswiring a
+        # refactor of kernels/prefill_attn.py would introduce).
+        "RPL401",
+        bad={"repro/kernels/k.py":
+             "import jax\n"
+             "import jax.experimental.pallas as pl\n"
+             "from jax.experimental.pallas import tpu as pltpu\n"
+             "def _kern(lens_ref, q_ref, o_ref):\n"
+             "    o_ref[...] = q_ref[...]\n"
+             "def run(lens, q, s):\n"
+             "    return pl.pallas_call(\n"
+             "        _kern,\n"
+             "        grid_spec=pltpu.PrefetchScalarGridSpec(\n"
+             "            num_scalar_prefetch=1, grid=(2, 4),\n"
+             "            in_specs=[pl.BlockSpec((1, 8),\n"
+             "                                   lambda b, j, t: (b, 0))],\n"
+             "            out_specs=pl.BlockSpec((1, 8),\n"
+             "                                   lambda b, j, t: (b, 0)),\n"
+             "            scratch_shapes=[pltpu.VMEM((8,),\n"
+             "                                       jax.numpy.float32)]),\n"
+             "        out_shape=s)(lens, q)\n"},
+        clean={"repro/kernels/k.py":
+               "import jax\n"
+               "import jax.experimental.pallas as pl\n"
+               "from jax.experimental.pallas import tpu as pltpu\n"
+               "def _kern(lens_ref, q_ref, o_ref, acc_ref):\n"
+               "    acc_ref[...] = q_ref[...]\n"
+               "    o_ref[...] = acc_ref[...]\n"
+               "def run(lens, q, s):\n"
+               "    return pl.pallas_call(\n"
+               "        _kern,\n"
+               "        grid_spec=pltpu.PrefetchScalarGridSpec(\n"
+               "            num_scalar_prefetch=1, grid=(2, 4),\n"
+               "            in_specs=[pl.BlockSpec((1, 8),\n"
+               "                                   lambda b, j, t: (b, 0))],\n"
+               "            out_specs=pl.BlockSpec((1, 8),\n"
+               "                                   lambda b, j, t: (b, 0)),\n"
+               "            scratch_shapes=[pltpu.VMEM((8,),\n"
+               "                                       jax.numpy.float32)]),\n"
+               "        out_shape=s)(lens, q)\n"},
+    ),
+    Case(
         "RPL402",
         bad={"repro/kernels/k.py":
              "import jax.experimental.pallas as pl\n"

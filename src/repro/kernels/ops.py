@@ -18,10 +18,13 @@ from .mesh_apply import mesh_apply_butterfly as _mesh_apply_butterfly
 from .feedback_matmul import feedback_matmul as _feedback_matmul
 from .sigma_grad import sigma_grad as _sigma_grad
 from .paged_kv import (paged_gather as _paged_gather,
-                       paged_scatter as _paged_scatter)
+                       paged_scatter as _paged_scatter,
+                       paged_scatter_rows as _paged_scatter_rows)
+from .prefill_attn import prefill_attention as _prefill_attention
 
 __all__ = ["default_interpret", "ptc_block_matmul", "mesh_apply",
-           "feedback_matmul", "sigma_grad", "paged_gather", "paged_scatter"]
+           "feedback_matmul", "sigma_grad", "paged_gather", "paged_scatter",
+           "paged_scatter_rows", "prefill_attention"]
 
 
 def default_interpret() -> bool:
@@ -98,3 +101,19 @@ def paged_scatter(idx, new, pages, *, interpret: bool | None = None):
     if interpret is None:
         interpret = default_interpret()
     return _paged_scatter(idx, new, pages, interpret=interpret)
+
+
+def paged_scatter_rows(idx, rows, pages, *, interpret: bool | None = None):
+    """Multi-token paged-KV insertion (chunked prefill) in one call."""
+    if interpret is None:
+        interpret = default_interpret()
+    return _paged_scatter_rows(idx, rows, pages, interpret=interpret)
+
+
+def prefill_attention(lens, q, k, v, *, blk=None, window=None, cap=None,
+                      interpret: bool | None = None):
+    """Chunked paged-prefill attention (serving gateway) via Pallas."""
+    if interpret is None:
+        interpret = default_interpret()
+    return _prefill_attention(lens, q, k, v, blk=blk, window=window,
+                              cap=cap, interpret=interpret)

@@ -32,7 +32,7 @@ import jax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["paged_gather", "paged_scatter"]
+__all__ = ["paged_gather", "paged_scatter", "paged_scatter_rows"]
 
 
 def _gather_kernel(tbl_ref, pages_ref, out_ref):
@@ -99,3 +99,22 @@ def paged_scatter(idx: jax.Array, new: jax.Array, pages: jax.Array, *,
         input_output_aliases={2: 0},
         interpret=interpret,
     )(idx, new, pages)
+
+
+def paged_scatter_rows(idx: jax.Array, rows: jax.Array, pages: jax.Array, *,
+                       interpret: bool = True) -> jax.Array:
+    """Multi-token scatter: R independent row writes in ONE aliased call.
+
+    The chunked-prefill path writes C new KV entries per slot per step;
+    the host splits each chunk against the slot's page table wherever it
+    crosses a page boundary (``PagedKVPool.write_span``) and hands the
+    flattened (R, 2) ``(page_id, offset)`` list here.  The scatter
+    kernel is already row-count generic — the grid runs one program per
+    row, sequentially, so duplicate targets (e.g. every invalid row
+    parked on the scratch page) resolve deterministically last-wins —
+    and the pool is updated in place through the same
+    ``input_output_aliases`` wiring as the one-row path.
+
+    idx: (R, 2) int32; rows: (R, d); pages: (n_pages, page_size, d).
+    """
+    return paged_scatter(idx, rows, pages, interpret=interpret)

@@ -16,12 +16,14 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from ..kernels.ops import prefill_attention
 from .layers import (PTCLinearCfg, init_ptc_linear, apply_ptc_linear,
                      init_rmsnorm, rmsnorm, rotary_cache, apply_rotary,
                      softcap)
 
 __all__ = ["AttnCfg", "init_attention", "attention", "decode_attention",
-           "decode_attention_paged", "init_kv_cache"]
+           "decode_attention_paged", "decode_attention_paged_chunked",
+           "init_kv_cache"]
 
 Params = dict[str, Any]
 NEG_INF = -2.0 ** 30
@@ -249,5 +251,49 @@ def decode_attention_paged(p: Params, cfg: AttnCfg, lin: PTCLinearCfg, x,
     w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
     o = jnp.einsum("bhqk,bkhd->bqhd", w, vr)
     o = o.reshape(b, 1, cfg.n_heads * cfg.head_dim)
+    out = apply_ptc_linear(p["wo"], o, lin, d_out=cfg.d_model, name="wo")
+    return out, k_new, v_new
+
+
+def decode_attention_paged_chunked(p: Params, cfg: AttnCfg,
+                                   lin: PTCLinearCfg, x, k_view, v_view,
+                                   lens, kv_block: int | None = None):
+    """C-token chunked prefill against page-assembled per-slot views.
+
+    x: (B, C, d) — each slot's next C tokens (padding columns past the
+    slot's ``n_valid`` are arbitrary: the causal mask plus the caller's
+    length bookkeeping keep them out of every surviving value); lens:
+    (B,) int32 cache lengths, so chunk column c sits at absolute
+    position ``lens[b] + c``.  Attention runs through the Pallas
+    online-softmax kernel (``kernels.prefill_attention``) over the view
+    with the chunk's own K/V rows spliced in, ``kv_block`` keys at a
+    time.
+
+    The splice deliberately avoids ``dynamic_update_slice`` — its start
+    index CLAMPS, so a slot near the end of its reservation would slide
+    the chunk backwards over valid history.  Instead each view row
+    selects by absolute position: rows ``lens[b]+c`` take chunk column
+    c, all others keep the pool value.
+
+    Returns ``(out, k_new, v_new)`` with out (B, C, d) and k_new/v_new
+    (B, C, Hkv, Dh) for the caller's multi-row page scatter.
+    """
+    b, c = x.shape[0], x.shape[1]
+    lens = lens.astype(jnp.int32)
+    positions = lens[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+    q, k_new, v_new = _project_qkv(p, cfg, lin, x, positions)
+    s = k_view.shape[1]
+    rel = jnp.arange(s, dtype=jnp.int32)[None, :] - lens[:, None]  # (B, S)
+    in_chunk = (rel >= 0) & (rel < c)
+    sel = jnp.clip(rel, 0, c - 1)[:, :, None, None]
+
+    def splice(view, new):
+        g = jnp.take_along_axis(new.astype(view.dtype), sel, axis=1)
+        return jnp.where(in_chunk[:, :, None, None], g, view)
+
+    o = prefill_attention(lens, q, splice(k_view, k_new),
+                          splice(v_view, v_new), blk=kv_block,
+                          window=cfg.window, cap=cfg.attn_softcap)
+    o = o.reshape(b, c, cfg.n_heads * cfg.head_dim)
     out = apply_ptc_linear(p["wo"], o, lin, d_out=cfg.d_model, name="wo")
     return out, k_new, v_new

@@ -29,13 +29,15 @@ from .layers import (PTCLinearCfg,                      init_rmsnorm, rmsnorm, i
                      trainable_mask, partition, combine, maybe_constraint,
                      ptc_scope)
 from .attention import (AttnCfg, init_attention, attention, decode_attention,
-                        decode_attention_paged, init_kv_cache)
+                        decode_attention_paged,
+                        decode_attention_paged_chunked, init_kv_cache)
 from .ffn import FFNCfg, MoECfg, init_mlp, mlp, init_moe, moe
 from .ssm import SSMCfg, init_mamba, mamba, mamba_decode, init_ssm_state
 
 __all__ = ["ArchConfig", "SubLayerPlan", "init_model", "forward",
            "build_train_step", "build_serve_step", "build_gateway_step",
-           "init_decode_cache", "model_trainable_mask", "inject_masks"]
+           "build_gateway_prefill_step", "init_decode_cache",
+           "model_trainable_mask", "inject_masks"]
 
 Params = dict[str, Any]
 
@@ -637,3 +639,96 @@ def build_gateway_step(cfg: ArchConfig):
         return softcap(logits, cfg.final_softcap)[:, 0], new_kv
 
     return gateway_step
+
+
+def build_gateway_prefill_step(cfg: ArchConfig, kv_block: int | None = None):
+    """Returns prefill_step(params, views, batch) → (logits, new_kv):
+    the chunked-prefill gateway step — every slot advances up to C
+    tokens per call instead of one.
+
+    ``batch``: {"token": (B, C) int32, "lens": (B,) int32,
+    "n_valid": (B,) int32} — slot b's next ``n_valid[b]`` tokens sit in
+    columns 0..n_valid-1 at absolute positions ``lens[b] + c`` (decode
+    slots ride along with n_valid == 1; padding columns are arbitrary
+    and masked).  ``views`` is :func:`build_gateway_step`'s tree; the
+    returned ``new_kv`` holds (n_periods, B, C, Hkv, Dh) rows per
+    attention position, of which the engine scatters the first
+    ``n_valid[b]`` per slot.  Logits are taken at column
+    ``n_valid[b]-1`` — the prediction after the slot's last real token
+    — so the return shape matches the one-token step: (B, vocab).
+
+    PTC scope names are IDENTICAL to :func:`build_gateway_step`
+    (``p{period}.s{sub}.attn.wq`` …): a hardware deployment recorded
+    off the solo serve path routes the wide (B·C-column) prefill frames
+    onto the same tenants untouched.  ``kv_block`` sets the Pallas
+    kernel's KV block size (None = whole view per block).
+
+    Attention-only: ssm/hybrid recurrences are inherently sequential in
+    tokens, and vlm/encdec/MoE are not paged at all — those archs keep
+    the one-token path."""
+    plan, n_periods = period_plan(cfg)
+    if cfg.family in ("vlm", "encdec"):
+        raise ValueError(
+            f"gateway decode does not support {cfg.family} archs "
+            f"(per-request cross-attention streams are not paged yet)")
+    if cfg.n_experts > 0:
+        raise ValueError("gateway decode does not support MoE archs yet")
+    if any(sub.kind != "attn" for sub in plan):
+        raise ValueError(
+            "chunked prefill supports attention-only archs; ssm/hybrid "
+            "token recurrences are sequential — use prefill_chunk=1")
+
+    def prefill_step(params, views, batch):
+        tok = batch["token"]
+        lens = batch["lens"]
+        n_valid = batch["n_valid"].astype(jnp.int32)
+        x = embed(params["embed"], tok)
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+        def body(x, per):
+            layer_params, layer_views = per
+            new = {}
+            for i, sub in enumerate(plan):
+                p = layer_params[f"pos{i}"]
+                c = layer_views[f"pos{i}"]
+                h = _apply_norm(cfg, p["ln1"], x)
+                with ptc_scope(f"s{i}.attn"):
+                    h, k_new, v_new = decode_attention_paged_chunked(
+                        p["attn"], cfg.attn_cfg(sub.window), cfg.ptc,
+                        h, c["k"], c["v"], lens, kv_block=kv_block)
+                new[f"pos{i}"] = {"k": k_new, "v": v_new}
+                if cfg.post_norm:
+                    h = _apply_norm(cfg, p["pn1"], h)
+                x = x + h
+                if sub.ffn != "none":
+                    h = _apply_norm(cfg, p["ln2"], x)
+                    with ptc_scope(f"s{i}.mlp"):
+                        h = mlp(p["mlp"], cfg.ffn_cfg(), cfg.ptc, h)
+                    if cfg.post_norm:
+                        h = _apply_norm(cfg, p["pn2"], h)
+                    x = x + h
+            return x, new
+
+        layer_stack = {f"pos{i}": params[f"pos{i}"] for i in range(len(plan))}
+        if cfg.unroll:
+            outs = []
+            for pi in range(n_periods):
+                lp = jax.tree.map(lambda a: a[pi], layer_stack)
+                lv = jax.tree.map(lambda a: a[pi], views)
+                with ptc_scope(f"p{pi}"):
+                    x, nk = body(x, (lp, lv))
+                outs.append(nk)
+            new_kv = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        else:
+            x, new_kv = jax.lax.scan(body, x, (layer_stack, views))
+        x = _apply_norm(cfg, params["final_norm"], x)
+        if cfg.tie_embed:
+            logits = x @ params["embed"]["e"].T
+        else:
+            logits = x @ params["unembed"]["w"].T
+        logits = softcap(logits, cfg.final_softcap)      # (B, C, V)
+        last = jnp.take_along_axis(logits, (n_valid - 1)[:, None, None],
+                                   axis=1)
+        return last[:, 0], new_kv
+
+    return prefill_step

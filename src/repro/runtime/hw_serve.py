@@ -180,9 +180,11 @@ class HwServePlane:
             for spec, t, (u, v) in zip(self.layers, chips[0].tenants, bases)]
         # per-step state
         self._chip = None
+        self._valid: Optional[np.ndarray] = None
         self._group_cache: dict[tuple[str, str], tuple[np.ndarray, jax.Array]] = {}
         self.steps = 0
         self.frames = 0            # driver round-trips spent on layer math
+        self.frame_cols = 0        # Σ activation columns shipped in frames
         self.hw_calls = 0          # layer matmuls served by a chip
         self.shadow_calls = 0      # layer matmuls served by the shadow
         self.dropped_passes = 0    # steps with no routable chip
@@ -202,13 +204,22 @@ class HwServePlane:
     # -- decode-loop surface -------------------------------------------------
 
     @contextlib.contextmanager
-    def step(self, i: int):
+    def step(self, i: int, valid: Optional[np.ndarray] = None):
         """One decode step: route the whole pass to one chip, serve it,
         then let virtual time pass (drift advances, probes/repairs run
         out-of-band).  With no routable chip the step's layers fall
-        back to the shadow transfer and the pass counts as dropped."""
+        back to the shadow transfer and the pass counts as dropped.
+
+        ``valid`` (chunked prefill): a (B, C) bool mask of real
+        activation columns in this step's (B, C, d) wide frames.  The
+        hook ships only the valid columns to the chip — decode_batch +
+        Σ chunk_lens rows per frame instead of B·C — and scatters the
+        results back, zero-filling the padding columns (which per-column
+        sublayers and the position-masked attention never read)."""
         self._group_cache.clear()
         self._chip = None
+        self._valid = (np.asarray(valid, bool) if valid is not None
+                       else None)
         if self.mode == "route":
             self._chip = self.router.route_pass()
             if self._chip is None:
@@ -218,6 +229,7 @@ class HwServePlane:
         finally:
             self._group_cache.clear()
             self._chip = None
+            self._valid = None
             self.router.tick()
             self.steps += 1
 
@@ -246,14 +258,25 @@ class HwServePlane:
                 (spec.group, s.name) in self._group_cache
                 for s in self._groups[spec.group]):
             members = self._groups[spec.group]
-        ys = self.router.serve_pass(self._chip,
-                                    [(s.index, x) for s in members])
-        self.frames += 1
-        self.hw_calls += len(members)
         x_np = np.asarray(x)
+        xs, mask = x, None
+        if (self._valid is not None and x_np.ndim == 3
+                and x_np.shape[:2] == self._valid.shape):
+            # wide prefill frame: ship only the real activation columns
+            mask = self._valid.reshape(-1)
+            xs = jnp.asarray(x_np.reshape(-1, x_np.shape[-1])[mask])
+        ys = self.router.serve_pass(self._chip,
+                                    [(s.index, xs) for s in members])
+        self.frames += 1
+        self.frame_cols += int(np.prod(np.asarray(xs.shape[:-1])))
+        self.hw_calls += len(members)
         out = None
         for s, y in zip(members, ys):
             y = jnp.asarray(y).astype(x.dtype)
+            if mask is not None:
+                full = jnp.zeros((mask.size, y.shape[-1]), y.dtype)
+                full = full.at[jnp.asarray(np.flatnonzero(mask))].set(y)
+                y = full.reshape(x_np.shape[0], x_np.shape[1], y.shape[-1])
             if s.name == name:
                 out = y
             else:
@@ -270,6 +293,8 @@ class HwServePlane:
                          group=s.group) for s in self.layers],
             steps=self.steps, frames=self.frames,
             frames_per_step=self.frames / max(1, self.steps),
+            frame_cols=self.frame_cols,
+            cols_per_frame=self.frame_cols / max(1, self.frames),
             hw_calls=self.hw_calls, shadow_calls=self.shadow_calls,
             dropped_passes=self.dropped_passes)
         return rep

@@ -27,8 +27,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..kernels.ops import paged_gather, paged_scatter
-from ..models.lm import (ArchConfig, build_gateway_step, build_serve_step,
+from ..kernels.ops import paged_gather, paged_scatter, paged_scatter_rows
+from ..models.lm import (ArchConfig, build_gateway_prefill_step,
+                         build_gateway_step, build_serve_step,
                          init_decode_cache, period_plan)
 from ..models.ssm import init_ssm_state
 from .kv_pages import PageConfig, PagedKVPool
@@ -44,6 +45,17 @@ class GatewayConfig:
     slots: int = 4               # concurrent decode streams
     pages: PageConfig = PageConfig()
     max_steps: int = 100_000     # hard stop for the run loop
+    # chunked prefill: each prefilling slot ingests up to prefill_chunk
+    # prompt tokens per virtual step through the (B, C)-wide prefill
+    # step while decode slots ride along producing one token each.
+    # 1 = the original one-token-per-step path, bit-for-bit.
+    prefill_chunk: int = 1
+    # test/debug knob: cap tokens *advanced* per step below the padded
+    # width C.  stride s at width C is bitwise-identical in KV and
+    # tokens to stride C at width C (row-position invariance at fixed
+    # shape) — the property tests' comparison lever.  None = C.
+    prefill_stride: int | None = None
+    kv_block: int | None = None  # prefill kernel KV block (None = whole view)
 
 
 def build_gateway_hw_plane(key, cfg: ArchConfig, params, runtime_cfg,
@@ -80,7 +92,14 @@ class ServingGateway:
         self.hw = hw_plane
         self.plan, self.n_periods = period_plan(cfg)
         self.pool = PagedKVPool(gcfg.pages, gcfg.slots)
-        self._step_fn = build_gateway_step(cfg)
+        self.chunk = max(1, int(gcfg.prefill_chunk))
+        self.stride = (self.chunk if gcfg.prefill_stride is None
+                       else max(1, min(int(gcfg.prefill_stride), self.chunk)))
+        if self.chunk > 1:
+            self._step_fn = build_gateway_prefill_step(
+                cfg, kv_block=gcfg.kv_block)
+        else:
+            self._step_fn = build_gateway_step(cfg)
         if hw_plane is None:
             self._step_fn = jax.jit(self._step_fn)
 
@@ -169,6 +188,35 @@ class ServingGateway:
         for name in self._ssm:
             self._ssm[name] = new_kv[name]
 
+    def _scatter_chunk(self, new_kv: dict, act: np.ndarray,
+                       take: np.ndarray) -> None:
+        """Persist each active slot's first ``take[slot]`` new KV rows
+        at its consecutive write positions — chunks crossing page
+        boundaries are split host-side by ``PagedKVPool.write_span`` —
+        through ONE aliased multi-row scatter per pool tensor.  Padding
+        columns and idle slots land on the scratch page (the scatter
+        grid is sequential, so the duplicate scratch writes resolve
+        deterministically)."""
+        b, c = self.gcfg.slots, self.chunk
+        idx = np.zeros((b, c, 2), np.int32)
+        idx[:, :, 0] = self._scratch
+        for slot in np.flatnonzero(act):
+            n = int(take[slot])
+            if n:
+                idx[slot, :n] = self.pool.write_span(slot, n)
+        full_idx = np.concatenate(
+            [idx.reshape(b * c, 2)
+             + np.asarray([[p * self._stripe, 0]], np.int32)
+             for p in range(self.n_periods)], axis=0)
+        full_idx = jnp.asarray(full_idx)
+        for name, pools in self._pools.items():
+            hk, hd = self._kv_dims[name]
+            rows = new_kv[name]     # {"k","v"}: (P, B, C, Hkv, Dh)
+            for kk in ("k", "v"):
+                flat = rows[kk].reshape(self.n_periods * b * c, hk * hd)
+                pools[kk] = paged_scatter_rows(
+                    full_idx, flat.astype(pools[kk].dtype), pools[kk])
+
     def _reset_slot(self, slot: int) -> None:
         """Zero an admitted slot's SSM state (pages need no reset: the
         slot writes before it reads, and attention masks by length)."""
@@ -180,14 +228,30 @@ class ServingGateway:
 
     def run(self, requests: Sequence[Request]) -> dict:
         """Serve ``requests`` (arrival steps respected — the open-loop
-        process) to completion; returns the report dict."""
+        process) to completion; returns the report dict.
+
+        Token staging is vectorized: per-slot prompt buffers, lengths
+        and cursors live in NumPy arrays refreshed at admission /
+        emission, so each step's (B, C) token block is pure fancy
+        indexing — no per-slot scalar writes on the hot path.  With
+        ``prefill_chunk`` C > 1 a prefilling slot ingests up to
+        min(prefill_stride, remaining) prompt tokens per step while
+        decode slots produce one token each (n_valid == 1), all through
+        one (B, C)-wide forward."""
         sched = Scheduler(self.pool)
         todo = sorted(requests, key=lambda r: (r.arrival, r.rid))
         next_arrival = 0
         from ..models.layers import ptc_execution
         hook_ctx = (ptc_execution(self.hw.hook) if self.hw is not None
                     else contextlib.nullcontext())
-        slot_pos = [0] * self.gcfg.slots     # decode position per slot
+        b, chunk, stride = self.gcfg.slots, self.chunk, self.stride
+        buf_len = self.gcfg.pages.max_tokens_per_slot
+        prompt_buf = np.zeros((b, buf_len), np.int32)
+        plen = np.zeros((b,), np.int32)      # prompt length per slot
+        slot_pos = np.zeros((b,), np.int32)  # decode position per slot
+        last_tok = np.zeros((b,), np.int32)  # last emitted token per slot
+        arange_b = np.arange(b)
+        arange_c = np.arange(chunk)
         t0 = time.time()
         with hook_ctx:
             while self.step_count < self.gcfg.max_steps:
@@ -198,6 +262,8 @@ class ServingGateway:
                     next_arrival += 1
                 for slot, req in sched.admit(step):
                     slot_pos[slot] = 0
+                    plen[slot] = req.prompt_len
+                    prompt_buf[slot, :req.prompt_len] = req.prompt
                     self._reset_slot(slot)
                 if sched.idle:
                     if next_arrival >= len(todo):
@@ -209,33 +275,47 @@ class ServingGateway:
                     self.step_count += 1
                     continue
 
-                active = [i for i, r in enumerate(sched.running)
-                          if r is not None]
-                tok = np.zeros((self.gcfg.slots, 1), np.int32)
-                for slot in active:
-                    req = sched.running[slot]
-                    pos = slot_pos[slot]
-                    if pos < req.prompt_len:
-                        tok[slot, 0] = req.prompt[pos]       # prefill stream
-                    else:
-                        tok[slot, 0] = req.out_tokens[-1]    # decode
+                act = np.asarray([r is not None for r in sched.running])
+                pre = act & (slot_pos < plen)
+                dec = act & ~pre
+                # tokens each slot ingests this step (idle slots: none)
+                take = np.where(pre, np.minimum(stride, plen - slot_pos),
+                                act.astype(np.int32))
+                cols = slot_pos[:, None] + arange_c[None, :]     # (B, C)
+                valid = arange_c[None, :] < take[:, None]
+                tok = np.where(
+                    pre[:, None] & valid,
+                    prompt_buf[arange_b[:, None],
+                               np.minimum(cols, buf_len - 1)],
+                    0).astype(np.int32)
+                tok[dec, 0] = last_tok[dec]
                 batch = {"token": jnp.asarray(tok),
                          "lens": jnp.asarray(self.pool.lens)}
+                if chunk > 1:
+                    batch["n_valid"] = jnp.asarray(
+                        np.maximum(take, 1).astype(np.int32))
                 views = self._gather_views()
-                step_ctx = (self.hw.step(step) if self.hw is not None
+                step_ctx = (self.hw.step(step,
+                                         valid=valid if chunk > 1 else None)
+                            if self.hw is not None
                             else contextlib.nullcontext())
                 with step_ctx:
                     logits, new_kv = self._step_fn(self.params, views, batch)
-                self._scatter_new(new_kv, active)
+                if chunk > 1:
+                    self._scatter_chunk(new_kv, act, take)
+                else:
+                    self._scatter_new(new_kv, list(np.flatnonzero(act)))
                 preds = np.asarray(jnp.argmax(logits, axis=-1))
-                for slot in active:
+                for slot in np.flatnonzero(act):
                     req = sched.running[slot]
-                    self.pool.advance(slot)
-                    pos = slot_pos[slot] = slot_pos[slot] + 1
-                    if pos < req.prompt_len:
+                    n = int(take[slot])
+                    self.pool.advance(slot, n)
+                    pos = slot_pos[slot] = slot_pos[slot] + n
+                    if pos < plen[slot]:
                         continue                             # still prefilling
                     nxt = int(preds[slot])
                     req.out_tokens.append(nxt)
+                    last_tok[slot] = nxt
                     self.tokens_out += 1
                     if req.first_token_step < 0:
                         req.first_token_step = step
@@ -244,7 +324,7 @@ class ServingGateway:
                     elif len(req.out_tokens) >= req.max_new:
                         sched.finish(slot, step, FINISH_MAX_NEW)
                 self.busy_steps += 1
-                self.slot_steps += len(active)
+                self.slot_steps += int(act.sum())
                 self.step_count += 1
         wall = time.time() - t0
         if not sched.idle:
@@ -261,10 +341,12 @@ class ServingGateway:
         lats = np.asarray([r.latency() for r in reqs], np.float64)
         waits = np.asarray([r.admitted_step - r.arrival for r in reqs],
                            np.float64)
+        ttfts = np.asarray([r.ttft() for r in reqs], np.float64)
         rep = dict(
             requests=[dict(rid=r.rid, prompt_len=r.prompt_len,
                            max_new=r.max_new, arrival=r.arrival,
                            admitted=r.admitted_step,
+                           first_token=r.first_token_step,
                            finished=r.finished_step,
                            finish_reason=r.finish_reason,
                            n_out=len(r.out_tokens),
@@ -279,6 +361,10 @@ class ServingGateway:
                 p50=float(np.percentile(lats, 50)) if len(lats) else 0.0,
                 p99=float(np.percentile(lats, 99)) if len(lats) else 0.0,
                 mean=float(lats.mean()) if len(lats) else 0.0),
+            ttft_steps=dict(
+                p50=float(np.percentile(ttfts, 50)) if len(ttfts) else 0.0,
+                p99=float(np.percentile(ttfts, 99)) if len(ttfts) else 0.0,
+                mean=float(ttfts.mean()) if len(ttfts) else 0.0),
             admission_wait_steps=dict(
                 p50=float(np.percentile(waits, 50)) if len(waits) else 0.0,
                 p99=float(np.percentile(waits, 99)) if len(waits) else 0.0),

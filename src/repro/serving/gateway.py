@@ -45,8 +45,17 @@ def add_gateway_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--max-new", "--gw-max-new", dest="max_new", type=int,
                     nargs=2, default=(4, 12), metavar=("LO", "HI"),
                     help="uniform decode-budget range per request")
+    # --gw- prefix only: launch.serve owns a scalar --prompt-len already
+    ap.add_argument("--gw-prompt-len", dest="prompt_len_range", type=int,
+                    nargs=2, default=(4, 12), metavar=("LO", "HI"),
+                    help="uniform prompt-length range per request")
     ap.add_argument("--eos-id", "--gw-eos-id", dest="eos_id", type=int,
                     default=None, help="stop token (early termination)")
+    ap.add_argument("--prefill-chunk", "--gw-prefill-chunk",
+                    dest="prefill_chunk", type=int, default=1,
+                    help="prompt tokens ingested per prefilling slot per "
+                         "step (1 = the one-token legacy path; >1 needs "
+                         "an attention-only arch)")
 
 
 def run(args) -> dict:
@@ -91,7 +100,10 @@ def run(args) -> dict:
     gcfg = GatewayConfig(
         slots=args.slots,
         pages=PageConfig(page_size=args.page_size, n_pages=args.pages,
-                         max_pages_per_slot=args.max_pages_per_slot))
+                         max_pages_per_slot=args.max_pages_per_slot),
+        prefill_chunk=getattr(args, "prefill_chunk", 1) or 1,
+        prefill_stride=getattr(args, "prefill_stride", None),
+        kv_block=getattr(args, "kv_block", None))
     plane = None
     if hw_mode is not None:
         kf = jax.random.split(jax.random.PRNGKey(args.seed + 17))[1]
@@ -106,6 +118,7 @@ def run(args) -> dict:
         gw.close()
     rep["config"] = dict(arch=cfg.name, slots=args.slots,
                          page_size=args.page_size, pages=args.pages,
+                         prefill_chunk=gcfg.prefill_chunk,
                          hw_mode=hw_mode or "digital",
                          n_requests=len(reqs))
     return rep
@@ -135,13 +148,16 @@ def main(argv=None):
     rep = run(args)
     c = rep["config"]
     lat, wait = rep["latency_steps"], rep["admission_wait_steps"]
+    ttft = rep["ttft_steps"]
     print(f"gateway [{c['hw_mode']}] {c['arch']}: {c['n_requests']} "
           f"requests over {rep['steps']} steps "
           f"({rep['busy_steps']} busy, occupancy "
-          f"{rep['occupancy']:.2f}/{c['slots']})")
+          f"{rep['occupancy']:.2f}/{c['slots']}, "
+          f"prefill chunk {c['prefill_chunk']})")
     print(f"  {rep['tokens_out']} tokens in {rep['wall_s']:.1f}s "
           f"({rep['tokens_per_s']:.1f} tok/s) | latency steps "
-          f"p50={lat['p50']:.0f} p99={lat['p99']:.0f} | admission wait "
+          f"p50={lat['p50']:.0f} p99={lat['p99']:.0f} | ttft steps "
+          f"p50={ttft['p50']:.0f} p99={ttft['p99']:.0f} | admission wait "
           f"p50={wait['p50']:.0f} p99={wait['p99']:.0f}")
     fleet = rep.get("fleet")
     if fleet is not None:

@@ -123,8 +123,25 @@ class PagedKVPool:
                 f"(len {ln}, {len(self._owned[slot])} pages)")
         return int(self.table[slot, j]), off
 
-    def advance(self, slot: int) -> None:
-        self.lens[slot] += 1
+    def write_span(self, slot: int, n: int) -> np.ndarray:
+        """(n, 2) int32 ``(page_id, offset)`` rows for the slot's next
+        ``n`` consecutive cache positions — the chunked-prefill write
+        path.  A chunk that crosses one or more page boundaries is
+        split here, host-side, against the slot's page table; the
+        flattened row list feeds ONE aliased multi-row scatter
+        (``kernels.paged_scatter_rows``)."""
+        ln = int(self.lens[slot])
+        pos = ln + np.arange(n)
+        j = pos // self.cfg.page_size
+        if n and j[-1] >= len(self._owned[slot]):
+            raise RuntimeError(
+                f"slot {slot} writing past its reservation "
+                f"(len {ln} + {n}, {len(self._owned[slot])} pages)")
+        return np.stack([self.table[slot, j],
+                         pos % self.cfg.page_size], axis=1).astype(np.int32)
+
+    def advance(self, slot: int, n: int = 1) -> None:
+        self.lens[slot] += n
 
     # -- audits (property tests) ---------------------------------------------
 

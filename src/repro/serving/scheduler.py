@@ -71,6 +71,11 @@ class Request:
         """Sojourn time in virtual steps (arrival → finish)."""
         return self.finished_step - self.arrival
 
+    def ttft(self) -> int:
+        """Time to first token in virtual steps (arrival → first
+        emission): queueing wait + the whole prefill."""
+        return self.first_token_step - self.arrival
+
 
 def poisson_workload(seed: int, n_requests: int, rate: float, vocab: int,
                      prompt_len: tuple[int, int] = (4, 12),
