@@ -1,0 +1,355 @@
+"""Fleet-autopilot benchmark: forecast-driven vs alarm-driven upkeep.
+
+The autopilot's claim (``src/repro/runtime/autopilot.py``) is that the
+maintenance loop should act on the forecasts the router already owns —
+the OU relaxation law plus each tenant's measured degradation rate —
+instead of waiting for hysteretic alarms.  This benchmark drives an
+identical seeded **diurnal** workload (bursty Poisson arrivals over a
+sinusoidal day, correlated drift bursts, injected chip outages) through
+both schedulers on bit-identical fleets and locks gates around the SLO
+story:
+
+1. **Scheduler duel** — alarm-driven reactive loop (``drift_aware``
+   routing, FIFO repair) vs autopilot (``accuracy_aware`` routing,
+   degradation-rate priority queue, trough-scheduled proactive recals
+   under a PTC-call envelope).  A queue model converts routable
+   capacity into per-request latency; every served request's *realized*
+   relative error is measured through the chip's drifted transfer.
+   Gates: autopilot accuracy no worse, strictly fewer reactive alarms,
+   every budget window's *proactive* recal spend within the envelope
+   (reactive repairs are exempt by design — an alarm is already an SLO
+   breach, and the envelope bounds the extra maintenance power
+   prediction may add on top).
+2. **Sensitivity calibration** — the ``logit_sensitivity`` prior
+   (Frobenius energy per input column) that weights the
+   ``accuracy_aware`` policy is validated against *measured* per-tenant
+   output-error energy on drifted hardware (the PR-5 e2e methodology:
+   realized transfer vs ideal logits), per tenant at matched relative
+   distance.  Gate: the predicted ranking matches the measured one.
+3. **Gateway leg** — one closed-loop continuous-batching run
+   (``--hw-logits`` + ``--autopilot``) over a bursty arrival schedule,
+   proving the trough signal flows gateway → router and the run
+   completes under proactive maintenance.
+
+Artifacts: ``fleet_autopilot.csv`` (per-phase load/latency/alarm
+series) and ``BENCH_fleet_autopilot.json`` with the gates +
+host-invariant metrics ``check_regression.py`` gates in CI (SLO
+attainment, inverse p99 latency, alarms averted — all virtual-tick
+quantities of a seeded schedule, bit-deterministic across hosts).
+
+    PYTHONPATH=src python -m benchmarks.fleet_autopilot [--budget quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import math
+import os
+
+import numpy as np
+
+from .common import ART, emit
+
+SEED = 11
+CHIPS = 3
+TENANTS = 2
+DIM = 12
+K = 4
+SIGMA = 0.02
+PROBE_EVERY = 5
+PERIOD = 80                      # ticks per diurnal cycle
+RATE_BASE = 2.0                  # mean arrivals/tick at mid-day
+RATE_AMP = 0.9                   # peak/trough swing
+CAP_PER_CHIP = 2                 # requests a routable chip absorbs/tick
+LAT_SLO = 6.0                    # ticks: queue-latency SLO
+ERR_SLO = 0.08                   # realized relative serve error SLO
+BUDGET_CALLS = 60_000.0          # proactive recal PTC-call envelope/window
+HORIZON = 30
+TROUGH = 0.55
+
+
+def _runtime_cfg(autopilot=None, policy="drift_aware"):
+    from repro.runtime.demo import default_runtime_config
+
+    # auto_budget: jobs are sized to measured drift depth by the
+    # knee-calibrated autotuner (RecalConfig.auto_coeff/auto_min) —
+    # proactive repairs trigger shallow, so they cost a fraction of a
+    # full-depth job and the PTC envelope buys several per window
+    cfg = default_runtime_config(k=K, sigma_drift=SIGMA,
+                                 probe_every=PROBE_EVERY,
+                                 auto_budget=True)
+    return dataclasses.replace(cfg, router_policy=policy,
+                               autopilot=autopilot,
+                               max_concurrent_recals=2)
+
+
+def _tenant_weights():
+    """Two mapped layers with distinct Frobenius energies, so the
+    sensitivity prior has a real ranking to get right."""
+    rng = np.random.default_rng(SEED)
+    scales = [1.0, 1.7][:TENANTS]
+    return [np.asarray(rng.standard_normal((DIM, DIM)) / np.sqrt(DIM)
+                       * s, np.float32) for s in scales]
+
+
+def _schedule(ticks: int):
+    """The seeded day: per-tick arrival counts + correlated drift
+    bursts + chip outages.  Precomputed once and replayed identically
+    in both arms."""
+    rng = np.random.default_rng(SEED + 1)
+    lam = RATE_BASE * (1.0 + RATE_AMP
+                       * np.sin(2.0 * np.pi * np.arange(ticks) / PERIOD))
+    arrivals = rng.poisson(np.maximum(lam, 0.05))
+    tenant_of = rng.integers(0, TENANTS, size=int(arrivals.sum()))
+    # correlated drift bursts: a thermal event ages one chip by several
+    # extra ticks at once (rate spike the EWMA must catch)
+    bursts = {}
+    for t in rng.choice(np.arange(10, ticks - 10), size=max(2, ticks // 60),
+                        replace=False):
+        bursts[int(t)] = (int(rng.integers(0, CHIPS)), 12.0)
+    # one outage per day, mid-morning ramp: the board drops off the
+    # network while its drift keeps walking
+    outages = {int(PERIOD * (i + 0.3)): (i % CHIPS, 8)
+               for i in range(max(1, ticks // PERIOD - 1))}
+    return arrivals, tenant_of, bursts, outages
+
+
+def _run_arm(label: str, ticks: int, autopilot=None,
+             policy: str = "drift_aware") -> dict:
+    """One scheduler arm over the seeded day.  Returns summary stats +
+    the per-window recal spend series."""
+    import jax
+    from repro.runtime.fleet import make_fleet, make_router
+    from repro.runtime.autopilot import logit_sensitivity
+
+    weights = _tenant_weights()
+    cfg = _runtime_cfg(autopilot=autopilot, policy=policy)
+    chips = make_fleet(jax.random.PRNGKey(SEED + 2), CHIPS, weights, cfg)
+    router = make_router(chips, cfg, seed=SEED + 3)
+    if policy == "accuracy_aware":
+        router.set_sensitivity(logit_sensitivity(weights))
+
+    arrivals, tenant_of, bursts, outages = _schedule(ticks)
+    xs = [np.asarray(np.random.default_rng(SEED + 4 + j)
+                     .standard_normal((4, DIM)), np.float32)
+          for j in range(TENANTS)]
+    y_ref = [x @ w.T for x, w in zip(xs, weights)]
+    ref_energy = [float((y ** 2).sum()) for y in y_ref]
+
+    queue: list[tuple[int, int]] = []     # (arrival_tick, tenant)
+    next_req = 0
+    lat, err = [], []
+    cap_full = CAP_PER_CHIP * CHIPS
+    spend_series = []                     # cumulative recal calls per tick
+    series = []
+    for t in range(ticks):
+        for _ in range(int(arrivals[t])):
+            queue.append((t, int(tenant_of[next_req])))
+            next_req += 1
+        load = min(1.0, len(queue) / cap_full)
+        router.observe_load(load)
+        router.tick()
+        if t in bursts:
+            c, extra = bursts[t]
+            chips[c].driver.advance(extra)
+        if t in outages:
+            c, dur = outages[t]
+            router.inject_outage(c, dur)
+        cap = CAP_PER_CHIP * sum(c.routable for c in chips)
+        for _ in range(min(cap, len(queue))):
+            t0, ten = queue.pop(0)
+            y, _cid = router.serve(xs[ten], tenant=ten)
+            lat.append(t - t0)
+            err.append(float(((np.asarray(y) - y_ref[ten]) ** 2).sum())
+                       / ref_energy[ten])
+        spend_series.append(sum(c.recal_calls for c in chips))
+        series.append(dict(tick=t, load=load, queue=len(queue)))
+
+    rep = router.report()
+    alarms = sum(c["alarms"] for c in rep["chips"])
+    recals = sum(c["recals"] for c in rep["chips"])
+    lat_a, err_a = np.asarray(lat, float), np.asarray(err, float)
+    slo = float(np.mean((lat_a <= LAT_SLO) & (err_a <= ERR_SLO)))
+    # per-window recal spend (public counters, not the router's private
+    # window state): cumulative-call diffs at window boundaries
+    window = (autopilot.budget_window if autopilot is not None else PERIOD)
+    marks = [0.0] + [spend_series[min(i + window, ticks) - 1]
+                     for i in range(0, ticks, window)]
+    window_spend = [b - a for a, b in zip(marks, marks[1:])]
+    deltas = [b - a for a, b in zip([0.0] + spend_series, spend_series)]
+    max_job_cost = max(deltas) if deltas else 0.0
+    out = dict(
+        label=label, ticks=ticks, requests=len(lat),
+        unserved=len(queue), dropped=rep["dropped"],
+        alarms=alarms, recals=recals,
+        p50_latency=float(np.percentile(lat_a, 50)),
+        p99_latency=float(np.percentile(lat_a, 99)),
+        mean_err=float(err_a.mean()), p99_err=float(np.percentile(err_a, 99)),
+        max_err=float(err_a.max()), slo_attainment=slo,
+        recal_ptc_calls=float(spend_series[-1]),
+        window_spend=window_spend, max_job_cost=max_job_cost,
+        autopilot=rep.get("autopilot"), series=series)
+    print(f"{label:>10s}: {len(lat)} served | latency p50 "
+          f"{out['p50_latency']:.1f} p99 {out['p99_latency']:.1f} | err "
+          f"mean {out['mean_err']:.4f} p99 {out['p99_err']:.4f} | "
+          f"{alarms} alarms, {recals} recals | SLO {slo:.3f}", flush=True)
+    router.close()
+    return out
+
+
+def _sensitivity_validation() -> dict:
+    """Measured e2e check of the ``logit_sensitivity`` prior: deploy
+    tenants of distinct energies on ONE chip, drift it, and compare the
+    predicted per-tenant error leverage (sensitivity × realized
+    relative distance) against the *measured* output-error energy
+    through the drifted transfer.  The prior is only trusted to rank."""
+    import jax
+    from repro.runtime.fleet import make_chip
+    from repro.runtime.autopilot import logit_sensitivity
+
+    rng = np.random.default_rng(SEED + 9)
+    weights = [np.asarray(rng.standard_normal((DIM, DIM)) / np.sqrt(DIM)
+                          * s, np.float32) for s in (0.6, 1.0, 1.8)]
+    cfg = _runtime_cfg()
+    chip = make_chip(jax.random.PRNGKey(SEED + 10), 0, weights, cfg)
+    for _ in range(60):
+        chip.driver.advance(1.0)
+    sens = logit_sensitivity(weights)
+    x = np.asarray(rng.standard_normal((16, DIM)), np.float32)
+    measured, predicted = [], []
+    for t, w in zip(chip.tenants, weights):
+        y = np.asarray(chip.driver.forward_layer(
+            x, block_range=t.block_range, out_dim=t.m))
+        y_ref = x @ w.T
+        e = float(((y - y_ref) ** 2).sum() / x.shape[0])
+        d = float(((y - y_ref) ** 2).sum()) / float((y_ref ** 2).sum())
+        measured.append(e)
+        predicted.append(sens[t.tenant_id] * d)
+    rank_ok = (list(np.argsort(measured)) == list(np.argsort(predicted)))
+    print(f"sensitivity: prior {['%.2f' % s for s in sens]} | measured "
+          f"err-energy {['%.4f' % e for e in measured]} | rank match "
+          f"{rank_ok}", flush=True)
+    return dict(sensitivity=sens, measured_err_energy=measured,
+                predicted_leverage=predicted, rank_ok=bool(rank_ok))
+
+
+def _gateway_leg() -> dict:
+    """Closed-loop continuous-batching run with the autopilot on: the
+    occupancy signal must flow gateway → LoadForecast and the run must
+    complete every request under proactive maintenance."""
+    import jax
+    from repro.launch.train import parse_arch
+    from repro.models.lm import init_model
+    from repro.serving.gateway import run as gw_run
+    from repro.serving.scheduler import poisson_workload
+
+    arch = "smoke:qwen3-4b"
+    cfg = parse_arch(arch)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    reqs = poisson_workload(SEED + 5, 8, 2.0, cfg.vocab,
+                            prompt_len=(4, 8), max_new=(8, 12))
+    args = argparse.Namespace(
+        arch=arch, seed=SEED, slots=3, requests=len(reqs), rate=1.0,
+        max_new=(8, 12), eos_id=None, page_size=8, pages=32,
+        max_pages_per_slot=4, prefill_chunk=1,
+        fleet=2, drift=True, drift_sigma=0.008, probe_every=10,
+        fleet_k=8, fleet_driver="twin", hw_logits=True, hw_shadow=False,
+        deploy_zo=False, no_recal=False, params_override=params,
+        requests_override=[dataclasses.replace(r, out_tokens=[])
+                           for r in reqs],
+        autopilot=True, ap_horizon=HORIZON, ap_trough=TROUGH,
+        ap_budget=None, ap_window=PERIOD, fleet_policy="accuracy_aware")
+    rep = gw_run(args)
+    expected = sum(r.max_new for r in reqs)
+    ap = rep["fleet"].get("autopilot") or {}
+    complete = rep["tokens_out"] == expected
+    print(f"gateway leg: {rep['tokens_out']}/{expected} tok | p99 latency "
+          f"{rep['latency_steps']['p99']:.0f} steps | "
+          f"{ap.get('proactive_recals', 0)} proactive recals | load "
+          f"samples {ap.get('load_samples', 0)} | complete={complete}",
+          flush=True)
+    return dict(tokens_out=rep["tokens_out"], expected_tokens=expected,
+                complete=bool(complete),
+                p99_latency_steps=rep["latency_steps"]["p99"],
+                occupancy=rep["occupancy"], autopilot=ap)
+
+
+def main(budget: str = "quick") -> None:
+    ticks = 240 if budget == "quick" else 480
+
+    base = _run_arm("reactive", ticks)
+    ap_cfg = _make_ap_cfg()
+    ap = _run_arm("autopilot", ticks, autopilot=ap_cfg,
+                  policy="accuracy_aware")
+    sens = _sensitivity_validation()
+    gw = _gateway_leg()
+
+    # the envelope gates *admission*: a proactive job admitted while
+    # window spend < budget can land after the gate closed, so a window
+    # may legitimately overshoot by the jobs already committed.  Allow
+    # one repair window's worth of in-flight work (the measured max
+    # single-landing cost × repair-slot bandwidth) on top.  Reactive
+    # spend is exempt and not counted here at all.
+    slack = ap["max_job_cost"] * 2       # max_concurrent_recals = 2
+    ap_rep = ap["autopilot"] or {}
+    proactive_windows = (list(ap_rep.get("proactive_windows", []))
+                         + [ap_rep.get("window_spent", 0.0)])
+    budget_ok = all(w <= BUDGET_CALLS + slack for w in proactive_windows)
+
+    gates = dict(
+        autopilot_accuracy_no_worse=bool(
+            ap["mean_err"] <= base["mean_err"] * 1.05 + 1e-9),
+        fewer_reactive_alarms=bool(ap["alarms"] < base["alarms"]),
+        recal_budget_within_envelope=bool(budget_ok),
+        sensitivity_rank_validated=bool(sens["rank_ok"]),
+        gateway_autopilot_completes=bool(gw["complete"]))
+
+    emit("fleet_autopilot",
+         ["arm", "requests", "p50_latency", "p99_latency", "mean_err",
+          "p99_err", "alarms", "recals", "slo_attainment"],
+         [[a["label"], a["requests"], f"{a['p50_latency']:.1f}",
+           f"{a['p99_latency']:.1f}", f"{a['mean_err']:.5f}",
+           f"{a['p99_err']:.5f}", a["alarms"], a["recals"],
+           f"{a['slo_attainment']:.4f}"] for a in (base, ap)])
+
+    for a in (base, ap):
+        a.pop("series")
+    summary = dict(
+        budget=budget, seed=SEED, ticks=ticks,
+        workload=dict(chips=CHIPS, tenants=TENANTS, dim=DIM, k=K,
+                      sigma=SIGMA, period=PERIOD, rate_base=RATE_BASE,
+                      rate_amp=RATE_AMP, cap_per_chip=CAP_PER_CHIP,
+                      lat_slo=LAT_SLO, err_slo=ERR_SLO),
+        autopilot_cfg=dict(horizon=HORIZON, trough_load=TROUGH,
+                           budget_calls=BUDGET_CALLS, budget_window=PERIOD),
+        reactive=base, autopilot=ap,
+        alarms_averted_frac=(
+            (base["alarms"] - ap["alarms"]) / max(1, base["alarms"])),
+        budget_slack_used=slack, proactive_window_spend=proactive_windows,
+        sensitivity=sens, gateway=gw, gates=gates)
+    os.makedirs(ART, exist_ok=True)
+    path = os.path.join(ART, "BENCH_fleet_autopilot.json")
+    with open(path, "w") as f:
+        json.dump(summary, f, indent=2)
+    print(f"--- fleet_autopilot summary ({path}) ---")
+    print(json.dumps(dict(gates=gates,
+                          alarms=(base["alarms"], ap["alarms"]),
+                          slo=(base["slo_attainment"],
+                               ap["slo_attainment"])), indent=2))
+    for name, ok in gates.items():
+        assert ok, f"fleet autopilot gate failed: {name}"
+
+
+def _make_ap_cfg():
+    from repro.runtime.autopilot import AutopilotConfig
+    return AutopilotConfig(horizon=HORIZON, trough_load=TROUGH,
+                           budget_calls=BUDGET_CALLS, budget_window=PERIOD,
+                           forecast_period=PERIOD, forecast_alpha=0.3)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", default="quick", choices=["quick", "normal"])
+    main(ap.parse_args().budget)

@@ -61,7 +61,7 @@ def main() -> None:
     from . import (ic_convergence, blocksize_tables, mapping_osp,
                    grad_fidelity, sampling_table2, scalability,
                    drift_recovery, driver_overhead, e2e_accuracy,
-                   serving_gateway)
+                   serving_gateway, fleet_autopilot)
     benches = [
         ("fig4_ic_convergence", ic_convergence.main),
         ("tables345_blocksize", blocksize_tables.main),
@@ -74,6 +74,7 @@ def main() -> None:
         ("hw_driver_overhead", driver_overhead.main),
         ("runtime_e2e_accuracy", e2e_accuracy.main),
         ("serving_gateway", serving_gateway.main),
+        ("fleet_autopilot", fleet_autopilot.main),
     ]
     for name, fn in benches:
         if args.only and args.only not in name:

@@ -66,6 +66,7 @@ def main(argv=None) -> int:
             return 2
         print(f"{rule.code} — {rule.name}\n")
         print(rule.explain)
+        print(f"\nDocs: docs/repro-lint.md#{rule.code.lower()}")
         return 0
 
     if args.self_test:

@@ -1,5 +1,10 @@
 """Op-stream wire protocol for out-of-process drivers (v4: binary framing).
 
+The normative spec — byte-level frame layout, the handshake/fallback
+matrix, op-whitelist semantics, and error-frame behavior — lives in
+``docs/wire-protocol.md``; this docstring summarizes the codec this
+module implements.
+
 Request/response frames over any *byte* stream (the subprocess transport
 uses stdin/stdout pipes, the socket transport a TCP connection — same
 framing)::

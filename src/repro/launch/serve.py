@@ -50,27 +50,71 @@ from .steps import greedy_decode
 from .train import parse_arch
 
 
+def add_autopilot_args(ap: argparse.ArgumentParser) -> None:
+    """Fleet scheduling/routing knobs shared by ``launch.serve`` and
+    ``serving.gateway`` (both build their fleet via
+    :func:`_hw_runtime_config`)."""
+    ap.add_argument("--autopilot", action="store_true",
+                    help="forecast-driven fleet maintenance: proactive "
+                         "recals before predicted alarm crossings, "
+                         "degradation-rate repair priority, trough-"
+                         "scheduled via the gateway's occupancy signal")
+    ap.add_argument("--ap-horizon", type=int, default=40,
+                    help="autopilot: proactive window (ticks)")
+    ap.add_argument("--ap-trough", type=float, default=0.5,
+                    help="autopilot: load forecast at/below this "
+                         "fraction of capacity counts as a trough")
+    ap.add_argument("--ap-budget", type=float, default=None,
+                    help="autopilot: recal PTC-call envelope per window "
+                         "(default unlimited)")
+    ap.add_argument("--ap-window", type=int, default=200,
+                    help="autopilot: budget window (ticks)")
+    ap.add_argument("--fleet-policy", default=None,
+                    choices=["drift_aware", "accuracy_aware",
+                             "least_served"],
+                    help="dispatch ranking policy (default: the demo "
+                         "config's drift_aware)")
+
+
+def _apply_fleet_policy(args, cfg):
+    """Fold the shared CLI scheduling knobs into a RuntimeConfig."""
+    policy = getattr(args, "fleet_policy", None)
+    if policy:
+        cfg = dataclasses.replace(cfg, router_policy=policy)
+    if getattr(args, "autopilot", False):
+        from ..runtime.autopilot import AutopilotConfig
+        budget = getattr(args, "ap_budget", None)
+        cfg = dataclasses.replace(cfg, autopilot=AutopilotConfig(
+            horizon=getattr(args, "ap_horizon", 40),
+            trough_load=getattr(args, "ap_trough", 0.5),
+            budget_calls=float("inf") if budget is None else budget,
+            budget_window=getattr(args, "ap_window", 200)))
+    return cfg
+
+
 def _build_fleet(args):
     from ..runtime.demo import default_runtime_config, _make_weights
-    from ..runtime.fleet import make_fleet, FleetRouter
+    from ..runtime.fleet import make_fleet, make_router
 
     sigma = args.drift_sigma if args.drift else 0.0
     cfg = default_runtime_config(k=args.fleet_k, sigma_drift=sigma,
                                  probe_every=args.probe_every,
                                  driver_kind=args.fleet_driver)
+    cfg = _apply_fleet_policy(args, cfg)
     kw, kf = jax.random.split(jax.random.PRNGKey(args.seed + 17))
     dim = args.fleet_dim
     tenants = max(1, args.fleet_tenants)
     weights = _make_weights(kw, dim, tenants)
     chips = make_fleet(kf, args.fleet,
                        weights if tenants > 1 else weights[0], cfg)
-    return FleetRouter(chips, cfg, seed=args.seed), dim, tenants
+    return make_router(chips, cfg, seed=args.seed), dim, tenants
 
 
 def _hw_runtime_config(args):
     """Fleet policy for the hw-logits plane: explicit override via
     ``args.runtime_cfg`` (the accuracy benchmark tunes thresholds), else
-    the demo defaults at the CLI-selected drift/probe cadence."""
+    the demo defaults at the CLI-selected drift/probe cadence, with the
+    shared scheduling knobs (--autopilot, --fleet-policy) folded in."""
     from ..runtime.demo import default_runtime_config
 
     cfg = getattr(args, "runtime_cfg", None)
@@ -79,6 +123,7 @@ def _hw_runtime_config(args):
         cfg = default_runtime_config(k=args.fleet_k, sigma_drift=sigma,
                                      probe_every=args.probe_every,
                                      driver_kind=args.fleet_driver)
+        cfg = _apply_fleet_policy(args, cfg)
     if getattr(args, "deploy_zo", False):
         cfg = dataclasses.replace(cfg, deploy_zo=True)
     return cfg
@@ -245,6 +290,7 @@ def main(argv=None):
                          "(lower mapping floor for accuracy studies)")
     ap.add_argument("--no-recal", action="store_true",
                     help="open loop: alarms fire, nothing recovers")
+    add_autopilot_args(ap)
     ap.add_argument("--gateway", action="store_true",
                     help="serve an open-loop request stream through the "
                          "continuous-batching gateway (repro.serving) "

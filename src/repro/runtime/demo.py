@@ -40,7 +40,7 @@ from ..core.noise import DEFAULT_NOISE
 from ..hw import DriftConfig
 from .monitor import MonitorConfig
 from .recalibrate import RecalConfig
-from .fleet import FleetRouter, RuntimeConfig, make_fleet, RECALIBRATING
+from .fleet import RuntimeConfig, make_fleet, make_router, RECALIBRATING
 
 __all__ = ["simulate", "default_runtime_config", "main"]
 
@@ -50,10 +50,12 @@ def default_runtime_config(k: int = 6, sigma_drift: float = 0.015,
                            zo_steps: int = 400,
                            driver_kind: str = "twin",
                            auto_budget: bool = False,
-                           router_policy: str = "drift_aware"
-                           ) -> RuntimeConfig:
+                           router_policy: str = "drift_aware",
+                           autopilot=None) -> RuntimeConfig:
     """Demo-scale policy: drift crosses the alarm threshold within a few
-    probe periods; a short warm-started recal restores ~initial error."""
+    probe periods; a short warm-started recal restores ~initial error.
+    ``autopilot``: an :class:`~repro.runtime.autopilot.AutopilotConfig`
+    switches the fleet to forecast-driven maintenance scheduling."""
     monitor = MonitorConfig(n_probes=6, alarm_threshold=0.05,
                             clear_threshold=0.02, consecutive=2)
     return RuntimeConfig(
@@ -72,6 +74,7 @@ def default_runtime_config(k: int = 6, sigma_drift: float = 0.015,
         max_concurrent_recals=1,
         driver_kind=driver_kind,
         router_policy=router_policy,
+        autopilot=autopilot,
     )
 
 
@@ -103,7 +106,7 @@ def simulate(n_chips: int, steps: int, *, dim: int = 18, batch: int = 8,
     weights = _make_weights(kw, dim, tenants)
     chips = make_fleet(kf, n_chips, weights if tenants > 1 else weights[0],
                        cfg)
-    router = FleetRouter(chips, cfg, seed=seed + 1,
+    router = make_router(chips, cfg, seed=seed + 1,
                          recal_enabled=recal_enabled)
 
     trace = dict(t=[], max_dist=[], mean_dist=[], serve_err=[],
@@ -220,10 +223,16 @@ def _fmt_event(ev: dict) -> str:
     if ev["event"] == "alarm":
         return (f"ALARM chip {ev['chip']}{ten}: probe distance "
                 f"{ev['distance']:.4f} above threshold")
+    if ev["event"] == "outage":
+        return f"OUTAGE chip {ev['chip']}: offline for {ev['ticks']} ticks"
+    if ev["event"] == "outage_end":
+        return f"OUTAGE chip {ev['chip']}: back online"
     if ev["event"] == "recal_start":
-        return (f"RECAL chip {ev['chip']}{ten}: partial job scheduled "
+        kind = "proactive" if ev.get("proactive") else "partial"
+        return (f"RECAL chip {ev['chip']}{ten}: {kind} job scheduled "
                 f"(chip unroutable)")
-    return (f"RECAL chip {ev['chip']}{ten} done: distance "
+    kind = " (proactive)" if ev.get("proactive") else ""
+    return (f"RECAL chip {ev['chip']}{ten} done{kind}: distance "
             f"{ev['dist_before']:.4f} → {ev['dist_after']:.4f} "
             f"({ev['zo_steps']} ZO steps) [{ev['status']}]")
 
@@ -248,20 +257,44 @@ def main(argv=None) -> int:
                          "JSON-over-pipe out-of-process twin (HIL "
                          "shape), or the same protocol over TCP")
     ap.add_argument("--policy", default="drift_aware",
-                    choices=["drift_aware", "least_served"],
+                    choices=["drift_aware", "accuracy_aware",
+                             "least_served"],
                     help="dispatch ranking policy")
     ap.add_argument("--auto-budget", action="store_true",
                     help="autotune recal ZO steps from d̂ at alarm time")
     ap.add_argument("--no-recal", action="store_true",
                     help="open-loop baseline: alarms fire, nothing recovers")
+    ap.add_argument("--autopilot", action="store_true",
+                    help="forecast-driven maintenance: proactive recals "
+                         "before predicted alarm crossings, degradation-"
+                         "rate repair priority (runtime/autopilot.py)")
+    ap.add_argument("--ap-horizon", type=int, default=40,
+                    help="autopilot: proactive window in ticks")
+    ap.add_argument("--ap-trough", type=float, default=0.5,
+                    help="autopilot: load forecast at/below this counts "
+                         "as a trough")
+    ap.add_argument("--ap-budget", type=float, default=None,
+                    help="autopilot: recal PTC-call envelope per window "
+                         "(default: unlimited)")
+    ap.add_argument("--ap-window", type=int, default=200,
+                    help="autopilot: budget window in ticks")
     args = ap.parse_args(argv)
 
+    autopilot = None
+    if args.autopilot:
+        from .autopilot import AutopilotConfig
+        autopilot = AutopilotConfig(
+            horizon=args.ap_horizon, trough_load=args.ap_trough,
+            budget_calls=(float("inf") if args.ap_budget is None
+                          else args.ap_budget),
+            budget_window=args.ap_window)
     cfg = default_runtime_config(k=args.k, sigma_drift=args.sigma_drift,
                                  probe_every=args.probe_every,
                                  zo_steps=args.zo_steps,
                                  driver_kind=args.driver,
                                  auto_budget=args.auto_budget,
-                                 router_policy=args.policy)
+                                 router_policy=args.policy,
+                                 autopilot=autopilot)
     out = simulate(args.chips, args.steps, dim=args.dim, batch=args.batch,
                    seed=args.seed, cfg=cfg, tenants=args.tenants,
                    recal_enabled=not args.no_recal, verbose=True)
@@ -293,6 +326,12 @@ def main(argv=None) -> int:
     print(f"probe overhead                : {probe_calls:.0f} PTC calls "
           f"({100 * probe_calls / max(serve_calls, 1):.2f}% of serve path)")
     print(f"recal overhead (out-of-band)  : {recal_calls:.0f} PTC calls")
+    ap_rep = report.get("autopilot")
+    if ap_rep is not None:
+        print(f"autopilot                     : "
+              f"{ap_rep['proactive_recals']} proactive recals, "
+              f"{ap_rep['deferred_trough']} deferred to troughs, "
+              f"{ap_rep['deferred_budget']} deferred on budget")
     for c in report["chips"]:
         print(f"  chip {c['chip']}: {c['status']:<8} served={c['served']:4d} "
               f"d̂={c['distance']:.4f} alarms={c['alarms']} "
@@ -323,6 +362,12 @@ def main(argv=None) -> int:
     degraded = peak > cfg.monitor.alarm_threshold
     if args.no_recal:
         ok = degraded and served == args.steps
+    elif args.autopilot:
+        # proactive maintenance may legitimately prevent every alarm —
+        # require the loop to have *worked* (jobs ran and recovered),
+        # not that it waited for the damage first
+        ok = (recals > 0 and len(recovered) > 0
+              and served == args.steps and cotenants_ok)
     else:
         ok = (degraded and alarms > 0 and recals > 0
               and len(recovered) > 0 and served == args.steps

@@ -49,7 +49,22 @@ traffic); RECALIBRATING chips are never dispatched to.  Routing policy:
   i.e. half-life ``ln2/2θ`` ticks), so a tenant probed long ago is
   charged its forecast drift, not its stale estimate.  Ties break by
   least-served.
+* ``"accuracy_aware"`` — rank by forecast *logit* fidelity instead of
+  raw probe distance: each tenant's predicted drift-induced excess over
+  its deployment-time floor, weighted by a per-tenant logit-sensitivity
+  calibration (:meth:`FleetRouter.set_sensitivity`; derived from the
+  served layers by ``autopilot.logit_sensitivity``).  At σ_drift = 0
+  every excess is exactly 0 and the policy reduces to ``drift_aware``
+  (property-tested) — the deployment floor is priced into baseline
+  accuracy, so only drift-induced excess should steer traffic.
 * ``"least_served"`` — the plain balancing baseline.
+
+Scheduling is a seam: the *reactive* repair policy lives in
+:meth:`FleetRouter._schedule_repairs` (alarm-driven, FIFO in chip
+order); the forecast-driven autopilot (``runtime/autopilot.py``,
+:func:`make_router`) overrides exactly that method with a
+degradation-rate priority queue plus proactive trough-scheduled
+maintenance.  See ``docs/architecture.md``.
 """
 
 from __future__ import annotations
@@ -72,7 +87,7 @@ from .recalibrate import RecalConfig, recalibrate
 
 __all__ = ["HEALTHY", "DEGRADED", "RECALIBRATING", "RuntimeConfig",
            "Tenant", "Chip", "FleetRouter", "make_chip", "make_fleet",
-           "predicted_distance"]
+           "make_router", "predicted_distance"]
 
 HEALTHY = "healthy"
 DEGRADED = "degraded"
@@ -107,6 +122,12 @@ class RuntimeConfig:
     #                              serving raises it so one chip outage
     #                              refreshes every drifted layer at once
     #                              (a model's tenants drift together)
+    autopilot: Optional[object] = None  # AutopilotConfig — when set,
+    #                              :func:`make_router` builds the
+    #                              forecast-driven AutopilotRouter
+    #                              (runtime/autopilot.py) instead of the
+    #                              reactive FleetRouter.  Typed loosely to
+    #                              keep fleet.py import-free of autopilot.
 
 
 @dataclasses.dataclass
@@ -142,6 +163,11 @@ class Chip:
     status: str = HEALTHY
     recal_ticks_left: int = 0
     recal_tenant: Optional[int] = None   # tenant the pending job re-tunes
+    recal_proactive: bool = False        # pending job was forecast-scheduled
+    offline_ticks_left: int = 0  # injected outage: board unreachable —
+    #                              not routable, not probeable, and any
+    #                              in-flight repair job stalls until the
+    #                              outage lifts
     # chip-level counters (tenant counters hold the breakdown)
     served: int = 0
     alarms: int = 0
@@ -149,8 +175,12 @@ class Chip:
     recal_calls: float = 0.0     # PTC calls spent by recal jobs (job deltas)
 
     @property
+    def offline(self) -> bool:
+        return self.offline_ticks_left > 0
+
+    @property
     def routable(self) -> bool:
-        return self.status != RECALIBRATING
+        return self.status != RECALIBRATING and not self.offline
 
     @property
     def alarmed(self) -> bool:
@@ -251,6 +281,18 @@ def make_fleet(key: jax.Array, n_chips: int, w,
     return [make_chip(keys[i], i, w, cfg) for i in range(n_chips)]
 
 
+def make_router(chips: list[Chip], cfg: RuntimeConfig, seed: int = 0,
+                recal_enabled: bool = True) -> "FleetRouter":
+    """Router factory: the reactive :class:`FleetRouter` by default, or
+    the forecast-driven ``AutopilotRouter`` when ``cfg.autopilot`` is
+    set (imported lazily — fleet.py never depends on autopilot.py)."""
+    if cfg.autopilot is not None:
+        from .autopilot import AutopilotRouter
+        return AutopilotRouter(chips, cfg, seed=seed,
+                               recal_enabled=recal_enabled)
+    return FleetRouter(chips, cfg, seed=seed, recal_enabled=recal_enabled)
+
+
 def predicted_distance(chip: Chip, now: int, drift: DriftConfig,
                        tenant: Optional[Tenant] = None) -> float:
     """Forecast of a tenant's mapping distance at tick ``now``
@@ -296,6 +338,35 @@ class FleetRouter:
         self.dropped = 0             # batches with no routable chip
         self.events: list[dict] = []
         self._key = jax.random.PRNGKey(seed)
+        # deployment-time floors: the PM residual each tenant carried at
+        # fleet build.  "accuracy_aware" ranks chips by drift-induced
+        # EXCESS over this floor (the floor is baked into baseline task
+        # accuracy — only the excess degrades served logits).
+        self._floor = {c.chip_id: [t.health.distance for t in c.tenants]
+                       for c in chips}
+        # per-tenant logit-sensitivity weights (uniform until calibrated
+        # via set_sensitivity — HwServePlane derives them from the served
+        # layers' effective weights; see autopilot.logit_sensitivity)
+        self.sensitivity: Optional[list[float]] = None
+
+    def set_sensitivity(self, weights: Sequence[float]) -> None:
+        """Install per-tenant logit-sensitivity weights for the
+        ``accuracy_aware`` routing policy (one weight per tenant slot;
+        every chip hosts the same layout)."""
+        n = len(self.chips[0].tenants)
+        if len(weights) != n:
+            raise ValueError(f"expected {n} tenant weights, "
+                             f"got {len(weights)}")
+        self.sensitivity = [float(w) for w in weights]
+
+    def _tenant_weight(self, idx: int) -> float:
+        return 1.0 if self.sensitivity is None else self.sensitivity[idx]
+
+    def observe_load(self, load: float) -> None:
+        """Load-forecast hook: the serving gateway reports its occupancy
+        (active slots + queue depth over capacity) here each virtual
+        step.  The reactive router ignores it; the autopilot subclass
+        folds it into its trough forecast."""
 
     # -- key plumbing -------------------------------------------------------
 
@@ -308,10 +379,12 @@ class FleetRouter:
     def dispatch(self, tenant: int = 0) -> Optional[Chip]:
         """Pick a routable chip for ``tenant``'s traffic, preferring
         HEALTHY; rank within the pool by the configured policy
-        (predicted per-tenant fidelity decay or plain least-served)."""
+        (predicted per-tenant fidelity decay, forecast logit excess, or
+        plain least-served)."""
         for pool in (HEALTHY, DEGRADED):
             cands = [c for c in self.chips
-                     if c.status == pool and tenant < len(c.tenants)]
+                     if c.status == pool and c.routable
+                     and tenant < len(c.tenants)]
             if not cands:
                 continue
             if self.cfg.router_policy == "drift_aware":
@@ -319,9 +392,25 @@ class FleetRouter:
                     predicted_distance(c, self.tick_count, self.cfg.drift,
                                        c.tenants[tenant]),
                     c.tenants[tenant].served, c.served, c.chip_id))
+            if self.cfg.router_policy == "accuracy_aware":
+                return min(cands, key=lambda c:
+                           self._accuracy_key(c, tenant))
             return min(cands, key=lambda c: (c.tenants[tenant].served,
                                              c.served, c.chip_id))
         return None
+
+    def _accuracy_key(self, c: Chip, tenant: int) -> tuple:
+        """``accuracy_aware`` dispatch key: forecast *logit* infidelity
+        first — the tenant's predicted drift-induced excess over its
+        deployment floor, weighted by its logit sensitivity — then the
+        raw forecast distance (which makes the policy reduce EXACTLY to
+        ``drift_aware`` at σ_drift = 0, where every excess is 0: the
+        floor error is already priced into baseline accuracy)."""
+        pd = predicted_distance(c, self.tick_count, self.cfg.drift,
+                                c.tenants[tenant])
+        excess = max(0.0, pd - self._floor[c.chip_id][tenant])
+        return (self._tenant_weight(tenant) * excess, pd,
+                c.tenants[tenant].served, c.served, c.chip_id)
 
     def serve(self, x: jax.Array, tenant: int = 0
               ) -> tuple[Optional[jax.Array], Optional[int]]:
@@ -349,7 +438,8 @@ class FleetRouter:
         mirrors :meth:`dispatch` but aggregates over all tenants: the
         chip whose *worst* forecast tenant fidelity is best wins."""
         for pool in (HEALTHY, DEGRADED):
-            cands = [c for c in self.chips if c.status == pool]
+            cands = [c for c in self.chips
+                     if c.status == pool and c.routable]
             if not cands:
                 continue
             if self.cfg.router_policy == "drift_aware":
@@ -358,8 +448,23 @@ class FleetRouter:
                                            self.cfg.drift, t)
                         for t in c.tenants),
                     c.served, c.chip_id))
+            if self.cfg.router_policy == "accuracy_aware":
+                return min(cands, key=self._accuracy_pass_key)
             return min(cands, key=lambda c: (c.served, c.chip_id))
         return None
+
+    def _accuracy_pass_key(self, c: Chip) -> tuple:
+        """Whole-pass ``accuracy_aware`` key: Σ over tenants of
+        sensitivity-weighted forecast excess (a pass touches every
+        layer, so the chip's aggregate forecast logit error is what the
+        served model will see), tie-broken by the worst raw forecast —
+        the ``drift_aware`` pass key, to which this reduces at σ = 0."""
+        now, drift = self.tick_count, self.cfg.drift
+        pds = [predicted_distance(c, now, drift, t) for t in c.tenants]
+        floors = self._floor[c.chip_id]
+        excess = sum(self._tenant_weight(j) * max(0.0, pd - floors[j])
+                     for j, pd in enumerate(pds))
+        return (excess, max(pds), c.served, c.chip_id)
 
     def _pass_ops(self, chip: Chip,
                   items: "Sequence[tuple[int, jax.Array]]") -> list:
@@ -436,6 +541,18 @@ class FleetRouter:
         for chip in self.chips:
             chip.driver.advance(dt)
 
+            if chip.offline:
+                # injected outage: the board is unreachable — drift
+                # still walks (the clock above is physical time), but no
+                # probe frame can go out and an in-flight repair job
+                # stalls where it stood until the outage lifts
+                chip.offline_ticks_left -= 1
+                if not chip.offline:
+                    self.events.append(dict(tick=self.tick_count,
+                                            event="outage_end",
+                                            chip=chip.chip_id))
+                continue
+
             if chip.status == RECALIBRATING:
                 chip.recal_ticks_left -= 1
                 if chip.recal_ticks_left <= 0:
@@ -451,26 +568,60 @@ class FleetRouter:
                     [("forward", dict(x=x, category="probe"))])
             pending.append((chip, in_repair, x, fut))
 
-        # collect phase: resolve in issue order; a chip's scheduling
-        # decision replays the sequential walk's slot count — its
-        # issue-phase occupancy plus repairs scheduled ahead of it here
-        scheduled = 0
-        for chip, base_repair, x, fut in pending:
+        # collect phase: resolve + score in issue order, then run repair
+        # scheduling over the scored fleet.  Scoring only mutates the
+        # scored chip's own health and scheduling draws no PRNG keys, so
+        # splitting the two sub-phases keeps PRNG streams, health
+        # decisions, and repair choices bit-identical to the historical
+        # interleaved walk — and hands subclasses a fleet-wide view
+        # (every probe landed) to schedule against.
+        for chip, _, x, fut in pending:
             if fut is not None:
                 self._score_probe(chip, x, fut.result()[0])
+        self._schedule_repairs(pending)
+
+    def _schedule_repairs(
+            self, pending: "list[tuple[Chip, int, object, object]]") -> None:
+        """Reactive (alarm-driven) repair scheduling — the policy seam
+        the autopilot overrides.  Walks chips in issue order; a chip's
+        decision replays the sequential walk's slot count (its
+        issue-phase occupancy plus repairs scheduled ahead of it), and
+        the worst alarmed tenant wins the chip's repair window."""
+        cfg = self.cfg
+        scheduled = 0
+        for chip, base_repair, _, _ in pending:
             if (chip.alarmed and self.recal_enabled
                     and base_repair + scheduled < cfg.max_concurrent_recals):
                 # repair the worst alarmed tenant; others re-queue after
                 alarmed = [t for t in chip.tenants if t.health.alarmed]
                 worst = max(alarmed, key=lambda t: t.health.distance)
-                chip.status = RECALIBRATING
-                chip.recal_tenant = worst.tenant_id
-                chip.recal_ticks_left = cfg.recal_latency
+                self._start_recal(chip, worst)
                 scheduled += 1
-                self.events.append(dict(tick=self.tick_count,
-                                        event="recal_start",
-                                        chip=chip.chip_id,
-                                        tenant=worst.tenant_id))
+
+    def _start_recal(self, chip: Chip, tenant: Tenant,
+                     proactive: bool = False) -> None:
+        """Commit one repair window: the chip leaves the routable pool
+        for ``cfg.recal_latency`` ticks, after which ``_finish_recal``
+        re-tunes ``tenant`` (plus up to ``repair_batch − 1`` other
+        alarmed co-tenants)."""
+        chip.status = RECALIBRATING
+        chip.recal_tenant = tenant.tenant_id
+        chip.recal_proactive = proactive
+        chip.recal_ticks_left = self.cfg.recal_latency
+        ev = dict(tick=self.tick_count, event="recal_start",
+                  chip=chip.chip_id, tenant=tenant.tenant_id)
+        if proactive:
+            ev["proactive"] = True
+        self.events.append(ev)
+
+    def inject_outage(self, chip_id: int, ticks: int) -> None:
+        """Fault injection (benchmark/chaos use): take one chip off the
+        network for ``ticks`` ticks — unroutable, unprobeable, repairs
+        stalled; drift keeps walking underneath."""
+        chip = next(c for c in self.chips if c.chip_id == chip_id)
+        chip.offline_ticks_left = max(chip.offline_ticks_left, int(ticks))
+        self.events.append(dict(tick=self.tick_count, event="outage",
+                                chip=chip_id, ticks=int(ticks)))
 
     def _score_probe(self, chip: Chip, x: jax.Array, y_hat) -> None:
         """Fold one resolved probe response into tenant health: the
@@ -484,7 +635,11 @@ class FleetRouter:
             x, y_hat, [(t.block_range, t.w_blocks) for t in chip.tenants])
         for ten, est in zip(chip.tenants, ests):
             was_alarmed = ten.health.alarmed
-            ten.health = update_health(ten.health, float(est), cfg.monitor)
+            # dt feeds the EWMA degradation-rate track only — alarm
+            # decisions are bit-identical to the dt-less signature
+            ten.health = update_health(ten.health, float(est), cfg.monitor,
+                                       dt=self.tick_count
+                                       - ten.last_probe_tick)
             ten.last_probe_tick = self.tick_count
             if ten.health.alarmed and not was_alarmed:
                 ten.alarms += 1
@@ -526,14 +681,18 @@ class FleetRouter:
                                          block_range=ten.block_range)
             ten.health = clear_health(ten.health, float(est), cfg.monitor)
             ten.last_probe_tick = self.tick_count
-            self.events.append(dict(
+            ev = dict(
                 tick=self.tick_count, event="recal_done", chip=chip.chip_id,
                 tenant=ten.tenant_id,
                 dist_before=float(res.dist_before),
                 dist_after=float(res.dist_after), zo_steps=res.zo_steps,
-                status=RECALIBRATING))
+                status=RECALIBRATING)
+            if chip.recal_proactive:
+                ev["proactive"] = True
+            self.events.append(ev)
         chip.status = HEALTHY if not chip.alarmed else DEGRADED
         chip.recal_tenant = None
+        chip.recal_proactive = False
         self.events[-1]["status"] = chip.status
 
     # -- reporting ----------------------------------------------------------
@@ -560,7 +719,7 @@ class FleetRouter:
             # nor a recal job's delta is monitor probing (incl. the PM
             # deployment readout)
             chips.append(dict(
-                chip=c.chip_id, status=c.status,
+                chip=c.chip_id, status=c.status, offline=c.offline,
                 served=c.served,
                 distance=max(t.health.distance for t in c.tenants),
                 alarms=c.alarms, recals=c.recals,

@@ -54,7 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.ptc import PTCParams, compose_weight, unblockize
-from .fleet import FleetRouter, RuntimeConfig, make_fleet
+from .fleet import RuntimeConfig, make_fleet, make_router
 
 __all__ = ["PTCLayerSpec", "record_ptc_layers", "HwServePlane"]
 
@@ -163,8 +163,15 @@ class HwServePlane:
             if s.group is not None:
                 self._groups.setdefault(s.group, []).append(s)
         chips = make_fleet(key, n_chips, [s.w for s in self.layers], cfg)
-        self.router = FleetRouter(chips, cfg, seed=seed,
+        # factory seam: cfg.autopilot selects the forecast-driven
+        # AutopilotRouter; with it unset this IS the historical
+        # FleetRouter, bit-identical
+        self.router = make_router(chips, cfg, seed=seed,
                                   recal_enabled=recal_enabled)
+        if cfg.router_policy == "accuracy_aware":
+            from .autopilot import logit_sensitivity
+            self.router.set_sensitivity(
+                logit_sensitivity([s.w for s in self.layers]))
         # deployment-time shadow: the realized transfer of the reference
         # chip, read back through the observability-legal surface — one
         # commanded-Σ read plus ONE batch frame of per-tenant basis
@@ -200,6 +207,13 @@ class HwServePlane:
         grid = wb.reshape(p, q, k, k)
         dense = grid.transpose(0, 2, 1, 3).reshape(p * k, q * k)
         return np.asarray(dense[:spec.m, :spec.n], np.float32)
+
+    def observe_load(self, load: float) -> None:
+        """Forward the serving gateway's occupancy signal (active slots
+        plus queue depth, over slot capacity) to the router's load
+        forecast — the autopilot schedules proactive maintenance into
+        the troughs this traces out; the reactive router ignores it."""
+        self.router.observe_load(load)
 
     # -- decode-loop surface -------------------------------------------------
 

@@ -58,6 +58,9 @@ class MonitorConfig(NamedTuple):
     alarm_threshold: float = 0.05  # d̂ above this (repeatedly) raises alarm
     clear_threshold: float = 0.02  # recal must restore d̂ below this
     consecutive: int = 2         # strikes before the alarm fires
+    rate_alpha: float = 0.5      # EWMA weight for the degradation-rate track
+    #                              (trailing field: configs built positionally
+    #                              before this knob existed still parse)
 
 
 @dataclasses.dataclass
@@ -68,6 +71,11 @@ class HealthState:
     strikes: int = 0             # consecutive probes above alarm_threshold
     alarmed: bool = False
     probes: int = 0              # health checks performed
+    rate: float = 0.0            # EWMA of Δd̂/Δt between probes — the
+    #                              degradation-rate signal the autopilot's
+    #                              repair priority queue and crossing
+    #                              forecast consume; 0 until two probes
+    #                              have landed (or dt was never supplied)
 
 
 def aggregate_distance(w_hat: jax.Array, w_blocks: jax.Array) -> jax.Array:
@@ -170,21 +178,35 @@ def probe_identity_distance(key: jax.Array, driver,
 
 
 def update_health(h: HealthState, estimate: float,
-                  cfg: MonitorConfig) -> HealthState:
-    """Fold one probe estimate into the alarm state (hysteretic)."""
+                  cfg: MonitorConfig, dt: float = 0.0) -> HealthState:
+    """Fold one probe estimate into the alarm state (hysteretic).
+
+    ``dt`` is the virtual time since the previous probe of this tenant;
+    when positive, the observed growth ``(d̂ − d̂_prev)/dt`` folds into
+    the EWMA degradation-rate track (``cfg.rate_alpha``).  Callers that
+    omit it (the historical signature) leave the rate untouched, so the
+    alarm decision — threshold, strikes, hysteresis — is bit-identical
+    with or without rate tracking."""
     est = float(estimate)
     strikes = h.strikes + 1 if est > cfg.alarm_threshold else 0
     alarmed = h.alarmed or strikes >= cfg.consecutive
+    rate = h.rate
+    if dt > 0:
+        obs = (est - h.distance) / float(dt)
+        a = cfg.rate_alpha
+        rate = obs if h.probes == 0 else (1.0 - a) * h.rate + a * obs
     return HealthState(distance=est, strikes=strikes, alarmed=alarmed,
-                       probes=h.probes + 1)
+                       probes=h.probes + 1, rate=rate)
 
 
 def clear_health(h: HealthState, estimate: float,
                  cfg: MonitorConfig) -> HealthState:
     """Post-recalibration check: clear the alarm only below the lower
-    hysteresis threshold; otherwise the alarm stays raised."""
+    hysteresis threshold; otherwise the alarm stays raised.  The
+    degradation-rate track resets — the repair re-anchored the phases,
+    so pre-repair growth says nothing about the fresh state."""
     est = float(estimate)
     ok = est < cfg.clear_threshold
     return HealthState(distance=est, strikes=0 if ok else h.strikes,
                        alarmed=not ok if h.alarmed else False,
-                       probes=h.probes + 1)
+                       probes=h.probes + 1, rate=0.0)

@@ -78,8 +78,13 @@ class RecalConfig(NamedTuple):
     # -- budget autotuning (drift_recovery knee heuristic) -------------------
     auto_budget: bool = False    # derive the step budget from d̂ at alarm
     auto_target: float = 0.02    # the recovery target (clear threshold)
-    auto_min: int = 80           # floor: warm starts need a minimum sweep
-    auto_coeff: float = 6.0     # knee slope, in units of 2T per log₂ excess
+    # knee-calibrated at the demo geometry (dim=18, k=6, σ=0.015,
+    # target 0.02): recovery from d̂∈[0.03, 0.14] knees at 16–96 steps
+    # (≈1.0 sweeps of 2T per log₂ excess); 1.5 keeps ~1.5-2x headroom
+    # above the measured knee while budgeting 2-3x below the old 400-step
+    # cap for typical alarm-depth excursions
+    auto_min: int = 64           # floor: one compile quantum of sweep
+    auto_coeff: float = 1.5      # knee slope, in units of 2T per log₂ excess
     auto_quantum: int = 64       # round autotuned budgets UP to a multiple
     #                              of this: the hw jobs layer compiles one
     #                              solver per (geometry, ZO budget)

@@ -269,13 +269,21 @@ class ServingGateway:
                     if next_arrival >= len(todo):
                         break                      # drained
                     # open-loop gap: virtual time still passes (drift
-                    # walks, probes/repairs run) while no one is here
+                    # walks, probes/repairs run) while no one is here —
+                    # and the autopilot sees the trough (zero occupancy)
                     if self.hw is not None:
+                        self.hw.observe_load(0.0)
                         self.hw.router.tick()
                     self.step_count += 1
                     continue
 
                 act = np.asarray([r is not None for r in sched.running])
+                if self.hw is not None:
+                    # occupancy signal for the autopilot's load forecast:
+                    # active slots plus queued requests, over capacity
+                    # (>1 = over-subscribed)
+                    self.hw.observe_load(
+                        (int(act.sum()) + len(sched.pending)) / b)
                 pre = act & (slot_pos < plen)
                 dec = act & ~pre
                 # tokens each slot ingests this step (idle slots: none)

@@ -143,6 +143,8 @@ def main(argv=None):
     ap.add_argument("--hw-shadow", action="store_true")
     ap.add_argument("--deploy-zo", action="store_true")
     ap.add_argument("--no-recal", action="store_true")
+    from ..launch.serve import add_autopilot_args
+    add_autopilot_args(ap)
     args = ap.parse_args(argv)
 
     rep = run(args)
@@ -169,6 +171,12 @@ def main(argv=None):
               f"({hw.get('frames_per_step', 0.0):.1f}/step), "
               f"{hw.get('hw_calls', 0)} hw matmuls, "
               f"{alarms} alarms, {recals} recals")
+        ap_rep = fleet.get("autopilot")
+        if ap_rep is not None:
+            print(f"  autopilot: {ap_rep['proactive_recals']} proactive "
+                  f"recals, deferred {ap_rep['deferred_trough']} (load) + "
+                  f"{ap_rep['deferred_budget']} (budget), load forecast "
+                  f"{ap_rep['load_forecast']:.2f}")
     return 0
 
 

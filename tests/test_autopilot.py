@@ -1,0 +1,283 @@
+"""Forecast-driven autopilot: crossing prediction, priority queue,
+proactive scheduling, budget envelope, and policy equivalence.
+
+Scheduler-level tests drive the real fleet machinery (twin drivers)
+through the ``PhotonicDriver`` boundary; pure-function properties
+(``predicted_crossing``, ``LoadForecast``) need no hardware at all.
+"""
+
+import dataclasses
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.hw.drift import DriftConfig
+from repro.runtime.autopilot import (AutopilotConfig, AutopilotRouter,
+                                     LoadForecast, logit_sensitivity,
+                                     predicted_crossing)
+from repro.runtime.fleet import (RECALIBRATING, RuntimeConfig, make_fleet,
+                                 make_router)
+from repro.runtime.monitor import MonitorConfig
+from repro.runtime.recalibrate import RecalConfig
+from repro.core.noise import DEFAULT_NOISE
+
+K = 4
+DIM = 8
+DRIFT = DriftConfig(sigma_phase=0.03, theta=0.01)
+
+
+def _cfg(**kw):
+    defaults = dict(
+        k=K, noise=DEFAULT_NOISE.post_ic(), drift=DRIFT,
+        monitor=MonitorConfig(n_probes=8, alarm_threshold=0.05,
+                              clear_threshold=0.03, consecutive=2),
+        recal=RecalConfig(zo_steps=120, delta0=0.05),
+        probe_every=5, recal_latency=2, max_concurrent_recals=1)
+    defaults.update(kw)
+    return RuntimeConfig(**defaults)
+
+
+def _weights(n=2, seed=0):
+    rng = np.random.default_rng(seed)
+    return [np.asarray(rng.standard_normal((DIM, DIM)) / np.sqrt(DIM),
+                       np.float32) for _ in range(n)]
+
+
+def _autopilot_router(ap=None, seed=3, **cfg_kw):
+    cfg = _cfg(autopilot=ap if ap is not None else AutopilotConfig(),
+               **cfg_kw)
+    chips = make_fleet(jax.random.PRNGKey(0), 2, _weights(), cfg)
+    router = make_router(chips, cfg, seed=seed)
+    assert isinstance(router, AutopilotRouter)
+    return router, chips
+
+
+# ---------------------------------------------------------------------------
+# predicted_crossing: the OU inversion
+# ---------------------------------------------------------------------------
+
+
+def test_crossing_zero_when_already_past_threshold():
+    assert predicted_crossing(0.08, 0.01, 0.05, DRIFT) == 0.0
+    assert predicted_crossing(0.05, 0.01, 0.05, DRIFT) == 0.0
+
+
+def test_crossing_inf_without_measured_growth():
+    assert predicted_crossing(0.01, 0.0, 0.05, DRIFT) == math.inf
+    assert predicted_crossing(0.01, -0.002, 0.05, DRIFT) == math.inf
+
+
+def test_crossing_inf_when_saturating_inside_tolerance():
+    # d_inf = d + rate/2θ must exceed the threshold for a crossing:
+    # rate small enough that drift plateaus below the alarm never fires
+    rate = (0.05 - 0.02) * 2 * DRIFT.theta * 0.9   # d_inf = 0.047 < 0.05
+    assert predicted_crossing(0.02, rate, 0.05, DRIFT) == math.inf
+
+
+def test_crossing_monotone_in_rate_and_distance():
+    crossings = [predicted_crossing(0.02, r, 0.05, DRIFT)
+                 for r in (0.002, 0.004, 0.008, 0.016)]
+    assert all(a > b for a, b in zip(crossings, crossings[1:]))
+    crossings = [predicted_crossing(d, 0.004, 0.05, DRIFT)
+                 for d in (0.01, 0.02, 0.03, 0.04)]
+    assert all(a > b for a, b in zip(crossings, crossings[1:]))
+
+
+def test_crossing_reduces_to_linear_extrapolation_for_fast_rates():
+    # rate >> (thr−d)·2θ: the OU curvature is negligible over the gap,
+    # so Δ* → (threshold − d̂)/rate
+    d, thr, rate = 0.02, 0.05, 0.5
+    assert predicted_crossing(d, rate, thr, DRIFT) == \
+        pytest.approx((thr - d) / rate, rel=0.05)
+
+
+# ---------------------------------------------------------------------------
+# LoadForecast
+# ---------------------------------------------------------------------------
+
+
+def test_cold_forecast_is_pessimistic():
+    f = LoadForecast(period=10)
+    assert f.forecast(0) == 1.0   # ignorance must never read as a trough
+
+
+def test_diurnal_bins_learn_the_phase_profile():
+    f = LoadForecast(period=4, alpha=0.5)
+    profile = [0.9, 0.6, 0.2, 0.5]
+    for tick in range(40):
+        f.observe(profile[tick % 4], tick)
+    for phase, want in enumerate(profile):
+        assert abs(f.forecast(100 + phase) - want) < 0.05
+    # phases never observed fall back to the global EWMA, not 1.0
+    g = LoadForecast(period=0, alpha=0.5)
+    g.observe(0.3, 0)
+    assert g.forecast(7) == 0.3
+
+
+# ---------------------------------------------------------------------------
+# the priority queue
+# ---------------------------------------------------------------------------
+
+
+def test_repair_queue_reactive_first_then_fastest_degrading():
+    router, chips = _autopilot_router(AutopilotConfig(horizon=1000))
+    t00, t01 = chips[0].tenants
+    t10, _ = chips[1].tenants
+    # chip0/tenant0: alarmed, slow; chip0/tenant1: alarmed, fast;
+    # chip1/tenant0: not alarmed but degrading inside the horizon
+    t00.health = dataclasses.replace(t00.health, alarmed=True, rate=0.001)
+    t01.health = dataclasses.replace(t01.health, alarmed=True, rate=0.01)
+    t10.health = dataclasses.replace(t10.health, distance=0.03, rate=0.01)
+    pending = [(c, 0, None, None) for c in chips]
+    queue = router._repair_queue(pending)
+    kinds = [(key[0], t.tenant_id, c.chip_id) for key, c, t in queue]
+    # both reactive entries precede the proactive one; within the
+    # reactive class the faster-degrading tenant wins
+    assert kinds[0] == (0, 1, 0)
+    assert kinds[1] == (0, 0, 0)
+    assert kinds[2][0] == 1 and kinds[2][2] == 1
+
+
+def test_repair_queue_is_monotone_in_degradation_rate():
+    router, chips = _autopilot_router(AutopilotConfig(horizon=1000))
+    rates = [0.003, 0.012, 0.007, 0.001]
+    tenants = [t for c in chips for t in c.tenants]
+    for t, r in zip(tenants, rates):
+        t.health = dataclasses.replace(t.health, alarmed=True, rate=r)
+    pending = [(c, 0, None, None) for c in chips]
+    got = [t.health.rate for _, _, t in router._repair_queue(pending)]
+    assert got == sorted(rates, reverse=True)
+
+
+def test_queue_skips_offline_and_recalibrating_chips():
+    router, chips = _autopilot_router(AutopilotConfig(horizon=1000))
+    for c in chips:
+        for t in c.tenants:
+            t.health = dataclasses.replace(t.health, alarmed=True,
+                                           rate=0.01)
+    chips[0].status = RECALIBRATING
+    chips[1].offline_ticks_left = 3
+    pending = [(c, 0, None, None) for c in chips]
+    assert router._repair_queue(pending) == []
+
+
+# ---------------------------------------------------------------------------
+# proactive scheduling
+# ---------------------------------------------------------------------------
+
+
+def _drive(router, chips, ticks):
+    for _ in range(ticks):
+        router.observe_load(0.0)   # permanent trough
+        router.tick()
+
+
+def test_proactive_recal_fires_before_predicted_crossing():
+    """With a generous horizon and an always-trough forecast, the
+    autopilot repairs a degrading tenant before its alarm: proactive
+    recals happen, reactive alarms do not."""
+    router, chips = _autopilot_router(
+        AutopilotConfig(horizon=40, trough_load=0.5),
+        drift=DriftConfig(sigma_phase=0.02, theta=0.01))
+    _drive(router, chips, 120)
+    rep = router.report()
+    assert router.proactive_recals > 0
+    assert sum(c["alarms"] for c in rep["chips"]) == 0
+    # every recal event carries the proactive marker
+    starts = [e for e in router.events if e["event"] == "recal_start"]
+    assert starts and all(e.get("proactive") for e in starts)
+
+
+def test_zero_budget_blocks_proactive_but_not_reactive():
+    router, chips = _autopilot_router(
+        AutopilotConfig(horizon=40, trough_load=0.5, budget_calls=0.0),
+        drift=DriftConfig(sigma_phase=0.02, theta=0.01))
+    _drive(router, chips, 120)
+    assert router.proactive_recals == 0
+    assert router.deferred_budget > 0
+    # alarms must still earn repairs: the envelope never gates reactive
+    rep = router.report()
+    if sum(c["alarms"] for c in rep["chips"]):
+        assert sum(c["recals"] for c in rep["chips"]) > 0
+
+
+def test_budget_meters_proactive_spend_only():
+    router, chips = _autopilot_router(
+        AutopilotConfig(horizon=40, trough_load=0.5,
+                        budget_window=10 ** 6),
+        drift=DriftConfig(sigma_phase=0.02, theta=0.01))
+    _drive(router, chips, 120)
+    total = sum(c.recal_calls for c in chips)
+    n_pro = sum(1 for e in router.events
+                if e["event"] == "recal_start" and e.get("proactive"))
+    n_all = sum(1 for e in router.events if e["event"] == "recal_start")
+    assert router.proactive_calls <= total + 1e-9
+    if n_pro == n_all:
+        assert router.proactive_calls == pytest.approx(total, rel=1e-9)
+
+
+def test_urgent_crossing_overrides_the_trough_gate():
+    """A tenant whose crossing is inside the loop's reaction time is
+    repaired even at forecast peak load — waiting for the trough would
+    lose the race to the alarm."""
+    router, chips = _autopilot_router(
+        AutopilotConfig(horizon=40, trough_load=0.05),
+        drift=DriftConfig(sigma_phase=0.02, theta=0.01))
+    for _ in range(120):
+        router.observe_load(1.0)   # permanent peak: trough gate never opens
+        router.tick()
+    # proactive work still happened — only via the urgency override —
+    # and non-urgent candidates were deferred for the trough
+    assert router.proactive_recals > 0 or router.deferred_trough > 0
+
+
+# ---------------------------------------------------------------------------
+# policy equivalence and sensitivity
+# ---------------------------------------------------------------------------
+
+
+def test_accuracy_aware_matches_drift_aware_at_sigma_zero():
+    """With drift off the device never moves, so every tenant's
+    forecast excess over its deployment floor is 0 and the
+    accuracy_aware key degenerates to the drift_aware one: both
+    policies dispatch identically.  (Probes are held off — a σ=0 probe
+    still carries sampling noise, which is re-measurement jitter, not
+    drift excess.)"""
+    routers = []
+    for policy in ("drift_aware", "accuracy_aware"):
+        cfg = _cfg(drift=DriftConfig(sigma_phase=0.0, theta=0.01),
+                   router_policy=policy, probe_every=10 ** 6)
+        chips = make_fleet(jax.random.PRNGKey(0), 3, _weights(), cfg)
+        routers.append((make_router(chips, cfg, seed=5), chips))
+    rng = np.random.default_rng(11)
+    xs = rng.standard_normal((20, 4, DIM)).astype(np.float32)
+    for i, x in enumerate(xs):
+        picked = []
+        for router, chips in routers:
+            router.tick()
+            _, chip_id = router.serve(x, tenant=i % 2)
+            picked.append(chip_id)
+        assert picked[0] == picked[1]
+
+
+def test_logit_sensitivity_ranks_by_frobenius_energy():
+    rng = np.random.default_rng(0)
+    base = rng.standard_normal((DIM, DIM)).astype(np.float32)
+    ws = [0.5 * base, base, 2.0 * base]
+    sens = logit_sensitivity(ws)
+    assert sens[0] < sens[1] < sens[2]
+    assert abs(sum(sens) / len(sens) - 1.0) < 1e-6
+
+
+def test_outage_makes_chip_unroutable_until_it_lifts():
+    router, chips = _autopilot_router(AutopilotConfig())
+    router.inject_outage(chips[0].chip_id, 3)
+    assert chips[0].offline and not chips[0].routable
+    x = np.zeros((2, DIM), np.float32)
+    for _ in range(3):
+        _, chip_id = router.serve(x, tenant=0)
+        assert chip_id == chips[1].chip_id
+        router.tick()
+    assert not chips[0].offline

@@ -1,0 +1,160 @@
+"""Docs gate: relative-link/anchor checking + quickstart execution.
+
+Pure stdlib, run from the repo root::
+
+    python tools/check_docs.py              # link + anchor check
+    python tools/check_docs.py --run-smoke  # also execute smoke blocks
+
+Checks every markdown link in README.md and docs/*.md whose target is
+not an absolute URL: the target file must exist (relative to the file
+containing the link), and a ``#fragment`` must name a real anchor in
+the target — either an explicit ``<a id="...">`` or a heading's
+GitHub-style slug.  Links inside fenced code blocks are ignored.
+
+``--run-smoke`` additionally extracts each fenced code block in
+``docs/benchmarks.md`` that is immediately preceded by a
+``<!-- smoke -->`` marker and executes it with ``bash -e`` from the
+repo root (``PYTHONPATH=src`` preset) — the documented quickstart
+commands are CI-executed, so they cannot rot.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_LINK = re.compile(r"(?<!!)\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE = re.compile(r"^(```|~~~)")
+_EXPLICIT_ANCHOR = re.compile(r"<a\s+id=[\"']([^\"']+)[\"']")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$")
+_SMOKE = re.compile(r"<!--\s*smoke\s*-->")
+
+
+def _doc_files() -> list[str]:
+    files = [os.path.join(REPO, "README.md")]
+    docs = os.path.join(REPO, "docs")
+    if os.path.isdir(docs):
+        files += sorted(os.path.join(docs, n) for n in os.listdir(docs)
+                        if n.endswith(".md"))
+    return [f for f in files if os.path.exists(f)]
+
+
+def _strip_fences(text: str) -> str:
+    """Blank out fenced code blocks (links inside them are examples)."""
+    out, in_fence = [], False
+    for line in text.splitlines():
+        if _FENCE.match(line.strip()):
+            in_fence = not in_fence
+            out.append("")
+            continue
+        out.append("" if in_fence else line)
+    return "\n".join(out)
+
+
+def _slugify(heading: str) -> str:
+    """GitHub's anchor slug: strip markup, lowercase, spaces → dashes,
+    drop everything that is not alphanumeric/dash/underscore."""
+    h = re.sub(r"[`*_]", "", heading.strip()).lower()
+    h = h.replace(" ", "-")
+    return re.sub(r"[^0-9a-zÀ-￿_-]", "", h)
+
+
+def _anchors(path: str) -> set[str]:
+    with open(path, encoding="utf-8") as fh:
+        raw = fh.read()
+    anchors = set(_EXPLICIT_ANCHOR.findall(raw))
+    for line in _strip_fences(raw).splitlines():
+        m = _HEADING.match(line)
+        if m:
+            anchors.add(_slugify(m.group(1)))
+    return anchors
+
+
+def check_links() -> list[str]:
+    errors = []
+    for path in _doc_files():
+        rel = os.path.relpath(path, REPO)
+        with open(path, encoding="utf-8") as fh:
+            text = _strip_fences(fh.read())
+        for target in _LINK.findall(text):
+            if re.match(r"^[a-z][a-z0-9+.-]*:", target):   # http:, mailto:
+                continue
+            base, _, frag = target.partition("#")
+            if base:
+                dest = os.path.normpath(
+                    os.path.join(os.path.dirname(path), base))
+                if not os.path.exists(dest):
+                    errors.append(f"{rel}: broken link -> {target}")
+                    continue
+            else:
+                dest = path                                 # same-file #frag
+            if frag and dest.endswith(".md"):
+                if frag.lower() not in _anchors(dest):
+                    errors.append(f"{rel}: missing anchor -> {target}")
+    return errors
+
+
+def smoke_blocks(path: str) -> list[str]:
+    """Fenced blocks immediately preceded by a ``<!-- smoke -->`` line."""
+    with open(path, encoding="utf-8") as fh:
+        lines = fh.read().splitlines()
+    blocks, i = [], 0
+    while i < len(lines):
+        if _SMOKE.search(lines[i]):
+            j = i + 1
+            while j < len(lines) and not lines[j].strip():
+                j += 1
+            if j < len(lines) and _FENCE.match(lines[j].strip()):
+                body, j = [], j + 1
+                while j < len(lines) and not _FENCE.match(lines[j].strip()):
+                    body.append(lines[j])
+                    j += 1
+                blocks.append("\n".join(body))
+                i = j
+        i += 1
+    return blocks
+
+
+def run_smoke() -> list[str]:
+    path = os.path.join(REPO, "docs", "benchmarks.md")
+    blocks = smoke_blocks(path)
+    if not blocks:
+        return [f"{os.path.relpath(path, REPO)}: no smoke-tagged blocks "
+                f"found — the quickstart stopped being executed"]
+    errors = []
+    env = dict(os.environ, PYTHONPATH="src")
+    for n, block in enumerate(blocks, 1):
+        print(f"--- smoke block {n}/{len(blocks)} ---")
+        print(block)
+        proc = subprocess.run(["bash", "-e", "-c", block], cwd=REPO,
+                              env=env)
+        if proc.returncode != 0:
+            errors.append(f"docs/benchmarks.md smoke block {n} exited "
+                          f"{proc.returncode}")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--run-smoke", action="store_true",
+                    help="execute the smoke-tagged fenced blocks in "
+                         "docs/benchmarks.md")
+    args = ap.parse_args(argv)
+
+    errors = check_links()
+    n_files = len(_doc_files())
+    if args.run_smoke:
+        errors += run_smoke()
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    print(f"check_docs: {n_files} file(s), {len(errors)} error(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
